@@ -1,0 +1,52 @@
+"""Calibration harness: all workloads x schemes vs paper targets.
+
+Not part of the benchmark suite proper — used during development to tune
+the trace generators, and kept for reproducibility of the calibration.
+Run: PYTHONPATH=src python -m benchmarks._calibrate
+"""
+import time
+
+from repro.core import PCSConfig, Scheme, WORKLOADS, make_trace, simulate
+
+# (PB speedup %, RF speedup %, RF hit %, RF coalesce %) from paper Figs 5/7
+PAPER = {
+    "radiosity":   (22, 40, 51, 50),
+    "lu_non":      (22, 40, 20, 20),
+    "lu_cont":     (12, 18, 20, 20),
+    "raytrace":    (10, 14, 20, 20),
+    "fft":         (3, -2, 20, 2.8),
+    "cholesky":    (-3, -13, 1, 1),
+    "volrend_npl": (0, -2, 1, 1),
+}
+
+
+def main() -> None:
+    rows = []
+    for name in WORKLOADS:
+        t0 = time.time()
+        tr = make_trace(name)
+        res = {s: simulate(tr, PCSConfig(scheme=s))
+               for s in (Scheme.NOPB, Scheme.PB, Scheme.PB_RF)}
+        nopb, pb, rf = res[Scheme.NOPB], res[Scheme.PB], res[Scheme.PB_RF]
+        sp_pb = 100 * (nopb.runtime_ns / pb.runtime_ns - 1)
+        sp_rf = 100 * (nopb.runtime_ns / rf.runtime_ns - 1)
+        plat_pb = 100 * pb.persist_lat_ns / nopb.persist_lat_ns
+        plat_rf = 100 * rf.persist_lat_ns / nopb.persist_lat_ns
+        rlat_pb = 100 * pb.read_lat_ns / nopb.read_lat_ns
+        rlat_rf = 100 * rf.read_lat_ns / nopb.read_lat_ns
+        tgt = PAPER[name]
+        rows.append(
+            f"{name:12s} PB {sp_pb:+6.1f}% (paper {tgt[0]:+3d}%)  "
+            f"RF {sp_rf:+6.1f}% (paper {tgt[1]:+3d}%)  "
+            f"hit {100*rf.read_hit_rate:5.1f}% (paper {tgt[2]:4.1f}%)  "
+            f"coal {100*rf.coalesce_rate:5.1f}% (paper {tgt[3]:4.1f}%)  "
+            f"plat {plat_pb:3.0f}/{plat_rf:3.0f}%  rlat {rlat_pb:3.0f}/{rlat_rf:3.0f}%  "
+            f"[{time.time()-t0:5.1f}s ops={tr.total_ops}]")
+        print(rows[-1], flush=True)
+    print("\nsummary:")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

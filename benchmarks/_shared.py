@@ -1,0 +1,44 @@
+"""Shared simulation cache for the per-figure benchmarks.
+
+Every figure consumes the same (workload x scheme) grid; this module
+runs each cell once per process and caches the SimResult.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Dict, Tuple
+
+from repro.core import PCSConfig, Scheme, WORKLOADS, make_trace, simulate
+
+# full paper budget by default; BENCH_QUICK=1 runs a reduced grid fast
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+BUDGET = 8_000 if QUICK else 100_000
+
+_traces: Dict[str, object] = {}
+_results: Dict[Tuple[str, Scheme, int], object] = {}
+
+
+def trace(name: str):
+    if name not in _traces:
+        _traces[name] = make_trace(name, persist_budget=BUDGET)
+    return _traces[name]
+
+
+def result(name: str, scheme: Scheme, n_pbe: int = 16):
+    key = (name, scheme, n_pbe)
+    if key not in _results:
+        _results[key] = simulate(trace(name),
+                                 PCSConfig(scheme=scheme, n_pbe=n_pbe))
+    return _results[key]
+
+
+def workloads():
+    return list(WORKLOADS)
+
+
+def emit(rows, header=("name", "value", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

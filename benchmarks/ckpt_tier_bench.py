@@ -1,0 +1,71 @@
+"""Layer-B benchmark: the PCS idea at cluster scale (checkpoint tiers).
+
+Measures, per scheme, the persist latency seen by the training loop
+(the "fence" the step blocks on) and the restore path, with a slow
+durable store standing in for an object store.  The cluster-scale
+analogue of Figs 5/6: ack-at-buffer cuts persist latency by ~the
+store/buffer latency ratio; RF serves restores from the buffer.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.persistence import (DurableStore, HostBufferTier,
+                               PCSCheckpointManager, PersistScheme)
+
+from benchmarks._shared import emit
+
+SHARD_KB = 256
+N_SHARDS = 24
+N_VERSIONS = 4
+STORE_DELAY_S = 0.01
+
+
+def _run(scheme: PersistScheme):
+    with tempfile.TemporaryDirectory() as d:
+        buf = HostBufferTier(capacity_bytes=512 << 20)
+        store = DurableStore(d + "/s", write_delay_s=STORE_DELAY_S)
+        mgr = PCSCheckpointManager(buf, store, scheme=scheme)
+        payload = np.zeros(SHARD_KB * 256, np.float32)  # SHARD_KB KiB
+        t_persist = 0.0
+        for v in range(1, N_VERSIONS + 1):
+            t0 = time.time()
+            for i in range(N_SHARDS):
+                mgr.persist(f"shard{i}", v, payload)
+            t_persist += time.time() - t0
+        # restore immediately (RF window)
+        t0 = time.time()
+        fwd = 0
+        for i in range(N_SHARDS):
+            mgr.restore(f"shard{i}")
+        t_restore = time.time() - t0
+        fwd = mgr.stats["restore_forwarded"]
+        coal = mgr.stats["coalesces"]
+        mgr.close()
+        per = 1e6 * t_persist / (N_SHARDS * N_VERSIONS)
+        return per, 1e6 * t_restore / N_SHARDS, fwd, coal
+
+
+def run() -> list:
+    rows = []
+    base = None
+    for scheme in (PersistScheme.NOPB, PersistScheme.PB, PersistScheme.PB_RF):
+        per, res, fwd, coal = _run(scheme)
+        if base is None:
+            base = per
+        rows.append((f"ckpt_{scheme.value}_persist_us", round(per, 1),
+                     f"norm={per / base:.2f}x"))
+        rows.append((f"ckpt_{scheme.value}_restore_us", round(res, 1),
+                     f"forwarded={fwd} coalesced={coal}"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

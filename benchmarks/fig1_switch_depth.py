@@ -1,0 +1,56 @@
+"""Fig 1: persist latency vs number of CXL switches to PM.
+
+Paper claim: persist latency grows steeply with chain depth for a
+volatile switch (~2.5x at one switch vs local PM) and is largely flat
+when persists complete at the first persistent switch.
+
+Latency (not throughput) measurement: a low-intensity FFT-like
+persist/read mix (1:1, one core, 2 us of compute between operations) so
+device queueing does not mask the path composition — the paper's Fig 1
+is likewise a latency figure, normalized to local PM.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Op, PCSConfig, Scheme, Trace, simulate
+
+from benchmarks._shared import emit
+
+
+def _probe_trace(n_ops: int = 2000, gap: float = 2000.0) -> Trace:
+    ops, addrs = [], []
+    for i in range(n_ops):
+        ops.append(int(Op.PERSIST))
+        addrs.append(i)                   # FFT: each line persisted once/stage
+        ops.append(int(Op.PM_READ))
+        addrs.append((1 << 20) + i)       # butterfly partner read
+    return Trace(ops=np.array([ops], np.int32),
+                 addrs=np.array([addrs], np.int32),
+                 gaps=np.full((1, len(ops)), gap, np.float32),
+                 lengths=np.array([len(ops)], np.int32), name="fig1_probe")
+
+
+def run(depths=(0, 1, 2, 3)) -> list:
+    tr = _probe_trace()
+    rows = []
+    base = None
+    for n_sw in depths:
+        nopb = simulate(tr, PCSConfig(scheme=Scheme.NOPB, n_switches=n_sw))
+        if base is None:
+            base = nopb.persist_lat_ns
+        rows.append((f"fig1_nopb_n{n_sw}", round(nopb.persist_lat_ns, 1),
+                     f"norm={nopb.persist_lat_ns / base:.2f}x"))
+        if n_sw > 0:
+            pb = simulate(tr, PCSConfig(scheme=Scheme.PB, n_switches=n_sw))
+            rows.append((f"fig1_pb_n{n_sw}", round(pb.persist_lat_ns, 1),
+                         f"norm={pb.persist_lat_ns / base:.2f}x"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig 5: speedup of PB and PB_RF over NoPB per workload (+ the paper's
+headline 12% / 15% means)."""
+from __future__ import annotations
+
+from repro.core import Scheme
+
+from benchmarks._shared import emit, result, workloads
+
+PAPER_MEAN = {"pb": 12.0, "pb_rf": 15.0}
+
+
+def run() -> list:
+    rows = []
+    sp = {"pb": [], "pb_rf": []}
+    for name in workloads():
+        nopb = result(name, Scheme.NOPB)
+        for key, scheme in (("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF)):
+            r = result(name, scheme)
+            s = 100.0 * (nopb.runtime_ns / r.runtime_ns - 1.0)
+            sp[key].append(s)
+            rows.append((f"fig5_{key}_{name}", round(s, 1), "speedup_%"))
+    for key in ("pb", "pb_rf"):
+        mean = sum(sp[key]) / len(sp[key])
+        rows.append((f"fig5_{key}_mean", round(mean, 1),
+                     f"paper={PAPER_MEAN[key]}%"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Fig 6: persist and read latencies (from LLC) per scheme, normalized to
+NoPB.  Paper: PB cuts persist latency 43-56%; read latency rises 2.5-12%."""
+from __future__ import annotations
+
+from repro.core import Scheme
+
+from benchmarks._shared import emit, result, workloads
+
+
+def run() -> list:
+    rows = []
+    for name in workloads():
+        nopb = result(name, Scheme.NOPB)
+        for key, scheme in (("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF)):
+            r = result(name, scheme)
+            rows.append((f"fig6a_persist_{key}_{name}",
+                         round(100 * r.persist_lat_ns / nopb.persist_lat_ns, 1),
+                         "pct_of_nopb"))
+            rows.append((f"fig6b_read_{key}_{name}",
+                         round(100 * r.read_lat_ns / nopb.read_lat_ns, 1),
+                         "pct_of_nopb"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Fig 7: PB_RF read-hit rate and write-coalescing rate per workload.
+Paper: radiosity ~51% hit / ~50% coalesce; cholesky & volrend ~1%; FFT
+coalescing 2.8%; others ~20%."""
+from __future__ import annotations
+
+from repro.core import Scheme
+
+from benchmarks._shared import emit, result, workloads
+
+
+def run() -> list:
+    rows = []
+    for name in workloads():
+        r = result(name, Scheme.PB_RF)
+        rows.append((f"fig7a_hit_{name}", round(100 * r.read_hit_rate, 1),
+                     "pct"))
+        rows.append((f"fig7b_coalesce_{name}",
+                     round(100 * r.coalesce_rate, 1), "pct"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Fig 8: speedup vs PBE count for radiosity / cholesky / FFT.
+
+One vmap per (workload, scheme): the PBE count enters as traced tag/data
+latencies (CACTI trend) and a traced live-entry bound.
+"""
+from __future__ import annotations
+
+from repro.core import PCSConfig, Scheme, simulate, simulate_sweep
+
+from benchmarks._shared import emit, trace
+
+COUNTS = (8, 16, 32, 64, 128)
+NAMES = ("radiosity", "cholesky", "fft")
+
+
+def run() -> list:
+    rows = []
+    for name in NAMES:
+        tr = trace(name)
+        nopb = simulate(tr, PCSConfig(scheme=Scheme.NOPB))
+        for key, scheme in (("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF)):
+            cfgs = [PCSConfig(scheme=scheme, n_pbe=n) for n in COUNTS]
+            for n, r in zip(COUNTS, simulate_sweep(tr, cfgs)):
+                s = 100.0 * (nopb.runtime_ns / r.runtime_ns - 1.0)
+                rows.append((f"fig8_{key}_{name}_pbe{n}", round(s, 1),
+                             "speedup_%"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

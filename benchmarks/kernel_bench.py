@@ -1,0 +1,56 @@
+"""Kernel micro-bench: wall time of the jnp reference paths on CPU plus
+interpret-mode correctness deltas (Pallas timing is only meaningful on
+TPU; this records the oracle cost the kernels replace)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+from benchmarks._shared import emit
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return 1e6 * (time.time() - t0) / reps
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    q = jnp.asarray(rng.standard_normal((1, 4, 1024, 128)), jnp.float32)
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+    rows.append(("kernel_attn_ref_b1h4s1024d128", round(_time(f, q, q, q), 1),
+                 "us_per_call"))
+    x = jnp.asarray(rng.standard_normal((1, 1024, 8, 64)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (1, 1024, 8)), jnp.float32)
+    A = jnp.asarray(-np.ones(8), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((1, 1024, 128)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((1, 1024, 128)), jnp.float32)
+    g = jax.jit(lambda *a: ref.ssd_scan_ref(*a))
+    rows.append(("kernel_ssd_ref_s1024h8p64n128", round(_time(g, x, dt, A, B, C), 1),
+                 "us_per_call"))
+    req = jnp.asarray(rng.integers(0, 64, 4096), jnp.int32)
+    tat = jnp.asarray(rng.integers(0, 64, 64), jnp.int32)
+    st = jnp.asarray(rng.integers(0, 3, 64), jnp.int32)
+    h = jax.jit(lambda *a: ref.tat_lookup_ref(*a))
+    rows.append(("kernel_tat_ref_r4096n64", round(_time(h, req, tat, st), 1),
+                 "us_per_call"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Re-run the §Perf hillclimbed cells: baseline vs optimized layout.
+
+    PYTHONPATH=src python -m benchmarks.perf_cells          # ~10 min (compiles)
+
+Prints the roofline terms for each of the three chosen cells under the
+baseline layout and under the winning layout from EXPERIMENTS.md §Perf,
+so the before/after table is reproducible from source.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+CELLS = [
+    # (arch, shape, optimized FLAGS, microbatches)
+    ("deepseek-67b", "train_4k",
+     {"fsdp_same_dim": True, "batch_both": True}, 1),
+    ("jamba-1.5-large-398b", "train_4k", {}, 1),   # grouped dispatch is in-model
+    ("mixtral-8x7b", "prefill_32k", {}, 1),        # negative result: baseline
+]
+
+
+def main() -> None:
+    from repro.launch import sharding as sh
+    from repro.launch import dryrun as dr
+
+    print("name,t_compute_s,t_memory_s,t_collective_s,bottleneck")
+    for arch, shape, flags, mb in CELLS:
+        for label, f in (("baseline", {}), ("optimized", flags)):
+            saved = dict(sh.FLAGS)
+            sh.FLAGS.update(f)
+            dr.MICROBATCHES[0] = mb if label == "optimized" else 1
+            try:
+                r = dr.run_cell(arch, shape, False, verbose=False)
+                print(f"perf_{arch}_{shape}_{label},"
+                      f"{r['t_compute_s']:.3g},{r['t_memory_s']:.3g},"
+                      f"{r['t_collective_s']:.3g},{r['bottleneck']}",
+                      flush=True)
+            finally:
+                sh.FLAGS.clear()
+                sh.FLAGS.update(saved)
+                dr.MICROBATCHES[0] = 1
+
+
+if __name__ == "__main__":
+    main()

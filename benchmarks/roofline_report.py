@@ -1,0 +1,70 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run JSON output.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_single.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / chips
+
+
+def advice(row: dict) -> str:
+    b = row["bottleneck"]
+    if b == "collective":
+        ag = row["collectives"].get("all-gather", 0)
+        ar = row["collectives"].get("all-reduce", 0)
+        rs = row["collectives"].get("reduce-scatter", 0)
+        big = max([("all-gather", ag), ("all-reduce", ar),
+                   ("reduce-scatter", rs)], key=lambda kv: kv[1])[0]
+        return (f"dominated by {big}s — overlap weight gathers with compute "
+                f"or re-shard to cut resharding traffic")
+    if b == "memory":
+        return "HBM-bound — raise arithmetic intensity (fuse, larger blocks)"
+    return "compute-bound — already near the MXU roof; tune block shapes"
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.json"
+    rows = json.load(open(path))
+    print("| arch | shape | mesh | t_comp(s) | t_mem(s) | t_coll(s) | "
+          "bound | model/HLO flops | roofline frac | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            tag = "skip" if "skipped" in r["status"] else "FAIL"
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | "
+                  f"{tag} | - | - | {r['status'][:60]} |")
+            continue
+        mf = model_flops_per_device(r["arch"], r["shape"], r["chips"])
+        ratio = mf / max(r["flops_per_device"], 1)
+        tc, tm, tl = (r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        step = max(tc, tm, tl)
+        frac = (mf / PEAK_FLOPS) / step if step > 0 else 0.0
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tc:.3g} | "
+              f"{tm:.3g} | {tl:.3g} | {r['bottleneck']} | {ratio:.2f} | "
+              f"{frac:.1%} | {advice(r)} |")
+
+
+if __name__ == "__main__":
+    main()

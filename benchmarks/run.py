@@ -1,0 +1,28 @@
+"""Run every benchmark; print one ``name,value,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # full paper budget
+    BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import (ckpt_tier_bench, fig1_switch_depth, fig5_speedup,
+                        fig6_latency, fig7_rf_rates, fig8_pbe_sweep,
+                        kernel_bench)
+from benchmarks._shared import emit
+
+
+def main() -> None:
+    rows = []
+    for mod in (fig1_switch_depth, fig5_speedup, fig6_latency, fig7_rf_rates,
+                fig8_pbe_sweep, ckpt_tier_bench, kernel_bench):
+        t0 = time.time()
+        rows.extend(mod.run())
+        rows.append((f"_elapsed_{mod.__name__.split('.')[-1]}",
+                     round(time.time() - t0, 1), "seconds"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+# Tests and benches must see the real (single) CPU device; only the
+# dry-run module sets --xla_force_host_platform_device_count=512, and it
+# does so before any jax import inside its own process.
+import os
+
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""), (
+    "run pytest without the dry-run's XLA_FLAGS; smoke tests expect 1 device")

@@ -1,0 +1,37 @@
+"""Reproduce the paper's headline numbers programmatically.
+
+Runs the radiosity (best case) and cholesky (worst case) workloads under
+all three schemes and prints speedups, persist/read latencies and the RF
+hit/coalesce rates (Figs 5-7).
+
+    PYTHONPATH=src python examples/pcs_simulation.py [--quick]
+"""
+import argparse
+
+from repro.core import PCSConfig, Scheme, make_trace, simulate
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--workloads", nargs="+",
+                    default=["radiosity", "cholesky", "fft"])
+    args = ap.parse_args()
+    budget = 8_000 if args.quick else 100_000
+
+    for name in args.workloads:
+        tr = make_trace(name, persist_budget=budget)
+        res = {s: simulate(tr, PCSConfig(scheme=s))
+               for s in (Scheme.NOPB, Scheme.PB, Scheme.PB_RF)}
+        nopb, pb, rf = (res[s] for s in (Scheme.NOPB, Scheme.PB,
+                                         Scheme.PB_RF))
+        print(f"\n=== {name} ({tr.total_ops} ops) ===")
+        print(f"  speedup:   PB {100*(nopb.runtime_ns/pb.runtime_ns-1):+.1f}%"
+              f"   PB_RF {100*(nopb.runtime_ns/rf.runtime_ns-1):+.1f}%")
+        print(f"  persist:   NoPB {nopb.persist_lat_ns:.0f}ns -> "
+              f"PB {pb.persist_lat_ns:.0f}ns "
+              f"({100*pb.persist_lat_ns/nopb.persist_lat_ns:.0f}%)")
+        print(f"  read:      NoPB {nopb.read_lat_ns:.0f}ns -> "
+              f"PB {pb.read_lat_ns:.0f}ns "
+              f"({100*pb.read_lat_ns/nopb.read_lat_ns:.0f}%)")
+        print(f"  RF:        hit {100*rf.read_hit_rate:.1f}%  "
+              f"coalesce {100*rf.coalesce_rate:.1f}%")

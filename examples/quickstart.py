@@ -1,0 +1,17 @@
+"""Quickstart: train a reduced-config model with PCS-tier checkpointing.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import subprocess
+import sys
+import tempfile
+
+if __name__ == "__main__":
+    with tempfile.TemporaryDirectory() as d:
+        subprocess.run([
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", "smollm-135m", "--smoke",
+            "--steps", "20", "--batch", "4", "--seq", "64",
+            "--ckpt-every", "5", "--ckpt-dir", d,
+            "--scheme", "pb_rf",
+        ], check=True)

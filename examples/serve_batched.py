@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + greedy decode on a smoke config.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-1.3b]
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b")
+    args = ap.parse_args()
+    subprocess.run([
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", args.arch, "--smoke",
+        "--batch", "4", "--prompt-len", "32", "--gen", "16",
+    ], check=True)

@@ -1,0 +1,44 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` / ``ARCHS``.
+
+Each ``<id>.py`` module exports
+
+    config()        -> the full published configuration
+    smoke_config()  -> a reduced same-family configuration for CPU tests
+
+IDs use the dashed names of the assignment; module files use underscores.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+ARCHS: List[str] = [
+    "seamless-m4t-large-v2",
+    "gemma2-2b",
+    "deepseek-67b",
+    "smollm-135m",
+    "gemma3-12b",
+    "jamba-1.5-large-398b",
+    "phi3.5-moe-42b",
+    "mixtral-8x7b",
+    "mamba2-1.3b",
+    "paligemma-3b",
+]
+
+_ALIASES = {
+    "phi3.5-moe-42b-a6.6b": "phi3.5-moe-42b",
+    "jamba-1.5-large": "jamba-1.5-large-398b",
+}
+
+
+def _module(arch_id: str):
+    name = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch_id: str, *, smoke: bool = False):
+    arch_id = _ALIASES.get(arch_id, arch_id)
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCHS}")
+    mod = _module(arch_id)
+    return mod.smoke_config() if smoke else mod.config()

@@ -1,0 +1,21 @@
+"""PCS core: the paper's contribution (Persistent CXL Switch).
+
+Two coupled layers:
+  * ``semantics`` — the exact PB/PBC/PBCS state machine (correctness
+    oracle; also reused by the cluster persistence tier).
+  * ``simulator`` — the timed, jit/vmap-able queueing simulator that
+    replaces the paper's gem5 evaluation.
+"""
+from repro.core.params import (LatencyProfile, Op, PBEState, PCSConfig,
+                               Scheme)
+from repro.core.semantics import (Event, EventKind, PersistentBuffer,
+                                  PersistentMemory)
+from repro.core.simulator import SimResult, simulate, simulate_sweep
+from repro.core.traces import Trace, WORKLOADS, make_trace
+
+__all__ = [
+    "LatencyProfile", "Op", "PBEState", "PCSConfig", "Scheme",
+    "Event", "EventKind", "PersistentBuffer", "PersistentMemory",
+    "SimResult", "simulate", "simulate_sweep",
+    "Trace", "WORKLOADS", "make_trace",
+]

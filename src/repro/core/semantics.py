@@ -1,0 +1,343 @@
+"""Exact (untimed) semantics of the Persistent Buffer state machine.
+
+This module is the *correctness oracle* for the PCS design of Section V:
+it implements the PB/PBC/PBCS state machine verbatim — Empty/Dirty/Drain
+entry states, LRU victim selection among Dirty entries, the PB scheme's
+drain-immediately policy, the PB_RF threshold/preset drain policy, write
+coalescing, read forwarding, the write-ack fast path, and the crash /
+recovery procedure of Section V-D4.
+
+It is used by:
+  * property tests (tests/test_semantics.py, tests/test_recovery.py) that
+    check the paper's three correctness criteria under random schedules;
+  * the cluster-scale persistence tier (repro.persistence), which runs the
+    *same* state machine over checkpoint shards instead of cache lines;
+  * cross-validation of the timed JAX simulator (repro.core.simulator).
+
+The model is event-explicit: every externally visible action (ack to the
+CPU, drain packet to PM, read response and its source) is returned as an
+Event so tests can assert ordering properties.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.params import PBEState, PCSConfig, Scheme
+
+
+class EventKind(enum.Enum):
+    PERSIST_ACK = "persist_ack"        # switch acked a persist to the CPU
+    DRAIN_SENT = "drain_sent"          # PB emitted a write packet toward PM
+    DRAIN_ACKED = "drain_acked"        # PM confirmed a drain (entry freed)
+    READ_FROM_PB = "read_from_pb"      # read forwarded from the buffer
+    READ_FROM_PM = "read_from_pm"      # read served by the endpoint
+    COALESCED = "coalesced"            # write absorbed into a Dirty entry
+    STALLED = "stalled"                # PBC had to wait for an Empty entry
+
+
+@dataclasses.dataclass
+class Event:
+    kind: EventKind
+    addr: int
+    version: int
+    seq: int  # global monotone sequence number of the event
+
+
+@dataclasses.dataclass
+class PBEntry:
+    addr: int
+    version: int
+    data: object
+    state: PBEState
+    lru: int  # stamp of last use (higher = more recent)
+
+
+class PersistentMemory:
+    """The PM endpoint: a versioned store with in-order write application.
+
+    Enforces the paper's *write order* criterion at the device: a write
+    carrying an older version than the stored one must never overwrite a
+    newer one.  The device accepts writes and produces acks; delivery of
+    acks back to the switch is controlled by the caller (tests delay /
+    reorder them to probe the protocol).
+    """
+
+    def __init__(self) -> None:
+        self.store: Dict[int, Tuple[int, object]] = {}
+        self.writes_applied = 0
+
+    def write(self, addr: int, version: int, data: object) -> bool:
+        """Apply a write; returns False (and drops it) if it is stale."""
+        cur = self.store.get(addr)
+        if cur is not None and cur[0] > version:
+            return False  # stale drain: must not overwrite newer data
+        self.store[addr] = (version, data)
+        self.writes_applied += 1
+        return True
+
+    def read(self, addr: int) -> Optional[Tuple[int, object]]:
+        return self.store.get(addr)
+
+
+class PersistentBuffer:
+    """The PB + PBC + PBCS state machine (Section V), untimed.
+
+    Usage protocol (mirrors packet arrival order at the switch):
+        ack? = pb.persist(addr, data)    -> list of Events (incl. PERSIST_ACK)
+        pb.pm_ack(addr, version)         -> PM write-ack arrived at switch
+        src = pb.read(addr)              -> READ_FROM_PB / READ_FROM_PM event
+        pb.crash(); pb.recover()         -> Section V-D4
+
+    The NoPB scheme is represented by constructing with scheme=NOPB, in
+    which case persists bypass the buffer entirely.
+    """
+
+    def __init__(self, config: PCSConfig, pm: Optional[PersistentMemory] = None):
+        self.config = config
+        self.pm = pm if pm is not None else PersistentMemory()
+        self.entries: List[PBEntry] = []
+        self._lru_clock = 0
+        self._seq = 0
+        self._version_clock = 0
+        # Writes stalled at the PI buffer waiting for an Empty entry.
+        self.pi_stalled: List[Tuple[int, object]] = []
+        # Drains in flight: addr -> version sent (ack frees the entry).
+        self.in_flight: Dict[int, int] = {}
+        self.stats = {
+            "persists": 0,
+            "acks": 0,
+            "drains": 0,
+            "coalesces": 0,
+            "read_hits": 0,
+            "read_misses": 0,
+            "stalls": 0,
+        }
+
+    # ------------------------------------------------------------- helpers
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _touch(self, e: PBEntry) -> None:
+        self._lru_clock += 1
+        e.lru = self._lru_clock
+
+    def _find(self, addr: int) -> Optional[PBEntry]:
+        """Newest live entry for addr (a Dirty entry supersedes Drain)."""
+        best: Optional[PBEntry] = None
+        for e in self.entries:
+            if e.addr == addr and e.state != PBEState.EMPTY:
+                if best is None or e.version > best.version:
+                    best = e
+        return best
+
+    def _count(self, state: PBEState) -> int:
+        return sum(1 for e in self.entries if e.state == state)
+
+    def _alloc_slot(self) -> Optional[PBEntry]:
+        """Return an Empty entry, materializing the fixed capacity lazily."""
+        for e in self.entries:
+            if e.state == PBEState.EMPTY:
+                return e
+        if len(self.entries) < self.config.n_pbe:
+            e = PBEntry(addr=-1, version=-1, data=None,
+                        state=PBEState.EMPTY, lru=0)
+            self.entries.append(e)
+            return e
+        return None
+
+    def _lru_dirty(self) -> Optional[PBEntry]:
+        dirty = [e for e in self.entries if e.state == PBEState.DIRTY]
+        if not dirty:
+            return None
+        return min(dirty, key=lambda e: e.lru)
+
+    # --------------------------------------------------------------- drain
+    def _start_drain(self, e: PBEntry, events: List[Event]) -> None:
+        """Dirty -> Drain; emit the write packet toward PM (Section V-B)."""
+        assert e.state == PBEState.DIRTY
+        e.state = PBEState.DRAIN
+        self.in_flight[(e.addr, e.version)] = True
+        self.stats["drains"] += 1
+        events.append(Event(EventKind.DRAIN_SENT, e.addr, e.version,
+                            self._next_seq()))
+        # The PM device receives the write; its ack is delivered later by
+        # the caller via pm_ack() (possibly delayed / after a crash).
+        self.pm.write(e.addr, e.version, e.data)
+
+    def _rf_drain_down(self, events: List[Event]) -> None:
+        """PB_RF policy: above threshold, drain LRU Dirty down to preset."""
+        if self.config.scheme != Scheme.PB_RF:
+            return
+        if self._count(PBEState.DIRTY) <= self.config.threshold_count - 1:
+            return
+        while self._count(PBEState.DIRTY) > self.config.preset_count:
+            victim = self._lru_dirty()
+            if victim is None:
+                break
+            self._start_drain(victim, events)
+
+    # ------------------------------------------------------------- persist
+    def persist(self, addr: int, data: object) -> List[Event]:
+        """A persist (flush+fence) packet reaches the switch."""
+        events: List[Event] = []
+        self.stats["persists"] += 1
+        self._version_clock += 1
+        version = self._version_clock
+
+        if self.config.scheme == Scheme.NOPB:
+            # Volatile switch: the persist round-trips to PM.
+            self.pm.write(addr, version, data)
+            self.stats["acks"] += 1
+            events.append(Event(EventKind.PERSIST_ACK, addr, version,
+                                self._next_seq()))
+            return events
+
+        existing = self._find(addr)
+        if existing is not None and existing.state == PBEState.DIRTY:
+            if self.config.scheme == Scheme.PB_RF:
+                # Write coalescing: newer version absorbs the older one.
+                existing.version = version
+                existing.data = data
+                self._touch(existing)
+                self.stats["coalesces"] += 1
+                self.stats["acks"] += 1
+                events.append(Event(EventKind.COALESCED, addr, version,
+                                    self._next_seq()))
+                events.append(Event(EventKind.PERSIST_ACK, addr, version,
+                                    self._next_seq()))
+                return events
+            # PB scheme never observes Dirty (drain-immediately), but the
+            # state machine stays safe if it does: fall through to stall.
+
+        # An in-flight (Drain) older version does NOT block the new persist:
+        # the new version gets its own entry; the switch->PM path is FIFO,
+        # so same-address drains reach PM in version order (Section IV-A
+        # write order without blocking the ack).
+        slot = self._alloc_slot()
+        if slot is None:
+            victim = self._lru_dirty()
+            if victim is not None:
+                self._start_drain(victim, events)
+            # Whether we drained a victim or everything is already Drain,
+            # the write must wait for an Empty entry (Section V-D1).
+            self.pi_stalled.append((addr, data))
+            self.stats["stalls"] += 1
+            self._version_clock -= 1
+            self.stats["persists"] -= 1
+            events.append(Event(EventKind.STALLED, addr, version,
+                                self._next_seq()))
+            return events
+
+        slot.addr = addr
+        slot.version = version
+        slot.data = data
+        slot.state = PBEState.DIRTY
+        self._touch(slot)
+        self.stats["acks"] += 1
+        events.append(Event(EventKind.PERSIST_ACK, addr, version,
+                            self._next_seq()))
+
+        if self.config.scheme == Scheme.PB:
+            # Drain as soon as acked, to keep Empty entries available.
+            self._start_drain(slot, events)
+        else:
+            self._rf_drain_down(events)
+        return events
+
+    # -------------------------------------------------------------- pm ack
+    def pm_ack(self, addr: int, version: int) -> List[Event]:
+        """A PM write-ack packet reaches the switch (PI-front priority)."""
+        events: List[Event] = []
+        if (addr, version) not in self.in_flight:
+            return events  # stale/unknown ack: ignore
+        del self.in_flight[(addr, version)]
+        for e in self.entries:
+            if (e.addr == addr and e.state == PBEState.DRAIN
+                    and e.version == version):
+                e.state = PBEState.EMPTY
+                events.append(Event(EventKind.DRAIN_ACKED, addr, version,
+                                    self._next_seq()))
+                break
+        # Retry stalled writes now that an entry may be Empty.  Acks were
+        # prioritized to the PI front precisely to enable this (V-D2).
+        retries, self.pi_stalled = self.pi_stalled, []
+        for (a, d) in retries:
+            events.extend(self.persist(a, d))
+        return events
+
+    # ---------------------------------------------------------------- read
+    def read(self, addr: int) -> Tuple[Optional[object], Event]:
+        """A read request reaches the switch; returns (data, event)."""
+        e = self._find(addr)
+        if e is not None and e.state in (PBEState.DIRTY, PBEState.DRAIN):
+            # PBCS routes to PI; PBC serves from the buffer (V-D3).  Under
+            # PB the entry is in Drain: serving from PB is still correct
+            # (same bytes as the in-flight drain) and preserves write-read
+            # order because the drain was emitted before this response.
+            self.stats["read_hits"] += 1
+            return e.data, Event(EventKind.READ_FROM_PB, addr, e.version,
+                                 self._next_seq())
+        self.stats["read_misses"] += 1
+        rec = self.pm.read(addr)
+        data = rec[1] if rec is not None else None
+        ver = rec[0] if rec is not None else -1
+        return data, Event(EventKind.READ_FROM_PM, addr, ver,
+                           self._next_seq())
+
+    # ----------------------------------------------------- crash / recover
+    def crash(self) -> None:
+        """Power loss: routing state (PI/PO, in-flight acks) is lost; the
+        PB tables survive (non-volatile cells / battery), Section V-D4."""
+        self.pi_stalled.clear()
+        self.in_flight.clear()
+        # Entries survive with their states; nothing else to do.
+
+    def recover(self) -> List[Event]:
+        """Reboot: treat every non-Empty entry as Dirty and drain it all."""
+        events: List[Event] = []
+        for e in self.entries:
+            if e.state in (PBEState.DIRTY, PBEState.DRAIN):
+                e.state = PBEState.DIRTY
+                self._start_drain(e, events)
+        # Recovery drains are immediately acked in this untimed model.
+        for e in self.entries:
+            if e.state == PBEState.DRAIN:
+                events.extend(self.pm_ack(e.addr, e.version))
+        return events
+
+    # ------------------------------------------------------------ invariant
+    def check_invariants(self) -> None:
+        """The paper's three correctness criteria, checkable at any time."""
+        # (c) crash consistency, internal form: a Dirty entry is by
+        #     definition the latest-and-only copy, so PM must never hold a
+        #     version newer than a live Dirty entry.  (An older *Drain*
+        #     entry may coexist with a newer PM version when acks return
+        #     out of order; recovery re-drains it and PM rejects the stale
+        #     write, so nothing is lost.)  The external form — "no acked
+        #     version is ever lost" — is asserted by the property tests,
+        #     which track acks outside the buffer.
+        for e in self.entries:
+            if e.state != PBEState.DIRTY:
+                continue
+            rec = self.pm.read(e.addr)
+            if rec is not None and rec[0] > e.version:
+                raise AssertionError(
+                    f"PM holds newer version than live Dirty PB entry for "
+                    f"addr={e.addr}: pm={rec[0]} pb={e.version}")
+        # (b) write order: at most one Dirty entry per address, and every
+        #     Drain entry for an address is strictly older than its Dirty
+        #     entry (versions drain toward PM in order).
+        dirty = [e.addr for e in self.entries if e.state == PBEState.DIRTY]
+        if len(dirty) != len(set(dirty)):
+            raise AssertionError("duplicate Dirty PB entries for one address")
+        newest_dirty = {e.addr: e.version for e in self.entries
+                        if e.state == PBEState.DIRTY}
+        for e in self.entries:
+            if (e.state == PBEState.DRAIN
+                    and e.addr in newest_dirty
+                    and e.version >= newest_dirty[e.addr]):
+                raise AssertionError(
+                    f"Drain entry not older than Dirty for addr={e.addr}")

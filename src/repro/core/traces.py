@@ -1,0 +1,506 @@
+"""Splash-4-analogue trace generators (Section VI, Table II).
+
+The paper evaluates seven Splash-4 benchmarks under the "efficient
+checkpointing" persist discipline (every heap store is made durable with
+clflush+mfence at loop-iteration granularity) with a 100k-persist ROI cap.
+The binaries are not available offline, so each generator below emits the
+LLC-miss-level memory-request stream *derived from the algorithm's loop
+nest* (FFT, blocked LU) or from its published locality signature
+(Cholesky/Radiosity/Raytrace/Volrend), at 64-byte line granularity.
+
+Per-workload calibration targets (paper Figs. 5-7):
+    workload     write-locality  read-after-persist  expected PB_RF
+    radiosity    very high       ~51% hit            big win
+    lu_cont      moderate        ~20% hit            win
+    lu_non       moderate        ~20% hit            win (>20% PB)
+    raytrace     moderate        ~20% hit            win
+    fft          low (2.8%)      ~20% hit            small win / RF loss
+    cholesky     ~1%             ~1% hit             slowdown
+    volrend_npl  ~1%             ~1% hit             mild slowdown
+
+Each trace is a per-core sequence of (op, addr, gap) where `gap` is the ns
+of computation preceding the op.  An LRU filter models the private-L1 +
+shared-L2 hierarchy (Table I: 32KB L1 / 256KB L2 -> ~4K lines visible per
+core); persists always traverse to the switch (clflush forces write-back).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.params import Op
+
+# Heap (persistent) lines live below this boundary; volatile above it.
+PM_REGION_LINES = 1 << 22
+DRAM_BASE = 1 << 24
+
+# Paper ROI budget: "up-to 100,000 write operations to PM" (all cores).
+DEFAULT_PERSIST_BUDGET = 100_000
+
+
+class LLCFilter:
+    """LRU filter approximating the per-core view of the cache hierarchy."""
+
+    def __init__(self, capacity_lines: int = 4096):
+        self.capacity = capacity_lines
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+
+    def access(self, line: int) -> bool:
+        """Returns True when the access misses (must go to memory)."""
+        if line in self._lru:
+            self._lru.move_to_end(line)
+            return False
+        self._lru[line] = None
+        if len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+        return True
+
+    def invalidate(self, line: int) -> None:
+        self._lru.pop(line, None)
+
+
+@dataclasses.dataclass
+class Trace:
+    """Padded per-core trace arrays consumed by the timed simulator."""
+
+    ops: np.ndarray      # (C, L) int32
+    addrs: np.ndarray    # (C, L) int32
+    gaps: np.ndarray     # (C, L) float32 — compute ns preceding the op
+    lengths: np.ndarray  # (C,) int32
+    name: str = ""
+
+    @property
+    def n_cores(self) -> int:
+        return self.ops.shape[0]
+
+    @property
+    def total_ops(self) -> int:
+        return int(self.lengths.sum())
+
+    def counts(self) -> Dict[str, int]:
+        out = {}
+        for op in Op:
+            n = 0
+            for c in range(self.n_cores):
+                n += int((self.ops[c, : self.lengths[c]] == int(op)).sum())
+            out[op.name.lower()] = n
+        return out
+
+
+class _CoreStream:
+    """Builder for one core's op stream with an LLC filter attached."""
+
+    def __init__(self, llc_lines: int = 4096):
+        self.ops: List[int] = []
+        self.addrs: List[int] = []
+        self.gaps: List[float] = []
+        self._pending_gap = 0.0
+        self.llc = LLCFilter(llc_lines)
+        self.persists = 0
+
+    def compute(self, ns: float) -> None:
+        self._pending_gap += ns
+
+    def _emit(self, op: Op, addr: int) -> None:
+        self.ops.append(int(op))
+        self.addrs.append(int(addr))
+        self.gaps.append(self._pending_gap)
+        self._pending_gap = 0.0
+
+    def read_pm(self, line: int) -> None:
+        if self.llc.access(line):
+            self._emit(Op.PM_READ, line)
+        else:
+            self.compute(1.0)  # L1/L2 hit cost
+
+    def persist(self, line: int) -> None:
+        # clflush evicts the line from the hierarchy and pushes it to PM.
+        self.llc.invalidate(line)
+        self._emit(Op.PERSIST, line)
+        self.persists += 1
+
+    def barrier(self) -> None:
+        self._emit(Op.BARRIER, 0)
+
+    def read_dram(self, line: int) -> None:
+        if self.llc.access(DRAM_BASE + line):
+            self._emit(Op.DRAM_READ, DRAM_BASE + line)
+        else:
+            self.compute(1.0)
+
+    def write_dram(self, line: int) -> None:
+        if self.llc.access(DRAM_BASE + line):
+            self._emit(Op.DRAM_WRITE, DRAM_BASE + line)
+        else:
+            self.compute(1.0)
+
+
+def _pack(streams: List[_CoreStream], name: str) -> Trace:
+    # Barriers must be consistent across cores or the simulation deadlocks.
+    bar_counts = {sum(1 for o in s.ops if o == int(Op.BARRIER))
+                  for s in streams}
+    if len(bar_counts) > 1:
+        raise ValueError(f"inconsistent barrier counts in {name}: {bar_counts}")
+    lengths = np.array([len(s.ops) for s in streams], dtype=np.int32)
+    L = int(lengths.max()) if len(streams) else 0
+    C = len(streams)
+    ops = np.zeros((C, L), dtype=np.int32)
+    addrs = np.zeros((C, L), dtype=np.int32)
+    gaps = np.zeros((C, L), dtype=np.float32)
+    for c, s in enumerate(streams):
+        n = lengths[c]
+        ops[c, :n] = s.ops
+        addrs[c, :n] = s.addrs
+        gaps[c, :n] = s.gaps
+    return Trace(ops=ops, addrs=addrs, gaps=gaps, lengths=lengths, name=name)
+
+
+# ===========================================================================
+# Algorithm-derived generators
+# ===========================================================================
+
+def fft_trace(n_cores: int = 8, m: int = 12, seed: int = 0,
+              persist_budget: int = DEFAULT_PERSIST_BUDGET) -> Trace:
+    """Radix-2 FFT, -m12 (2^12 complex doubles), Splash-4 FFT kernel.
+
+    Each of the log2(n) stages touches every point once; points are 16B so
+    4 points share a line.  Following the efficient-checkpointing persist
+    discipline, each core flushes the lines it modified at the end of every
+    EPOCH butterflies (once per line per epoch), then all cores barrier at
+    the stage boundary.  A line is re-persisted only one full stage later,
+    giving FFT its low write-coalescing rate (~3%).  The inter-core
+    exchange of the six-step FFT is modeled by each core reading two lines
+    of its neighbour's just-flushed epoch — the read-after-persist traffic
+    behind FFT's moderate RF hit rate and its PB read-latency increase.
+    """
+    del seed  # deterministic address stream
+    n = 1 << m
+    points_per_line = 4
+    streams = [_CoreStream() for _ in range(n_cores)]
+    budget = persist_budget
+    epoch = 8  # butterflies between checkpoint flushes
+
+    for stage in range(m):
+        half = 1 << stage
+        # pass 1: per-core epoch flush lists (address math only)
+        flushes: List[List[List[int]]] = []
+        spans = []
+        for c in range(n_cores):
+            lo = (n // 2) * c // n_cores
+            hi = (n // 2) * (c + 1) // n_cores
+            spans.append((lo, hi))
+            eps: List[List[int]] = []
+            dirty: "OrderedDict[int, None]" = OrderedDict()
+            for j, b in enumerate(range(lo, hi)):
+                top = (b // half) * (2 * half) + (b % half)
+                bot = top + half
+                dirty[top // points_per_line] = None
+                dirty[bot // points_per_line] = None
+                if (j + 1 + 3 * c) % epoch == 0:
+                    eps.append(list(dirty))
+                    dirty.clear()
+            if dirty:
+                eps.append(list(dirty))
+            flushes.append(eps)
+        # pass 2: emit ops; core c reads 2 lines of core c-1's same epoch
+        for c in range(n_cores):
+            s = streams[c]
+            lo, hi = spans[c]
+            e_idx = 0
+            for j, b in enumerate(range(lo, hi)):
+                top = (b // half) * (2 * half) + (b % half)
+                bot = top + half
+                l_top, l_bot = top // points_per_line, bot // points_per_line
+                s.read_pm(l_top)
+                if l_bot != l_top:
+                    s.read_pm(l_bot)
+                s.compute(3800.0)  # flops, twiddles, transposes, sync slack
+                if (j + 1 + 3 * c) % epoch == 0 or b == hi - 1:
+                    for ln in flushes[c][e_idx]:
+                        if budget > 0:
+                            s.persist(ln)
+                            budget -= 1
+                        s.compute(3.0)
+                    # neighbour-boundary exchange reads
+                    prev = flushes[(c - 1) % n_cores]
+                    if e_idx < len(prev) and prev[e_idx]:
+                        for ln in prev[e_idx][:2]:
+                            s.read_pm(ln)
+                    e_idx += 1
+        for s in streams:
+            s.barrier()
+    return _pack(streams, "fft")
+
+
+def _lu_trace(n_cores: int, n: int, block: int, contiguous: bool,
+              seed: int, persist_budget: int, name: str) -> Trace:
+    """Blocked right-looking LU, -n128 (Splash-4 LU kernel).
+
+    Contiguous: blocks are stored contiguously (a 16x16 double block = 32
+    consecutive lines).  Non-contiguous: row-major full matrix, so a block
+    row (16 doubles = 128B) spans 2 lines and rows stride 16 lines, halving
+    line-level write reuse — which is why Lu_non benefits more from the PB.
+
+    Phases are separated by barriers (as in Splash-4): the owner factors
+    and persists the pivot block, then every core's panel update re-reads
+    the freshly flushed pivot lines — the cross-core read-after-persist
+    pattern behind LU's ~20% RF hit rate.
+    """
+    rng = np.random.default_rng(seed)
+    nb = n // block
+    elems_per_line = 8
+    streams = [_CoreStream() for _ in range(n_cores)]
+    budget = persist_budget
+
+    def block_lines(bi: int, bj: int) -> np.ndarray:
+        if contiguous:
+            base = (bi * nb + bj) * (block * block // elems_per_line)
+            return np.arange(base, base + block * block // elems_per_line)
+        # row-major n x n matrix of doubles
+        rows = bi * block + np.arange(block)
+        start = rows * (n // elems_per_line) + (bj * block) // elems_per_line
+        width = max(block // elems_per_line, 1)  # lines per block row
+        return (start[:, None] + np.arange(width)[None, :]).ravel()
+
+    def persist_block(s: _CoreStream, lines: np.ndarray,
+                      repeat: int = 1, group_sz: int = 2) -> None:
+        # `repeat` models element-granularity flushing: clflush evicts the
+        # line, the next element write re-fetches it (an RFO read that the
+        # PB can serve — LU's RF hit source) and flushes it again while the
+        # previous version is still Dirty (LU's coalescing source).
+        nonlocal budget
+        for group in np.array_split(lines, max(len(lines) // group_sz, 1)):
+            for _ in range(repeat):
+                for ln in group:
+                    s.read_pm(int(ln))
+                    s.compute(30.0)
+                    if budget > 0:
+                        s.persist(int(ln))
+                        budget -= 1
+
+    for k in range(nb):
+        # 1. factor the diagonal block (owner core persists it)
+        owner = k % n_cores
+        persist_block(streams[owner], block_lines(k, k),
+                      repeat=1 if contiguous else 2)
+        for s in streams:
+            s.barrier()
+        # 2. panel updates: every panel task re-reads the pivot block
+        panels = [(k, j) for j in range(k + 1, nb)] + \
+                 [(i, k) for i in range(k + 1, nb)]
+        for p_idx, (bi, bj) in enumerate(panels):
+            s = streams[p_idx % n_cores]
+            for ln in block_lines(k, k):      # freshly persisted pivot
+                s.read_pm(int(ln))
+                s.compute(4.0)
+            persist_block(s, block_lines(bi, bj),
+                          repeat=1 if contiguous else 2)
+        for s in streams:
+            s.barrier()
+        # 3. trailing submatrix update (owner-computes by column block)
+        trailing = [(i, j) for i in range(k + 1, nb) for j in range(k + 1, nb)]
+        for t_i, (bi, bj) in enumerate(trailing):
+            s = streams[bj % n_cores]
+            s.compute(2800.0 if contiguous else 1500.0)  # dgemm arithmetic
+            for ln in block_lines(bi, k):
+                s.read_pm(int(ln))
+            for ln in block_lines(k, bj):
+                s.read_pm(int(ln))
+            persist_block(s, block_lines(bi, bj),
+                          repeat=2 if (t_i % 4 == 0 or not contiguous) else 1)
+        for s in streams:
+            s.barrier()
+        if budget <= 0:
+            break
+        _ = rng
+    return _pack(streams, name)
+
+
+def lu_cont_trace(n_cores: int = 8, seed: int = 1,
+                  persist_budget: int = DEFAULT_PERSIST_BUDGET) -> Trace:
+    return _lu_trace(n_cores, 128, 16, True, seed, persist_budget, "lu_cont")
+
+
+def lu_non_trace(n_cores: int = 8, seed: int = 2,
+                 persist_budget: int = DEFAULT_PERSIST_BUDGET) -> Trace:
+    return _lu_trace(n_cores, 128, 16, False, seed, persist_budget, "lu_non")
+
+
+# ===========================================================================
+# Signature-derived generators
+# ===========================================================================
+
+def _signature_trace(name: str, n_cores: int, seed: int, *,
+                     n_iters: int,
+                     hot_lines: int,
+                     cold_lines: int,
+                     p_persist: float,
+                     p_hot_write: float,
+                     reads_per_iter: float,
+                     p_read_recent: float,
+                     compute_ns: float,
+                     persist_budget: int,
+                     recent_window: int = 8,
+                     zipf_a: float = 1.4,
+                     persist_burst: int = 1,
+                     p_read_mid: float = 0.0,
+                     mid_window: int = 256,
+                     p_shared: float = 1.0,
+                     recent_global: bool = False) -> Trace:
+    """Stochastic generator parameterized by a workload's locality signature.
+
+    p_hot_write    — probability a persist targets the small hot set, with
+                     Zipf(zipf_a) concentration within it (drives the
+                     write-coalescing rate of Fig 7b: a re-persist coalesces
+                     only while the line is still Dirty in the 16-entry PB).
+    p_read_recent  — probability a PM read targets one of the
+                     `recent_window` most recently persisted lines on the
+                     same core (the persist-A-then-load-A pattern of Fig 2;
+                     drives the RF read-hit rate of Fig 7a).
+    p_read_mid     — reads to mid-distance persisted lines (drained and
+                     evicted from the 16-entry PB long ago; they go straight
+                     to PM but land in the PM-channel shadow of drain
+                     bursts — the Cholesky read-latency mechanism).
+    p_shared       — fraction of hot persists to globally shared lines;
+                     the rest hit a per-core partition of the hot set
+                     (radiosity partitions patches among workers, so most
+                     re-persists of a line come from one core).
+    persist_burst  — lines persisted back-to-back (e.g. a sparse-Cholesky
+                     column flush), which makes drain traffic bursty.
+    """
+    rng = np.random.default_rng(seed)
+    streams = [_CoreStream() for _ in range(n_cores)]
+    budget = persist_budget
+    # recency: per-core (a core re-reads its own fresh writes) or global
+    # (consumers chase other cores' freshly persisted data, e.g. the
+    # left-looking Cholesky dependency pattern)
+    shared_recent: List[int] = []
+    recent: List[List[int]] = [shared_recent] * n_cores if recent_global \
+        else [[] for _ in range(n_cores)]
+    mid: List[int] = []  # global mid-distance window
+    # Zipf ranks over the hot set, precomputed for sampling
+    ranks = np.arange(1, hot_lines + 1, dtype=np.float64)
+    zipf_p = ranks ** (-zipf_a)
+    zipf_p /= zipf_p.sum()
+    next_cold = hot_lines  # fresh cold lines for write-once streams
+
+    slice_sz = max(hot_lines // n_cores, 1)
+
+    def pick_persist_line(c: int) -> int:
+        nonlocal next_cold
+        if rng.random() < p_hot_write:
+            z = int(rng.choice(hot_lines, p=zipf_p))
+            if rng.random() < p_shared:
+                return z
+            return (c * slice_sz + z % slice_sz) % hot_lines
+        next_cold += 1
+        return hot_lines + (next_cold % cold_lines)
+
+    for _ in range(n_iters):
+        if budget <= 0:
+            break
+        for c in range(n_cores):
+            s = streams[c]
+            s.compute(compute_ns * float(rng.exponential(1.0)))
+            # reads
+            n_reads = rng.poisson(reads_per_iter)
+            for _ in range(n_reads):
+                r = recent[c]
+                u = rng.random()
+                if r and u < p_read_recent:
+                    line = r[rng.integers(len(r))]
+                elif mid and u < p_read_recent + p_read_mid:
+                    line = mid[rng.integers(len(mid))]
+                else:
+                    line = hot_lines + int(rng.integers(cold_lines))
+                s.read_pm(line)
+            # persist burst
+            if rng.random() < p_persist and budget > 0:
+                for _ in range(persist_burst):
+                    if budget <= 0:
+                        break
+                    line = pick_persist_line(c)
+                    s.persist(line)
+                    budget -= 1
+                    recent[c].append(line)
+                    if len(recent[c]) > recent_window:
+                        mid.append(recent[c].pop(0))
+                        if len(mid) > mid_window:
+                            mid.pop(0)
+    return _pack(streams, name)
+
+
+def cholesky_trace(n_cores: int = 8, seed: int = 3,
+                   persist_budget: int = DEFAULT_PERSIST_BUDGET) -> Trace:
+    """Sparse left-looking Cholesky (tk18.O): read-dominated; each column
+    is written once (coalescing ~1%) and read long after it was drained
+    (RF hit ~1%), so PB's PI-buffer read detour costs dominate."""
+    return _signature_trace(
+        "cholesky", n_cores, seed,
+        n_iters=5200, hot_lines=32, cold_lines=200_000,
+        p_persist=0.030, p_hot_write=0.01,
+        reads_per_iter=9.0, p_read_recent=0.10,
+        compute_ns=150.0, persist_budget=persist_budget,
+        recent_window=12, persist_burst=32,
+        p_read_mid=0.25, mid_window=256, recent_global=True)
+
+
+def radiosity_trace(n_cores: int = 8, seed: int = 4,
+                    persist_budget: int = DEFAULT_PERSIST_BUDGET) -> Trace:
+    """Radiosity (-ae 5000 -bf 0.1): the interaction loop re-persists a
+    small set of patch accumulators at high frequency (coalescing ~50%)
+    and immediately re-reads them (RF hit ~51%) — the paper's best case."""
+    return _signature_trace(
+        "radiosity", n_cores, seed,
+        n_iters=4200, hot_lines=18, cold_lines=40_000,
+        p_persist=0.85, p_hot_write=0.82,
+        reads_per_iter=1.1, p_read_recent=0.75,
+        compute_ns=240.0, persist_budget=persist_budget,
+        recent_window=4, zipf_a=1.5, p_shared=0.3)
+
+
+def raytrace_trace(n_cores: int = 8, seed: int = 5,
+                   persist_budget: int = DEFAULT_PERSIST_BUDGET) -> Trace:
+    """Raytrace (teapot.env): BVH reads with moderate reuse; irradiance /
+    pixel accumulators give ~20% write locality and read-after-persist."""
+    return _signature_trace(
+        "raytrace", n_cores, seed,
+        n_iters=4400, hot_lines=64, cold_lines=60_000,
+        p_persist=0.45, p_hot_write=0.32,
+        reads_per_iter=2.0, p_read_recent=0.30,
+        compute_ns=120.0, persist_budget=persist_budget,
+        recent_window=8)
+
+
+def volrend_trace(n_cores: int = 8, seed: int = 6,
+                  persist_budget: int = DEFAULT_PERSIST_BUDGET) -> Trace:
+    """Volrend_npl (headscaleddown2): ray-cast reads over a large volume
+    (low reuse); image writes are write-once (coalescing/hit ~1%)."""
+    return _signature_trace(
+        "volrend_npl", n_cores, seed,
+        n_iters=4200, hot_lines=32, cold_lines=150_000,
+        p_persist=0.025, p_hot_write=0.02,
+        reads_per_iter=8.0, p_read_recent=0.06,
+        compute_ns=140.0, persist_budget=persist_budget,
+        recent_window=12, persist_burst=24,
+        p_read_mid=0.22, mid_window=256, recent_global=True)
+
+
+WORKLOADS: Dict[str, Callable[..., Trace]] = {
+    "fft": fft_trace,
+    "lu_cont": lu_cont_trace,
+    "lu_non": lu_non_trace,
+    "cholesky": cholesky_trace,
+    "radiosity": radiosity_trace,
+    "raytrace": raytrace_trace,
+    "volrend_npl": volrend_trace,
+}
+
+
+def make_trace(name: str, n_cores: int = 8, **kw) -> Trace:
+    if name not in WORKLOADS:
+        raise KeyError(f"unknown workload {name!r}; have {sorted(WORKLOADS)}")
+    return WORKLOADS[name](n_cores=n_cores, **kw)

@@ -1,0 +1,103 @@
+"""Pallas kernel: blockwise online-softmax (flash) attention, forward.
+
+Grid: (batch*heads, q_blocks, k_blocks) with the k axis innermost and
+sequential, so the running max / normalizer / output accumulator live in
+VMEM scratch carried across k iterations.  Causal and sliding-window
+masks are applied per block.
+
+Block shapes default to (128, head_dim) — MXU-aligned for head_dim in
+{64, 128, 256}; the working set per program is
+``(2*block_k + 2*block_q) * d * 4B`` ≈ 0.5 MiB at d=256, far under the
+16 MiB VMEM budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, n_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale       # (bq, d)
+    k = k_ref[0].astype(jnp.float32)               # (bk, d)
+    v = v_ref[0].astype(jnp.float32)               # (bk, d)
+    logits = q @ k.T                               # (bq, bk)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    mask = jnp.ones_like(logits, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr[:, None] + jnp.sum(p, axis=1)[:, None]
+    acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+    m_scr[...] = m_new[:, None]
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q/k/v: (B, H, S, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    n_k = s // block_k
+    grid = (b * h, s // block_q, n_k)
+
+    kern = functools.partial(
+        _kernel, scale=d ** -0.5, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, iq, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running normalizer
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

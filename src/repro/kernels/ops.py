@@ -1,0 +1,57 @@
+"""jit'd public wrappers with platform dispatch.
+
+On TPU the Pallas kernels compile natively (``interpret=False``); on CPU
+(this container) they run in interpret mode, where the kernel body
+executes in Python — bit-identical semantics, used by the allclose tests
+against the ``ref`` oracles.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.tat_lookup import tat_lookup_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def tat_lookup(req_tags: jnp.ndarray, tat: jnp.ndarray,
+               states: jnp.ndarray, *, block_r: int = 256
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    r = req_tags.shape[0]
+    block_r = min(block_r, r)
+    if r % block_r:
+        return ref.tat_lookup_ref(req_tags, tat, states)
+    return tat_lookup_pallas(req_tags, tat, states, block_r=block_r,
+                             interpret=not _on_tpu())
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    s = q.shape[2]
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=not _on_tpu())
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 128
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    s = x.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        return ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
+    return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                           interpret=not _on_tpu())

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tat_lookup_ref(req_tags: jnp.ndarray, tat: jnp.ndarray,
+                   states: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fully-associative lookup.
+
+    req_tags: (R,) int32 request tags
+    tat:      (N,) int32 table tags
+    states:   (N,) int32 entry states (0 = Empty — an Empty entry never
+              matches, mirroring PBCS semantics)
+    Returns (idx: (R,) int32 match index or -1, state: (R,) int32 or 0).
+    """
+    match = (req_tags[:, None] == tat[None, :]) & (states[None, :] != 0)
+    has = jnp.any(match, axis=1)
+    idx = jnp.argmax(match, axis=1)
+    st = jnp.where(has, states[idx], 0)
+    return jnp.where(has, idx, -1).astype(jnp.int32), st.astype(jnp.int32)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """Masked softmax attention.  q/k/v: (B, H, S, D)."""
+    s = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int = 128):
+    """Chunked SSD oracle — delegates to the model reference (itself
+    validated against the sequential recurrence in tests)."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, B, C, chunk=chunk)

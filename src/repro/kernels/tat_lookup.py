@@ -1,0 +1,60 @@
+"""Pallas kernel: batched fully-associative TAT lookup.
+
+The PB's hot loop (PBCS tag check, Section V-C) as a TPU kernel: a block
+of request tags is compared against the whole Tag Address Table resident
+in VMEM; the match reduction maps onto the VPU's 8x128 lanes.  Used by
+the vectorized PCS simulator when scoring large request batches.
+
+Tiling: requests are tiled in blocks of ``block_r``; the TAT (tags +
+states) is small (16-1024 entries) and fully VMEM-resident, broadcast to
+every program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(req_ref, tat_ref, st_ref, idx_ref, out_st_ref):
+    req = req_ref[...]                       # (block_r,)
+    tat = tat_ref[...]                       # (n,)
+    st = st_ref[...]                         # (n,)
+    match = (req[:, None] == tat[None, :]) & (st[None, :] != 0)
+    has = jnp.any(match, axis=1)
+    # argmax over the entry axis (first match wins, like priority encode)
+    idx = jnp.argmax(match, axis=1).astype(jnp.int32)
+    idx_ref[...] = jnp.where(has, idx, -1)
+    out_st_ref[...] = jnp.where(has, jnp.take(st, idx), 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def tat_lookup_pallas(req_tags: jnp.ndarray, tat: jnp.ndarray,
+                      states: jnp.ndarray, *, block_r: int = 256,
+                      interpret: bool = True
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    r = req_tags.shape[0]
+    n = tat.shape[0]
+    assert r % block_r == 0, (r, block_r)
+    grid = (r // block_r,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r,), lambda i: (i,)),
+            pl.BlockSpec((block_r,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(req_tags, tat, states)

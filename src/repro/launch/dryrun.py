@@ -1,0 +1,384 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without real hardware: the
+512 placeholder host devices let ``jax.make_mesh`` build the production
+meshes (16x16 single-pod, 2x16x16 multi-pod); ``.lower().compile()``
+runs the full GSPMD partitioner, and the compiled artifact yields the
+memory analysis, FLOP/byte counts and the collective schedule that feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+        --out results/dryrun.json
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, applicable
+from repro.launch.sharding import (shard_batch, shard_caches, shard_tree,
+                                   replicated)
+from repro.launch.specs import (decode_specs, opt_state_specs, params_specs,
+                                train_batch_specs)
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.optim import AdamWConfig
+
+def _msize(mesh, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_COLL_RE = re.compile(
+    r"(\w+\[[^\]]*\])[^=]*\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op in compiled HLO."""
+    per_kind = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"= (\(?[\w\[\],{}\s/]*?\)?) (all-gather|all-reduce|"
+                      r"reduce-scatter|all-to-all|collective-permute)", line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+    return per_kind
+
+
+MICROBATCHES = [1]
+
+
+def _lower_cell(cfg, shape, mesh, opt_cfg):
+    """Lower the cell's step function against ShapeDtypeStruct specs."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import data_axes
+    from repro.models.transformer import activation_sharding
+    from repro.launch import sharding as _sh
+    dp = _sh.batch_axes(mesh)
+    bdim = (dp if shape.global_batch % _msize(mesh, dp) == 0
+            and shape.global_batch > 1 else None)
+    mode = _sh.FLAGS["act_shard"]
+    if mode == "seq" and shape.seq_len % mesh.shape["model"] == 0:
+        act = P(bdim, "model")
+    elif mode == "d":
+        act = P(bdim, None, "model")
+    else:
+        act = P(bdim)
+    from repro.models.transformer import moe_groups
+    n_tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1)
+    g = _msize(mesh, dp) if bdim is not None and n_tokens % _msize(
+        mesh, dp) == 0 else 1
+    with mesh, activation_sharding(act), moe_groups(g):
+        if shape.kind == "train":
+            p_specs = params_specs(cfg)
+            o_specs = opt_state_specs(cfg, opt_cfg)
+            b_specs = train_batch_specs(cfg, shape)
+            fn = make_train_step(cfg, opt_cfg, microbatches=MICROBATCHES[0])
+            in_sh = (shard_tree(mesh, p_specs), shard_tree(mesh, o_specs),
+                     shard_batch(mesh, b_specs))
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(
+                p_specs, o_specs, b_specs)
+        elif shape.kind == "prefill":
+            p_specs = params_specs(cfg)
+            b_specs = train_batch_specs(cfg, shape)
+            b_specs.pop("labels")
+            fn = make_prefill_step(cfg, shape.seq_len)
+            in_sh = (shard_tree(mesh, p_specs), shard_batch(mesh, b_specs))
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(p_specs, b_specs)
+        else:  # decode
+            p_specs = params_specs(cfg)
+            d = decode_specs(cfg, shape)
+            fn = make_decode_step(cfg)
+            args = [d["tokens_last"], d["caches"], d["pos0"]]
+            in_sh = [shard_batch(mesh, d["tokens_last"]),
+                     shard_caches(mesh, d["caches"], shape.global_batch),
+                     replicated(mesh, d["pos0"])]
+            if cfg.is_enc_dec:
+                args += [d["enc_out"], d["enc_pos"]]
+                in_sh += [shard_batch(mesh, d["enc_out"]),
+                          replicated(mesh, d["enc_pos"])]
+            lowered = jax.jit(
+                fn, in_shardings=(shard_tree(mesh, p_specs), *in_sh)
+            ).lower(p_specs, *args)
+
+    return lowered
+
+
+def _cell_cost(cfg, shape, mesh, opt_cfg):
+    """(flops, bytes, collective-bytes-per-kind) per device for one step.
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so scanned layer stacks are undercounted.  Since every cost is
+    exactly linear in the scan length (cost = a + b*reps), we compile
+    1-block and 2-block variants of the same config and extrapolate to
+    the real depth.  Encoder-decoder models get a third variant to
+    separate the encoder slope.
+    """
+    import dataclasses as _dc
+
+    L = len(cfg.block_pattern)
+    has_enc = cfg.is_enc_dec
+
+    from repro.models.transformer import unrolled_stack
+
+    def cost_at(m_dec: int, m_enc: int):
+        c2 = _dc.replace(cfg, n_layers=L * m_dec,
+                         n_enc_layers=(m_enc if has_enc else 0))
+        with unrolled_stack():
+            lowered = _lower_cell(c2, shape, mesh, opt_cfg)
+        comp = lowered.compile()
+        cost = comp.cost_analysis()
+        coll = collective_bytes(comp.as_text())
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)), coll)
+
+    def sub(x, y):
+        if isinstance(x, dict):
+            keys = set(x) | set(y)
+            return {k: x.get(k, 0) - y.get(k, 0) for k in keys}
+        return x - y
+
+    def lin(base, slope, n):
+        if isinstance(base, dict):
+            keys = set(base) | set(slope)
+            return {k: max(base.get(k, 0) + slope.get(k, 0) * n, 0.0)
+                    for k in keys}
+        return max(base + slope * n, 0.0)
+
+    f11 = cost_at(1, 1)
+    f21 = cost_at(2, 1)
+    b = tuple(sub(x, y) for x, y in zip(f21, f11))
+    if has_enc:
+        f12 = cost_at(1, 2)
+        c = tuple(sub(x, y) for x, y in zip(f12, f11))
+        a = tuple(sub(sub(x, y), z) for x, y, z in zip(f11, b, c))
+        reps_enc = cfg.n_enc_layers
+        out = []
+        for ai, bi, ci in zip(a, b, c):
+            t = lin(ai, bi, cfg.reps)
+            t = lin(t, ci, reps_enc) if not isinstance(t, dict) else {
+                k: max(t.get(k, 0) + ci.get(k, 0) * reps_enc, 0.0)
+                for k in set(t) | set(ci)}
+            out.append(t)
+        return tuple(out)
+    a = tuple(sub(x, y) for x, y in zip(f11, b))
+    return tuple(lin(ai, bi, cfg.reps) for ai, bi in zip(a, b))
+
+
+def analytic_cell(cfg, shape, chips: int, moment_bytes: int) -> dict:
+    """First-principles per-device residency and HBM traffic (bytes).
+
+    The CPU backend's HLO "bytes accessed" is fusion-blind (every op's
+    operands counted at full size) and its temp accounting reflects CPU
+    buffer assignment, so the fit/memory roofline terms use this analytic
+    model instead; both are reported.
+    """
+    P_total = cfg.param_count()
+    P_local = P_total / chips
+    dp = max(chips // 16, 1) if shape.global_batch > 1 else 1
+    b_loc = max(shape.global_batch // dp, 1)
+    s = shape.seq_len
+    d = cfg.d_model
+    v_loc = cfg.vocab / 16 if cfg.vocab % 16 == 0 else cfg.vocab
+    act_frac = cfg.active_param_count() / P_total
+
+    if shape.kind == "train":
+        resident = P_local * (2 + 2 * moment_bytes)      # params + m + v
+        # saved block inputs; only one microbatch's worth is live at once
+        resident += cfg.reps * b_loc * s * d * 2 / MICROBATCHES[0]
+        traffic = P_local * (2 * 3 * act_frac + 2 * moment_bytes + 2)
+        traffic += cfg.reps * b_loc * s * d * 2 * 2
+        traffic += b_loc * s * v_loc * 4 * 2
+    elif shape.kind == "prefill":
+        resident = P_local * 2 + _cache_bytes(cfg, shape, chips)
+        traffic = P_local * 2 * act_frac + _cache_bytes(cfg, shape, chips)
+        traffic += b_loc * s * d * 2 * cfg.n_layers / 4   # block activations
+    else:  # decode: one token
+        cache = _cache_bytes(cfg, shape, chips)
+        resident = P_local * 2 + cache
+        traffic = P_local * 2 * act_frac + cache          # read whole cache
+    return {"resident_bytes": float(resident), "traffic_bytes": float(traffic)}
+
+
+def _cache_bytes(cfg, shape, chips: int) -> float:
+    """Per-device KV/SSM cache bytes for this shape."""
+    total = 0.0
+    reps = cfg.reps
+    for spec in cfg.block_pattern:
+        if spec.kind == "ssm":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            h = d_inner // cfg.ssm_head_dim
+            total += reps * shape.global_batch * (
+                h * cfg.ssm_head_dim * cfg.ssm_state * 4
+                + 3 * (d_inner + 2 * cfg.ssm_state) * 2)
+        else:
+            alloc = shape.seq_len
+            if spec.kind == "swa" and cfg.window:
+                alloc = min(alloc, cfg.window)
+            total += (reps * shape.global_batch * alloc
+                      * cfg.n_kv_heads * cfg.hd * 2 * 2)
+    return total / chips
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped (full-attention arch, long-context cell)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    # jamba's 398B params need bf16 moments to fit 16GB/chip at 256 chips
+    moment_dtype = jnp.bfloat16 if cfg.param_count() > 1e11 else jnp.float32
+    opt_cfg = AdamWConfig(moment_dtype=moment_dtype)
+
+    lowered = _lower_cell(cfg, shape, mesh, opt_cfg)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    coll_full_once = collective_bytes(compiled.as_text())
+
+    t0 = time.time()
+    flops, bytes_acc, coll = _cell_cost(cfg, shape, mesh, opt_cfg)
+    t_cost = time.time() - t0
+
+    chips = 512 if multi_pod else 256
+    ana = analytic_cell(cfg, shape, chips,
+                        2 if moment_dtype == jnp.bfloat16 else 4)
+    coll_total = float(sum(coll.values()))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = ana["traffic_bytes"] / HBM_BW
+    t_memory_hlo = bytes_acc / HBM_BW
+    t_coll = coll_total / ICI_BW
+
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_probe_s": round(t_cost, 1),
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll_total,
+        "collectives": coll,
+        "collectives_body_once": coll_full_once,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_memory_hlo_s": t_memory_hlo, "t_collective_s": t_coll,
+        "analytic": ana,
+        "bottleneck": max(
+            [("compute", t_compute), ("memory", t_memory),
+             ("collective", t_coll)], key=lambda kv: kv[1])[0],
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+    }
+    if verbose:
+        ma = res["memory_analysis"]
+        print(f"  {arch} x {shape_name} x {res['mesh']}: "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+              f"args {ma['argument_bytes']/2**30:.2f}GiB "
+              f"temp {ma['temp_bytes']/2**30:.2f}GiB | "
+              f"resident {ana['resident_bytes']/2**30:.2f}GiB | "
+              f"flops/dev {flops:.3g} bytes/dev {ana['traffic_bytes']:.3g} "
+              f"coll/dev {coll_total:.3g} -> {res['bottleneck']}-bound",
+              flush=True)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--set", action="append", default=[],
+                    help="sharding FLAGS override, e.g. --set moe_expert_parallel=1")
+    args = ap.parse_args()
+
+    MICROBATCHES[0] = args.microbatch
+    from repro.launch import sharding as _sh
+    for kv in args.set:
+        k, v = kv.split("=")
+        assert k in _sh.FLAGS, f"unknown flag {k}"
+        _sh.FLAGS[k] = v if k == "act_shard" else bool(int(v))
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results, failures = [], 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, mp))
+                except Exception as e:  # a failure here is a sharding bug
+                    failures += 1
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "multi" if mp else "single",
+                                    "status": f"FAILED: {e}"})
+                    print(f"  {arch} x {shape} FAILED: {e}", flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = sum(r["status"] == "ok" for r in results)
+    skipped = sum("skipped" in r["status"] for r in results)
+    print(f"dry-run: {ok} ok, {skipped} skipped, {failures} FAILED")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

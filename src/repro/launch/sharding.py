@@ -1,0 +1,196 @@
+"""Sharding rules: FSDP over 'data', tensor-parallel over 'model'.
+
+Rules are path-based over the parameter pytree and divisibility-aware:
+an axis is only sharded when its size divides the mesh axis, otherwise it
+falls back to replication (e.g. seamless' vocab of 256206 is not
+16-divisible, so its embedding shards d_model instead).
+
+KV caches shard their *sequence* dimension over 'model' (+'data' for the
+single-request long-context shape): the assigned GQA configs have 1-16 KV
+heads, which cannot split over a 16-way model axis, while 32k/500k
+sequences always can.  GSPMD inserts the softmax partial-reductions this
+implies.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+# Perf-iteration knobs (EXPERIMENTS.md §Perf).  Defaults = the baseline
+# FSDP('data') x TP('model') layout; the dry-run CLI overrides via --set.
+FLAGS = {
+    # experts on the model axis (expert parallelism) instead of d_ff TP
+    "moe_expert_parallel": False,
+    # dense FFN/attn weights pure-TP (replicated over data, no FSDP
+    # all-gathers; only viable for small models)
+    "dense_pure_tp": False,
+    # activation sharding between blocks: 'none' (replicated over model),
+    # 'seq' (sequence parallelism: S over 'model'), or 'd' (feature dim
+    # over 'model') — §Perf iteration 2
+    "act_shard": "none",
+    # batch (and activations) sharded over BOTH mesh axes: pure-FSDP
+    # data parallelism, no tensor parallelism (use with fsdp_same_dim)
+    "batch_both": False,
+    # stack the FSDP ('data') shards on the SAME dim as TP ('model')
+    # instead of the contraction dim: leaves the partitioner no resolution
+    # other than a weight all-gather (vs partial-sum all-reducing the much
+    # larger activations) — see EXPERIMENTS.md §Perf iteration 1
+    "fsdp_same_dim": False,
+}
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name]
+
+
+def _ok(mesh, dim_size: int, axis) -> bool:
+    return axis is not None and dim_size % _axis_size(mesh, axis) == 0
+
+
+def _maybe(mesh, dim: int, axis):
+    return axis if _ok(mesh, dim, axis) else None
+
+
+def param_spec(mesh, path, leaf) -> P:
+    """PartitionSpec for one parameter leaf given its tree path."""
+    names = [getattr(k, "key", getattr(k, "name", getattr(k, "idx", k)))
+             for k in path]
+    names = [str(n) for n in names]
+    shape = leaf.shape
+    dp = "data"
+
+    def dim(i):  # handles the stacked leading reps dim
+        return shape[i]
+
+    stacked = "blocks" in names or "enc_blocks" in names
+    lead: Tuple = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    joined = ".".join(names)
+    if "embed" in names and "table" in names:
+        v, d = shape
+        if FLAGS["fsdp_same_dim"] and v % _axis_size(mesh, ("model", dp)) == 0:
+            return P(("model", dp), None)
+        if v % _axis_size(mesh, "model") == 0:
+            if FLAGS["fsdp_same_dim"]:
+                return P("model", None)
+            return P(_maybe(mesh, v, "model"), _maybe(mesh, d, dp))
+        return P(None, _maybe(mesh, d, "model"))
+    if len(body) <= 1:  # norms, biases, A_log, dt_bias, step...
+        return P(*lead, *([None] * len(body)))
+    if "router" in names:
+        return P(*lead, *([None] * len(body)))
+    if any(n in names for n in ("gate", "up")) and "moe" in names:
+        e, d, f = body
+        if FLAGS["moe_expert_parallel"] and e % _axis_size(mesh, "model") == 0:
+            return P(*lead, "model", _maybe(mesh, d, dp), None)
+        if FLAGS["dense_pure_tp"]:
+            return P(*lead, None, None, _maybe(mesh, f, "model"))
+        if FLAGS["fsdp_same_dim"]:
+            ax = ("model", dp) if f % _axis_size(mesh, ("model", dp)) == 0 \
+                else "model"
+            return P(*lead, None, None, _maybe(mesh, f, ax))
+        return P(*lead, None, _maybe(mesh, d, dp), _maybe(mesh, f, "model"))
+    if "down" in names and "moe" in names:
+        e, f, d = body
+        if FLAGS["moe_expert_parallel"] and e % _axis_size(mesh, "model") == 0:
+            return P(*lead, "model", None, _maybe(mesh, d, dp))
+        if FLAGS["dense_pure_tp"]:
+            return P(*lead, None, _maybe(mesh, f, "model"), None)
+        if FLAGS["fsdp_same_dim"]:
+            ax = ("model", dp) if f % _axis_size(mesh, ("model", dp)) == 0 \
+                else "model"
+            return P(*lead, None, _maybe(mesh, f, ax), None)
+        return P(*lead, None, _maybe(mesh, f, "model"), _maybe(mesh, d, dp))
+    if "conv_w" in names:
+        k, c = body
+        return P(*lead, None, _maybe(mesh, c, "model"))
+    if any(n in names for n in ("wo", "down", "out_proj")):
+        a, b = body
+        if FLAGS["dense_pure_tp"]:
+            return P(*lead, _maybe(mesh, a, "model"), None)
+        if FLAGS["fsdp_same_dim"]:
+            ax = ("model", dp) if a % _axis_size(mesh, ("model", dp)) == 0 \
+                else "model"
+            return P(*lead, _maybe(mesh, a, ax), None)
+        return P(*lead, _maybe(mesh, a, "model"), _maybe(mesh, b, dp))
+    if len(body) == 2:
+        # wq/wk/wv, ffn gate/up, ssm in_proj: (d_in, d_out)
+        a, b = body
+        if FLAGS["dense_pure_tp"]:
+            return P(*lead, None, _maybe(mesh, b, "model"))
+        if FLAGS["fsdp_same_dim"]:
+            ax = ("model", dp) if b % _axis_size(mesh, ("model", dp)) == 0 \
+                else "model"
+            return P(*lead, None, _maybe(mesh, b, ax))
+        return P(*lead, _maybe(mesh, a, dp), _maybe(mesh, b, "model"))
+    return P(*lead, *([None] * len(body)))
+
+
+def shard_tree(mesh, tree):
+    """NamedShardings for a pytree of arrays/ShapeDtypeStructs."""
+    def f(path, leaf):
+        return NamedSharding(mesh, param_spec(mesh, path, leaf))
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def batch_axes(mesh):
+    dp = data_axes(mesh)
+    if FLAGS["batch_both"]:
+        return dp + ("model",)
+    return dp
+
+
+def batch_spec(mesh, leaf) -> P:
+    dp = batch_axes(mesh)
+    if leaf.ndim == 0 or leaf.shape[0] % _axis_size(mesh, dp) != 0:
+        return P(*([None] * leaf.ndim))
+    return P(dp, *([None] * (leaf.ndim - 1)))
+
+
+def shard_batch(mesh, batch):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(mesh, l)), batch)
+
+
+def cache_spec(mesh, path, leaf, batch: int) -> P:
+    """Decode-cache sharding (stacked leading reps dim on every leaf)."""
+    names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    dp = data_axes(mesh)
+    shape = leaf.shape
+    if names and names[-1] in ("k", "v"):
+        r, b, s, h, d = shape
+        if batch > 1 and b % _axis_size(mesh, dp) == 0:
+            seq_ax = _maybe(mesh, s, "model")
+            return P(None, dp, seq_ax, None, None)
+        seq_ax = ("data", "model") if s % _axis_size(mesh, ("data", "model")) == 0 else None
+        return P(None, None, seq_ax, None, None)
+    if names and names[-1] == "state":
+        r, b, h, p_, n = shape
+        bd = dp if (batch > 1 and b % _axis_size(mesh, dp) == 0) else None
+        return P(None, bd, _maybe(mesh, h, "model"), None, None)
+    if names and names[-1] == "conv":
+        r, b, k, c = shape
+        bd = dp if (batch > 1 and b % _axis_size(mesh, dp) == 0) else None
+        return P(None, bd, None, _maybe(mesh, c, "model"))
+    return P(*([None] * leaf.ndim))
+
+
+def shard_caches(mesh, caches, batch: int):
+    def f(path, leaf):
+        return NamedSharding(mesh, cache_spec(mesh, path, leaf, batch))
+    return jax.tree_util.tree_map_with_path(f, caches)
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda l: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs`` mirrors exactly what the data pipeline / serving frontend
+produce; the dry-run lowers against these, so every (arch x shape x mesh)
+cell is exercised without touching device memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.shapes import Shape
+from repro.models import transformer as T
+
+AUDIO_FRAME_RATE = 4  # tokens per encoder frame (stub conformer stride)
+
+
+def train_batch_specs(cfg: T.ModelConfig, shape: Shape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    batch = {
+        "tokens": sd((b, s), jnp.int32),
+        "labels": sd((b, s), jnp.int32),
+    }
+    if cfg.is_enc_dec:
+        batch["enc_embeds"] = sd((b, s // AUDIO_FRAME_RATE, cfg.d_model),
+                                 jnp.float32)
+    if cfg.frontend == "vision":
+        batch["prefix_embeds"] = sd((b, cfg.frontend_seq, cfg.d_model),
+                                    jnp.float32)
+    return batch
+
+
+def params_specs(cfg: T.ModelConfig):
+    return jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.key(0)))
+
+
+def opt_state_specs(cfg: T.ModelConfig, opt_cfg):
+    from repro.optim import adamw_init
+    p = params_specs(cfg)
+    return jax.eval_shape(lambda: adamw_init(opt_cfg, p))
+
+
+def decode_specs(cfg: T.ModelConfig, shape: Shape) -> Tuple:
+    """(tokens_last, caches, pos0, enc_out?, enc_pos?) specs for decode."""
+    b, s = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    caches = jax.eval_shape(lambda: T.init_caches(cfg, b, s))
+    out = {
+        "tokens_last": sd((b, 1), jnp.int32),
+        "caches": caches,
+        "pos0": sd((), jnp.int32),
+    }
+    if cfg.is_enc_dec:
+        out["enc_out"] = sd((b, s // AUDIO_FRAME_RATE, cfg.d_model), cfg.dtype)
+        out["enc_pos"] = sd((s // AUDIO_FRAME_RATE,), jnp.int32)
+    return out

@@ -1,0 +1,72 @@
+"""jit-able train / prefill / decode step functions."""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_update
+from repro.optim.compress import topk_compress_grads
+
+
+def make_train_step(cfg: T.ModelConfig, opt_cfg: AdamWConfig,
+                    compress_ratio: float = 0.0, microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches`` > 1 accumulates gradients over batch slices with a
+    ``lax.scan`` — peak activation residency drops by the same factor
+    (only one microbatch's remat-saved inputs are live during its
+    backward).  Also the straggler-catchup mechanism's lever.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch))(params)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, bi):
+                loss_a, g_a = carry
+                li, gi = grads_of(params, bi)
+                return (loss_a + li,
+                        jax.tree.map(jnp.add, g_a, gi)), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros(()), zero), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        if compress_ratio > 0.0:
+            grads, err = topk_compress_grads(
+                grads, opt_state.get("err"), compress_ratio)
+            opt_state = dict(opt_state, err=err)
+        params, opt_state, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: T.ModelConfig, max_len: int):
+    def step(params, batch):
+        return T.prefill(cfg, params, batch, max_len)
+    return step
+
+
+def make_decode_step(cfg: T.ModelConfig):
+    def step(params, tokens_last, caches, pos0, enc_out=None, enc_pos=None):
+        return T.decode_step(cfg, params, tokens_last, caches, pos0=pos0,
+                             enc_out=enc_out, enc_pos=enc_pos)
+    return step

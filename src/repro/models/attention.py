@@ -1,0 +1,166 @@
+"""Grouped-query attention with RoPE, sliding windows, softcap, KV cache.
+
+One attention implementation serves every assigned architecture:
+
+    * GQA (n_kv_heads <= n_heads), MQA when n_kv_heads == 1 (paligemma)
+    * causal, non-causal (encoder), prefix-LM, and cross-attention
+    * sliding-window masks (gemma2/3 local layers, mixtral SWA)
+    * gemma2-style attention-logit softcapping, gemma3-style qk-norm
+    * decode against a preallocated KV cache; sliding-window layers use a
+      RING cache of `window` slots (each slot stores its absolute
+      position), which is what makes mixtral/gemma long-context decode
+      sub-quadratic in memory.
+
+The pure-jnp path below is the reference; ``repro.kernels.flash_attention``
+is the Pallas TPU kernel for the same contraction (used on real hardware;
+the dry-run lowers this jnp path, which XLA fuses on TPU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, init_linear, init_rmsnorm,
+                                 linear, rmsnorm, softcap)
+
+
+class KVCache(NamedTuple):
+    """Preallocated decode cache for one attention layer (ring buffer)."""
+
+    k: jnp.ndarray       # (B, S_alloc, Hkv, Dh)
+    v: jnp.ndarray       # (B, S_alloc, Hkv, Dh)
+    pos: jnp.ndarray     # (S_alloc,) int32 — absolute position per slot, -1 empty
+    length: jnp.ndarray  # () int32 — total tokens seen so far
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qk_norm: bool = False, dtype=None) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(kq, d_model, n_heads * head_dim, dtype),
+        "wk": init_linear(kk, d_model, n_kv_heads * head_dim, dtype),
+        "wv": init_linear(kv, d_model, n_kv_heads * head_dim, dtype),
+        "wo": init_linear(ko, n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rmsnorm(head_dim)
+        p["k_norm"] = init_rmsnorm(head_dim)
+    return p
+
+
+def init_kv_cache(batch: int, alloc: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, alloc, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, alloc, n_kv_heads, head_dim), dtype),
+        pos=jnp.full((alloc,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _split_heads(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def make_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, *, causal: bool,
+              window: Optional[int], prefix_len=None) -> jnp.ndarray:
+    """(S, T) boolean attend-mask from absolute positions (-1 k = empty)."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    if prefix_len is not None:
+        m |= (k_pos[None, :] < prefix_len) & jnp.ones_like(m)
+    m &= (k_pos >= 0)[None, :]
+    return m
+
+
+def _sdpa(q, k, v, *, mask, cap: Optional[float]) -> jnp.ndarray:
+    """q: (B,S,Hkv,G,D)  k/v: (B,T,Hkv,D)  mask: (S,T) or None."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bshgd,bthd->bhgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = softcap(logits, cap)
+    if mask is not None:
+        neg = jnp.finfo(jnp.float32).min
+        logits = jnp.where(mask[None, None, None], logits, neg)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def attention(p: dict, x: jnp.ndarray, positions: jnp.ndarray, *,
+              n_heads: int, n_kv_heads: int, head_dim: int,
+              causal: bool = True, window: Optional[int] = None,
+              attn_softcap: Optional[float] = None,
+              rope_theta: float = 10_000.0,
+              prefix_len=None,
+              cache: Optional[KVCache] = None,
+              kv_x: Optional[jnp.ndarray] = None,
+              kv_positions: Optional[jnp.ndarray] = None,
+              use_rope: bool = True):
+    """Self- or cross-attention.
+
+    * training: ``cache=None`` -> (y, None)
+    * prefill/decode: ``cache`` given (ring buffer) -> (y, new_cache)
+    * cross-attention: ``kv_x`` = encoder output, no cache, no RoPE.
+
+    ``positions``: (S,) absolute positions of the query tokens.
+    """
+    g = n_heads // n_kv_heads
+    b, s = x.shape[0], x.shape[1]
+    q = _split_heads(linear(p["wq"], x), n_heads)
+    src = x if kv_x is None else kv_x
+    k = _split_heads(linear(p["wk"], src), n_kv_heads)
+    v = _split_heads(linear(p["wv"], src), n_kv_heads)
+
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+
+    k_pos_new = positions if kv_x is None else kv_positions
+    if use_rope and kv_x is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, k_pos_new, rope_theta)
+
+    if cache is not None:
+        alloc = cache.k.shape[1]
+        # ring write; when the (static) update is longer than the ring,
+        # only the last `alloc` tokens survive — drop the rest up front so
+        # the scatter indices stay unique.
+        kw, vw, posw, start, n_w = k, v, k_pos_new, cache.length, s
+        if s > alloc:
+            kw, vw, posw = k[:, -alloc:], v[:, -alloc:], k_pos_new[-alloc:]
+            start, n_w = cache.length + (s - alloc), alloc
+        slots = (start + jnp.arange(n_w)) % alloc
+        kc = cache.k.at[:, slots].set(kw.astype(cache.k.dtype))
+        vc = cache.v.at[:, slots].set(vw.astype(cache.v.dtype))
+        posc = cache.pos.at[slots].set(posw.astype(jnp.int32))
+        new_cache = KVCache(kc, vc, posc, cache.length + s)
+        if s > 1:
+            # prefill: attend over the full fresh K/V (early queries need
+            # keys that the ring has already evicted); the ring only keeps
+            # the tail for subsequent decode steps.
+            mask = make_mask(positions, k_pos_new, causal=causal,
+                             window=window, prefix_len=prefix_len)
+            k_use, v_use = k, v
+        else:
+            mask = make_mask(positions, posc, causal=causal, window=window,
+                             prefix_len=prefix_len)
+            k_use, v_use = kc, vc
+    else:
+        new_cache = None
+        mask = None
+        if causal or window is not None or kv_x is None:
+            mask = make_mask(positions, k_pos_new, causal=causal,
+                             window=window, prefix_len=prefix_len)
+        k_use, v_use = k, v
+
+    qg = q.reshape(b, s, n_kv_heads, g, head_dim)
+    out = _sdpa(qg, k_use, v_use, mask=mask, cap=attn_softcap)
+    out = out.reshape(b, s, n_heads * head_dim)
+    return linear(p["wo"], out), new_cache

@@ -1,0 +1,100 @@
+"""Shared neural-net building blocks (pure functional JAX, no flax).
+
+Every module is a pair of functions:
+    init_<name>(key, ...) -> params (a pytree of jnp arrays)
+    <name>(params, x, ...) -> y
+
+Parameter trees are plain nested dicts so they stay trivially
+pjit/shard_map-shardable and checkpointable through repro.persistence.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def default_dtype() -> jnp.dtype:
+    return jnp.bfloat16
+
+
+# --------------------------------------------------------------------- norm
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) so zero-init is identity
+    return (x * (1.0 + p["scale"])).astype(dt)
+
+
+# ---------------------------------------------------------------- embedding
+def init_embedding(key, vocab: int, d: int, dtype=None) -> dict:
+    dtype = dtype or default_dtype()
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied readout: (..., d) @ (vocab, d)^T -> (..., vocab)."""
+    return jnp.einsum("...d,vd->...v", x, p["table"])
+
+
+# ------------------------------------------------------------------- linear
+def init_linear(key, d_in: int, d_out: int, dtype=None) -> dict:
+    dtype = dtype or default_dtype()
+    scale = 1.0 / jnp.sqrt(d_in)
+    w = (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+    return {"w": w}
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...i,io->...o", x, p["w"])
+
+
+# ------------------------------------------------------------ gated MLP
+def init_mlp(key, d: int, d_ff: int, dtype=None) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d, d_ff, dtype),
+        "up": init_linear(k2, d, d_ff, dtype),
+        "down": init_linear(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU feed-forward (llama/gemma/mixtral family)."""
+    h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+    return linear(p["down"], h)
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return theta ** (-jnp.arange(0, head_dim, 2, jnp.float32) / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, H, Dh), positions: (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (Dh/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ softcap
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

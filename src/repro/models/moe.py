@@ -1,0 +1,127 @@
+"""Mixture-of-Experts feed-forward with capacity-based top-k dispatch.
+
+The dispatch/combine formulation (one-hot einsums with a per-expert
+capacity) is the TPU-native pattern: expert compute is a single batched
+einsum over the expert dimension, which shards cleanly as expert
+parallelism (experts on the 'model' mesh axis) or as FSDP+TP.  Active
+FLOPs are ``top_k * capacity_factor`` times one dense expert — matching
+how mixtral/phi-3.5/jamba actually run.
+
+Tokens overflowing an expert's capacity are dropped (standard practice;
+the residual stream carries them unchanged).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import default_dtype, init_linear
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, *, dtype=None) -> dict:
+    dtype = dtype or default_dtype()
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale_in = 1.0 / jnp.sqrt(d_model)
+    scale_out = 1.0 / jnp.sqrt(d_ff)
+
+    def ew(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(dtype)
+
+    return {
+        "router": init_linear(kr, d_model, n_experts, jnp.float32),
+        "gate": ew(kg, (n_experts, d_model, d_ff), scale_in),
+        "up": ew(ku, (n_experts, d_model, d_ff), scale_in),
+        "down": ew(kd, (n_experts, d_ff, d_model), scale_out),
+    }
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, *, top_k: int = 2,
+            capacity_factor: float = 1.25,
+            drop: bool = True, groups: int = 1
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss).  x: (B, S, d).
+
+    ``drop=False`` (serving): capacity covers every token, so routing is
+    batch-composition independent — decode must match teacher forcing.
+
+    ``groups`` > 1 (GShard-style local groups): tokens are split into
+    ``groups`` independent routing groups with per-group capacity.  When
+    ``groups`` equals the data-parallel shard count, every cumsum /
+    scatter / gather in the dispatch stays shard-local, so the only MoE
+    communication left is the dense TP partial-sum — without this, GSPMD
+    replicates the global dispatch buffer on every device (measured: the
+    dominant collective for mixtral/phi/jamba, EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    e = p["router"]["w"].shape[1]
+    n_total = b * s
+    if groups > 1 and n_total % groups == 0:
+        xg = x.reshape(groups, n_total // groups, d)
+        yg, aux = jax.vmap(
+            lambda xi: _moe_group(p, xi, top_k=top_k,
+                                  capacity_factor=capacity_factor,
+                                  drop=drop))(xg)
+        return yg.reshape(b, s, d), jnp.mean(aux)
+    y, aux = _moe_group(p, x.reshape(n_total, d), top_k=top_k,
+                        capacity_factor=capacity_factor, drop=drop)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_group(p: dict, xt: jnp.ndarray, *, top_k: int,
+               capacity_factor: float, drop: bool):
+    """Route one token group.  xt: (n, d)."""
+    n, d = xt.shape
+    e = p["router"]["w"].shape[1]
+    cap = n if not drop else max(int(capacity_factor * top_k * n / e), 1)
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k assignment (expert ids + gate weights per round)
+    idxs, gvals = [], []
+    remaining = probs
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)                 # (n,)
+        idxs.append(idx)
+        gvals.append(jnp.take_along_axis(probs, idx[:, None], 1)[:, 0])
+        remaining = remaining * (1.0 - jax.nn.one_hot(idx, e, dtype=remaining.dtype))
+
+    # INDEX-BASED dispatch (no one-hot matmuls: routing is gather/scatter
+    # and contributes zero FLOPs, like a real ragged MoE kernel).
+    expert_flat = jnp.concatenate(idxs)                      # (n*k,)
+    gate_flat = jnp.concatenate(gvals)                       # (n*k,)
+    token_flat = jnp.tile(jnp.arange(n), top_k)
+    # position of each assignment within its expert's buffer
+    onehot_pos = (expert_flat[:, None] ==
+                  jnp.arange(e)[None, :]).astype(jnp.int32)  # (n*k, e)
+    pos = (jnp.cumsum(onehot_pos, axis=0) - onehot_pos)[
+        jnp.arange(n * top_k), expert_flat]                  # (n*k,)
+    keep = pos < cap
+    buf = jnp.where(keep, expert_flat * cap + pos, e * cap)  # drop slot -> pad
+
+    # scatter tokens into the (e*cap [+1 pad], d) buffer
+    xe = jnp.zeros((e * cap + 1, d), xt.dtype).at[buf].set(xt[token_flat])
+    xe = xe[:-1].reshape(e, cap, d)
+
+    # expert FFN in model dtype with fp32 accumulation (MXU-native)
+    f32 = jnp.float32
+    hg = jnp.einsum("ecd,edf->ecf", xe, p["gate"],
+                    preferred_element_type=f32)
+    hu = jnp.einsum("ecd,edf->ecf", xe, p["up"],
+                    preferred_element_type=f32)
+    h = (jax.nn.silu(hg) * hu).astype(xt.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["down"],
+                    preferred_element_type=f32)              # (e, cap, d)
+
+    # combine: gather each assignment's output and weight by its gate
+    ye_pad = jnp.concatenate(
+        [ye.reshape(e * cap, d), jnp.zeros((1, d), ye.dtype)], axis=0)
+    contrib = ye_pad[buf] * (gate_flat * keep)[:, None]      # (n*k, d)
+    y = jnp.zeros((n, d), f32).at[token_flat].add(contrib)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.zeros((e,), f32).at[expert_flat].add(1.0) / (n * top_k)
+    pe = jnp.mean(probs, axis=0)                             # router mass
+    aux = e * jnp.sum(me * pe)
+    return y.astype(xt.dtype), aux

@@ -1,0 +1,197 @@
+"""Mamba2 SSD (state-space duality) mixer — pure-JAX reference.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060):
+within a chunk the recurrence is materialized as a masked attention-like
+contraction (the "dual" form, MXU-friendly); chunk boundary states are
+propagated with a ``lax.scan``.  A Pallas TPU kernel of the inner chunk
+computation lives in ``repro.kernels.ssd_scan`` and is validated against
+this module.
+
+Used by ``mamba2-1.3b`` (pure SSM) and ``jamba-1.5-large`` (1:7
+attn:mamba hybrid).  Decode keeps O(1) per-token state:
+``state: (B, H, P, N)`` plus a depthwise-conv ring buffer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (B, K-1, conv_dim) ring of last K-1 inputs
+    state: jnp.ndarray  # (B, H, P, N) SSD recurrent state (fp32)
+
+
+def init_ssd(key, d_model: int, *, d_state: int = 128, expand: int = 2,
+             head_dim: int = 64, conv_kernel: int = 4, dtype=None) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.log(jnp.exp(jnp.linspace(1e-3, 0.1, n_heads)) - 1.0)  # softplus^-1
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "in_proj": init_linear(k1, d_model, 2 * d_inner + 2 * d_state + n_heads, dtype),
+        "conv_w": (jax.random.normal(k2, (conv_kernel, conv_dim)) * 0.1).astype(dtype or jnp.bfloat16),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": dt.astype(jnp.float32),
+        "out_proj": init_linear(k3, d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 carry: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  x: (B,S,C), w: (K,C).  Returns (y, new_carry)."""
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    y = y + b.astype(y.dtype)
+    return y, xp[:, -(k - 1):]
+
+
+def _segsum(log_a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} log_a[..., k]."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 128,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   input heads
+    dt: (B, S, H)      positive step sizes
+    A:  (H,)           negative decay rates
+    B:  (B, S, N)      input->state projection (shared across heads, g=1)
+    C:  (B, S, N)      state->output projection
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if s % chunk:
+        # pad to a chunk multiple with dt=0 steps (exact identity: decay
+        # exp(0)=1 and zero input contribution), then slice the result.
+        pad = chunk - s % chunk
+        y, final = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(B, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(C, ((0, 0), (0, pad), (0, 0))),
+            chunk=chunk, init_state=init_state)
+        return y[:, :s], final
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xc = x.astype(f32).reshape(b, nc, chunk, h, p)
+    dtc = dt.astype(f32).reshape(b, nc, chunk, h)
+    Bc = B.astype(f32).reshape(b, nc, chunk, n)
+    Cc = C.astype(f32).reshape(b, nc, chunk, n)
+    dA = dtc * A[None, None, None, :]            # (b,nc,q,h) log-decay per step
+
+    # intra-chunk (dual/attention form)
+    seg = _segsum(jnp.moveaxis(dA, -1, -2))       # (b,nc,h,q,q)
+    L = jnp.exp(seg)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)          # (b,nc,q,q)
+    CB = scores[:, :, None, :, :] * L                       # (b,nc,h,q,k)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", CB, dtc, xc)
+
+    # chunk summaries: decayed input->state
+    dA_cum = jnp.cumsum(dA, axis=2)               # (b,nc,q,h)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b,nc,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        Bc, dtc * decay_to_end, xc)         # (b,nc,h,p,n)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])    # (b,nc,h)
+    s0 = (jnp.zeros((b, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st_in, dec = inp                           # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st_in
+        return new, carry                          # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,h,p,n)
+
+    # contribution of the carried-in state to each position
+    state_decay = jnp.exp(dA_cum)                  # (b,nc,q,h)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """One-token recurrence.  x:(B,H,P) dt:(B,H) B/C:(B,N) state:(B,H,P,N)."""
+    f32 = jnp.float32
+    x, dt, B, C = (t.astype(f32) for t in (x, dt, B, C))
+    decay = jnp.exp(dt * A[None, :])                       # (B,H)
+    new_state = (state * decay[..., None, None]
+                 + jnp.einsum("bh,bhp,bn->bhpn", dt, x, B))
+    y = jnp.einsum("bn,bhpn->bhp", C, new_state)
+    return y, new_state
+
+
+def ssd_block(p: dict, x: jnp.ndarray, *, d_state: int, head_dim: int,
+              chunk: int = 128, cache: Optional[SSMCache] = None):
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gate -> out_proj.
+
+    Training/prefill: cache=None, x (B,S,d).  Decode: x (B,1,d) + cache.
+    """
+    b, s, d = x.shape
+    d_inner = p["out_proj"]["w"].shape[0]
+    h = d_inner // head_dim
+    zxbcdt = linear(p["in_proj"], x)
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+
+    conv_carry = cache.conv if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_carry)
+    xbc = jax.nn.silu(xbc)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, s, h, head_dim)
+
+    if cache is None:
+        y, final = ssd_chunked(xh, dt, A, B, C, chunk=chunk)
+        new_cache = SSMCache(conv=new_conv, state=final)
+    else:
+        y1, new_state = ssd_decode_step(
+            xh[:, 0], dt[:, 0], A, B[:, 0], C[:, 0], cache.state)
+        y = y1[:, None].astype(x.dtype)
+        new_cache = SSMCache(conv=new_conv, state=new_state)
+
+    y = y + p["D"][None, None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return linear(p["out_proj"], y), new_cache
+
+
+def init_ssm_cache(batch: int, d_model: int, *, d_state: int = 128,
+                   expand: int = 2, head_dim: int = 64, conv_kernel: int = 4,
+                   dtype=jnp.bfloat16) -> SSMCache:
+    d_inner = expand * d_model
+    h = d_inner // head_dim
+    return SSMCache(
+        conv=jnp.zeros((batch, conv_kernel - 1, d_inner + 2 * d_state), dtype),
+        state=jnp.zeros((batch, h, head_dim, d_state), jnp.float32),
+    )

@@ -1,0 +1,462 @@
+"""Composable transformer stack covering all 10 assigned architectures.
+
+A model is a ``ModelConfig`` whose ``block_pattern`` is a short repeating
+tuple of layer specs; parameters of each block position are *stacked*
+across repetitions and the stack is executed with ``jax.lax.scan``.  This
+keeps the lowered HLO size O(block) instead of O(n_layers) — essential
+for compiling 95-layer models on a 512-device mesh in reasonable time.
+
+Layer spec kinds:
+    "attn"  — global self-attention (GQA + RoPE)
+    "swa"   — sliding-window self-attention (gemma local, mixtral SWA)
+    "ssm"   — Mamba2 SSD mixer
+Each spec also carries ``moe`` (expert FFN instead of dense) — dense FFN
+is skipped entirely when ``d_ff == 0`` (pure mamba2).
+
+Supported topologies:
+    * decoder-only LM (most archs)
+    * prefix-LM with stub patch embeddings (paligemma)
+    * encoder-decoder with stub frame embeddings + cross-attention
+      (seamless-m4t)
+
+Serving: the same block code runs prefill (S = prompt, writes the KV /
+SSM caches) and decode (S = 1 against the caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.attention import KVCache, attention, init_attention, init_kv_cache
+from repro.models.ssm import SSMCache, init_ssm_cache
+
+
+class LayerSpec(NamedTuple):
+    kind: str          # "attn" | "swa" | "ssm"
+    moe: bool = False
+
+
+# ---------------------------------------------------------------------
+# Activation sharding: GSPMD's propagation through a scanned while-body
+# can default to replicated (observed: full-batch f32 attention scores).
+# The launcher installs a PartitionSpec for the batch axes here and the
+# stack re-constrains the residual stream every block iteration.
+# ---------------------------------------------------------------------
+_ACT_SPEC: list = [None]
+
+
+class activation_sharding:
+    """Context manager: constrain (B, S, d) activations to this spec."""
+
+    def __init__(self, spec):
+        self.spec = spec
+
+    def __enter__(self):
+        _ACT_SPEC.append(self.spec)
+
+    def __exit__(self, *exc):
+        _ACT_SPEC.pop()
+
+
+def _constrain(h):
+    spec = _ACT_SPEC[-1]
+    if spec is None:
+        return h
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+# GShard-style MoE routing groups (see models/moe.py): the launcher sets
+# this to the data-parallel shard count so dispatch stays shard-local.
+_MOE_GROUPS: list = [1]
+
+
+class moe_groups:
+    def __init__(self, n: int):
+        self.n = max(int(n), 1)
+
+    def __enter__(self):
+        _MOE_GROUPS.append(self.n)
+
+    def __exit__(self, *exc):
+        _MOE_GROUPS.pop()
+
+
+# Cost-probe mode: execute the layer stack as a Python loop instead of
+# lax.scan.  XLA's cost_analysis counts a while-loop body once regardless
+# of trip count; the dry-run compiles shallow UNROLLED variants and
+# extrapolates linearly to the real depth (see launch/dryrun.py).
+_UNROLL: list = [False]
+
+
+class unrolled_stack:
+    def __enter__(self):
+        _UNROLL.append(True)
+
+    def __exit__(self, *exc):
+        _UNROLL.pop()
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    block_pattern: Tuple[LayerSpec, ...] = (LayerSpec("attn"),)
+    head_dim: Optional[int] = None
+    rope_theta: float = 10_000.0
+    window: Optional[int] = None          # for "swa" layers
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    qk_norm: bool = False
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    n_enc_layers: int = 0                 # > 0 => encoder-decoder
+    frontend: Optional[str] = None        # None | "audio" | "vision"
+    frontend_seq: int = 0                 # stub prefix length (vision)
+    remat: bool = True
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.block_pattern) == 0, (
+            self.name, self.n_layers, len(self.block_pattern))
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def reps(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def attn_free(self) -> bool:
+        return all(s.kind == "ssm" for s in self.block_pattern)
+
+    @property
+    def full_attention_only(self) -> bool:
+        """True when every token-mixing layer is global attention."""
+        return all(s.kind == "attn" for s in self.block_pattern)
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND roofline accounting)."""
+        leaves = jax.tree.leaves(
+            jax.eval_shape(lambda: init_params(self, jax.random.key(0))))
+        return sum(math.prod(x.shape) for x in leaves)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of n_experts)."""
+        total = self.param_count()
+        if self.n_experts == 0:
+            return total
+        n_moe = sum(s.moe for s in self.block_pattern) * self.reps
+        expert = 3 * self.d_model * self.d_ff
+        inactive = n_moe * (self.n_experts - self.top_k) * expert
+        return total - inactive
+
+
+# =========================================================================
+# init
+# =========================================================================
+
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig, cross: bool) -> dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": L.init_rmsnorm(cfg.d_model)}
+    if spec.kind in ("attn", "swa"):
+        p["attn"] = init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd,
+                                   qk_norm=cfg.qk_norm, dtype=cfg.dtype)
+    else:
+        p["ssm"] = S.init_ssd(ks[0], cfg.d_model, d_state=cfg.ssm_state,
+                              expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                              dtype=cfg.dtype)
+    if cross:
+        p["ln_cross"] = L.init_rmsnorm(cfg.d_model)
+        p["cross"] = init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.hd, dtype=cfg.dtype)
+    if cfg.d_ff > 0:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model)
+        if spec.moe:
+            p["moe"] = M.init_moe(ks[2], cfg.d_model, cfg.d_ff,
+                                  cfg.n_experts, dtype=cfg.dtype)
+        else:
+            p["ffn"] = L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def _init_stack(key, cfg: ModelConfig, n_layers: int, cross: bool,
+                pattern: Tuple[LayerSpec, ...]) -> List[dict]:
+    """One stacked pytree per block position (leading dim = reps)."""
+    reps = n_layers // len(pattern)
+    out = []
+    for j, spec in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, j), reps)
+        out.append(jax.vmap(
+            lambda k: _init_layer(k, spec, cfg, cross))(keys))
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k_emb, k_dec, k_enc = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(k_emb, cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "blocks": _init_stack(k_dec, cfg, cfg.n_layers,
+                              cross=cfg.is_enc_dec, pattern=cfg.block_pattern),
+    }
+    if cfg.is_enc_dec:
+        params["enc_blocks"] = _init_stack(
+            k_enc, cfg, cfg.n_enc_layers, cross=False,
+            pattern=(LayerSpec("attn"),))
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+    return params
+
+
+# =========================================================================
+# forward
+# =========================================================================
+
+def _apply_layer(spec: LayerSpec, p: dict, cfg: ModelConfig, h, positions, *,
+                 causal, prefix_len, cache, enc_out, enc_pos):
+    new_cache = None
+    hin = L.rmsnorm(p["ln1"], h)
+    if spec.kind in ("attn", "swa"):
+        window = cfg.window if spec.kind == "swa" else None
+        theta = cfg.rope_theta if spec.kind == "attn" else 10_000.0
+        y, new_cache = attention(
+            p["attn"], hin, positions,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            causal=causal, window=window, attn_softcap=cfg.attn_softcap,
+            rope_theta=theta, cache=cache, prefix_len=prefix_len)
+    else:
+        y, new_cache = S.ssd_block(
+            p["ssm"], hin, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            cache=cache)
+    h = h + y
+
+    if "cross" in p:
+        hin = L.rmsnorm(p["ln_cross"], h)
+        y, _ = attention(
+            p["cross"], hin, positions,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            causal=False, kv_x=enc_out, kv_positions=enc_pos, use_rope=False)
+        h = h + y
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        hin = L.rmsnorm(p["ln2"], h)
+        if spec.moe:
+            y, aux = M.moe_ffn(p["moe"], hin, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               drop=cache is None,
+                               groups=_MOE_GROUPS[-1])
+        else:
+            y = L.mlp(p["ffn"], hin)
+        h = h + y
+    return h, new_cache, aux
+
+
+def _run_stack(cfg: ModelConfig, stacked: List[dict],
+               pattern: Tuple[LayerSpec, ...], h, positions, *,
+               causal=True, prefix_len=None, caches=None,
+               enc_out=None, enc_pos=None, remat=False):
+    """Scan the repeating block over its stacked parameters."""
+    decode = caches is not None
+
+    def body(carry, xs):
+        h, aux = carry
+        ps = xs[0]
+        cs = xs[1] if decode else [None] * len(pattern)
+        new_cs = []
+        h = _constrain(h)
+        for j, spec in enumerate(pattern):
+            h, nc, a = _apply_layer(
+                spec, ps[j], cfg, h, positions, causal=causal,
+                prefix_len=prefix_len, cache=cs[j], enc_out=enc_out,
+                enc_pos=enc_pos)
+            h = _constrain(h)
+            new_cs.append(nc if decode else None)
+            aux = aux + a
+        return (h, aux), (tuple(new_cs) if decode else None)
+
+    if remat and not decode:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (stacked, caches) if decode else (stacked,)
+    if _UNROLL[-1]:
+        reps = jax.tree.leaves(stacked)[0].shape[0]
+        carry = (h, jnp.zeros((), jnp.float32))
+        ys = []
+        for i in range(reps):
+            xi = jax.tree.map(lambda x: x[i], xs)
+            carry, y = body(carry, xi)
+            ys.append(y)
+        h, aux = carry
+        new_caches = (jax.tree.map(lambda *t: jnp.stack(t), *ys)
+                      if decode else None)
+        return h, new_caches, aux
+    (h, aux), new_caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), xs)
+    return h, new_caches, aux
+
+
+def _embed_in(cfg: ModelConfig, params, tokens):
+    h = L.embed(params["embed"], tokens) * math.sqrt(cfg.d_model)
+    return h.astype(cfg.dtype)
+
+
+def _logits_out(cfg: ModelConfig, params, h):
+    h = L.rmsnorm(params["final_norm"], h)
+    logits = L.unembed(params["embed"], h).astype(jnp.float32)
+    return L.softcap(logits, cfg.final_softcap)
+
+
+def _encode(cfg: ModelConfig, params, enc_embeds):
+    """Run the (stub-fronted) encoder over precomputed frame embeddings."""
+    s_enc = enc_embeds.shape[1]
+    pos = jnp.arange(s_enc)
+    h = enc_embeds.astype(cfg.dtype)
+    h, _, _ = _run_stack(cfg, params["enc_blocks"], (LayerSpec("attn"),),
+                         h, pos, causal=False, remat=cfg.remat)
+    return L.rmsnorm(params["enc_norm"], h), pos
+
+
+def forward(cfg: ModelConfig, params: dict, batch: Dict[str, jnp.ndarray]):
+    """Training-mode forward.  Returns (logits, aux_loss).
+
+    batch keys:
+        tokens       (B, S) int32            — decoder input ids
+        enc_embeds   (B, S_enc, d) optional  — audio-frontend stub output
+        prefix_embeds(B, P, d)    optional   — vision-frontend stub output
+    """
+    tokens = batch["tokens"]
+    h = _embed_in(cfg, params, tokens)
+    prefix_len = None
+    if cfg.frontend == "vision" and "prefix_embeds" in batch:
+        pre = batch["prefix_embeds"].astype(cfg.dtype)
+        h = jnp.concatenate([pre, h], axis=1)
+        prefix_len = pre.shape[1]
+    positions = jnp.arange(h.shape[1])
+
+    enc_out = enc_pos = None
+    if cfg.is_enc_dec:
+        enc_out, enc_pos = _encode(cfg, params, batch["enc_embeds"])
+
+    h, _, aux = _run_stack(cfg, params["blocks"], cfg.block_pattern, h,
+                           positions, causal=True, prefix_len=prefix_len,
+                           enc_out=enc_out, enc_pos=enc_pos, remat=cfg.remat)
+    if prefix_len is not None:
+        h = h[:, prefix_len:]
+    return _logits_out(cfg, params, h), aux
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: Dict[str, jnp.ndarray]):
+    """Next-token cross-entropy (labels = batch['labels'], -1 = ignore).
+
+    Written in logsumexp/one-hot form (no gather over the vocab axis) so
+    the vocab-sharded logits never need to be replicated: both reductions
+    are plain sums over the sharded axis, which GSPMD partial-reduces.
+    """
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    log_z = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(lab, cfg.vocab, dtype=logits.dtype)
+    true_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = log_z - true_logit
+    loss = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    return loss + 0.01 * aux
+
+
+# =========================================================================
+# serving (prefill + decode)
+# =========================================================================
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked (reps-leading) caches, one entry per block position."""
+    caches = []
+    for spec in cfg.block_pattern:
+        if spec.kind == "ssm":
+            c = init_ssm_cache(batch, cfg.d_model, d_state=cfg.ssm_state,
+                               expand=cfg.ssm_expand,
+                               head_dim=cfg.ssm_head_dim, dtype=cfg.dtype)
+        else:
+            win = cfg.window if spec.kind == "swa" else None
+            alloc = min(max_len, win) if win else max_len
+            c = init_kv_cache(batch, alloc, cfg.n_kv_heads, cfg.hd, cfg.dtype)
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.reps,) + x.shape), c))
+    return caches
+
+
+def _serve(cfg: ModelConfig, params, h, positions, caches, *,
+           prefix_len=None, enc_out=None, enc_pos=None):
+    h, new_caches, _ = _run_stack(
+        cfg, params["blocks"], cfg.block_pattern, h, positions,
+        causal=True, prefix_len=prefix_len, caches=caches,
+        enc_out=enc_out, enc_pos=enc_pos)
+    return _logits_out(cfg, params, h), new_caches
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """Run the prompt through the model, seeding the caches."""
+    enc_out = enc_pos = None
+    if cfg.is_enc_dec:
+        enc_out, enc_pos = _encode(cfg, params, batch["enc_embeds"])
+    tokens = batch["tokens"]
+    h = _embed_in(cfg, params, tokens)
+    prefix_len = None
+    if cfg.frontend == "vision" and "prefix_embeds" in batch:
+        pre = batch["prefix_embeds"].astype(cfg.dtype)
+        h = jnp.concatenate([pre, h], axis=1)
+        prefix_len = pre.shape[1]
+    caches = init_caches(cfg, tokens.shape[0], max_len)
+    positions = jnp.arange(h.shape[1])
+    logits, caches = _serve(cfg, params, h, positions, caches,
+                            prefix_len=prefix_len,
+                            enc_out=enc_out, enc_pos=enc_pos)
+    return logits[:, -1], caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens_last, caches, *,
+                pos0=None, enc_out=None, enc_pos=None):
+    """One decode step.  tokens_last: (B, 1).  Returns (logits, caches).
+
+    ``pos0`` overrides the query position (required for attention-free
+    models, whose caches carry no position counter).
+    """
+    if pos0 is None:
+        pos0 = _cache_len(cfg, caches)
+    h = _embed_in(cfg, params, tokens_last)
+    positions = pos0 + jnp.arange(tokens_last.shape[1])
+    logits, caches = _serve(cfg, params, h, positions, caches,
+                            enc_out=enc_out, enc_pos=enc_pos)
+    return logits[:, -1], caches
+
+
+def _cache_len(cfg: ModelConfig, caches):
+    for spec, c in zip(cfg.block_pattern, caches):
+        if spec.kind != "ssm":
+            return c.length[0]
+    # attention-free model: SSM state has no position; use a counter the
+    # caller threads (decode positions only matter for RoPE in attention)
+    return jnp.zeros((), jnp.int32)

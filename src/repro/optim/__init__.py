@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, global_norm)
+from repro.optim.compress import topk_compress_grads
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "topk_compress_grads"]

@@ -1,0 +1,6 @@
+from repro.persistence.store import DurableStore, HostBufferTier
+from repro.persistence.manager import (PCSCheckpointManager, PersistScheme,
+                                       ShardState)
+
+__all__ = ["DurableStore", "HostBufferTier", "PCSCheckpointManager",
+           "PersistScheme", "ShardState"]

@@ -1,0 +1,234 @@
+"""PCS checkpoint manager: the paper's PB state machine over train-state shards.
+
+Mapping (DESIGN.md §2, Layer B):
+
+    persist (clflush+mfence)  -> checkpoint write of one sharded slice
+    PB entry Dirty/Drain/Empty-> ShardState per (shard, version)
+    ack at first switch       -> persist() returns once the host buffer
+                                 holds the payload (training resumes)
+    background drain          -> a drainer thread uploads buffer->store
+    write order               -> DurableStore rejects stale versions; the
+                                 drain queue is FIFO per shard
+    crash consistency         -> a buffer entry is freed only after the
+                                 store confirms the write (drain ack)
+    Read Forwarding           -> restore() serves from the buffer when the
+                                 newest acked version still lives there
+    write coalescing          -> a newer buffered version of a shard
+                                 supersedes an undrained older one (the
+                                 older drain is elided)
+    recovery (drain-all)      -> on restart, every surviving buffer entry
+                                 is re-drained; stale writes are rejected
+
+Schemes mirror the paper: NOPB (write-through to the store, ack on store
+fsync), PB (ack at buffer, drain immediately), PB_RF (ack at buffer,
+drain lazily above a threshold -> read forwarding + coalescing).
+"""
+from __future__ import annotations
+
+import enum
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.persistence.store import DurableStore, HostBufferTier, _deserialize, _serialize
+
+
+class PersistScheme(enum.Enum):
+    NOPB = "nopb"
+    PB = "pb"
+    PB_RF = "pb_rf"
+
+
+class ShardState(enum.Enum):
+    DIRTY = "dirty"
+    DRAIN = "drain"
+    EMPTY = "empty"
+
+
+class PCSCheckpointManager:
+    def __init__(self, buffer: HostBufferTier, store: DurableStore, *,
+                 scheme: PersistScheme = PersistScheme.PB_RF,
+                 drain_threshold: float = 0.8,
+                 drain_preset: float = 0.6,
+                 sync_drain: bool = False):
+        self.buffer = buffer
+        self.store = store
+        self.scheme = scheme
+        self.drain_threshold = drain_threshold
+        self.drain_preset = drain_preset
+        self.sync_drain = sync_drain
+        self._states: Dict[Tuple[str, int], ShardState] = {}
+        self._lru: Dict[Tuple[str, int], float] = {}
+        self._lock = threading.RLock()
+        self._q: "queue.Queue" = queue.Queue()
+        self._stop = threading.Event()
+        self.stats = {"persists": 0, "acks": 0, "drains": 0, "coalesces": 0,
+                      "restore_forwarded": 0, "restore_from_store": 0,
+                      "stalls": 0}
+        self._drainer = None
+        if not sync_drain and scheme != PersistScheme.NOPB:
+            self._drainer = threading.Thread(target=self._drain_loop,
+                                             daemon=True)
+            self._drainer.start()
+
+    # ------------------------------------------------------------- persist
+    def persist(self, shard: str, version: int, tree: Any) -> None:
+        """Make (shard, version) durable.  Returns when the persistent
+        domain holds it: store fsync under NOPB, buffer ack under PB/RF."""
+        payload = _serialize(tree)
+        self.stats["persists"] += 1
+        if self.scheme == PersistScheme.NOPB:
+            self.store.write(shard, version, payload)
+            self.stats["acks"] += 1
+            return
+
+        with self._lock:
+            # write coalescing (PB_RF): an undrained older version of the
+            # same shard is superseded — its drain is elided entirely.
+            if self.scheme == PersistScheme.PB_RF:
+                for (s, v), st in list(self._states.items()):
+                    if s == shard and st == ShardState.DIRTY and v < version:
+                        self._states[(s, v)] = ShardState.EMPTY
+                        self.buffer.drop(s, v)
+                        self.stats["coalesces"] += 1
+
+            while not self.buffer.put(shard, version, payload):
+                # buffer full: drain LRU dirty entries (stall, V-D1)
+                self.stats["stalls"] += 1
+                if not self._evict_one_locked():
+                    raise RuntimeError(
+                        "host buffer exhausted and nothing drainable")
+            self._states[(shard, version)] = ShardState.DIRTY
+            self._lru[(shard, version)] = time.monotonic()
+            self.stats["acks"] += 1
+
+            if self.scheme == PersistScheme.PB:
+                self._start_drain_locked(shard, version)
+            else:
+                self._rf_drain_down_locked()
+        if self.sync_drain:
+            self.drain_all(wait=True)
+
+    # --------------------------------------------------------------- drain
+    def _start_drain_locked(self, shard: str, version: int) -> None:
+        if self._states.get((shard, version)) != ShardState.DIRTY:
+            return
+        self._states[(shard, version)] = ShardState.DRAIN
+        self.stats["drains"] += 1
+        if self.sync_drain or self._drainer is None:
+            self._drain_one(shard, version)
+        else:
+            self._q.put((shard, version))
+
+    def _rf_drain_down_locked(self) -> None:
+        cap = self.buffer.capacity_bytes
+        if self.buffer.used_bytes <= self.drain_threshold * cap:
+            return
+        dirty = sorted(
+            [k for k, st in self._states.items() if st == ShardState.DIRTY],
+            key=lambda k: self._lru.get(k, 0.0))
+        for key in dirty:
+            if self.buffer.used_bytes <= self.drain_preset * cap:
+                break
+            self._start_drain_locked(*key)
+
+    def _evict_one_locked(self) -> bool:
+        dirty = sorted(
+            [k for k, st in self._states.items() if st == ShardState.DIRTY],
+            key=lambda k: self._lru.get(k, 0.0))
+        if not dirty:
+            # everything already draining; wait for one to complete
+            draining = [k for k, st in self._states.items()
+                        if st == ShardState.DRAIN]
+            if not draining:
+                return False
+            key = draining[0]
+            self._lock.release()
+            try:
+                for _ in range(10_000):
+                    if self._states.get(key) != ShardState.DRAIN:
+                        return True
+                    time.sleep(0.001)
+            finally:
+                self._lock.acquire()
+            return True
+        self._start_drain_locked(*dirty[0])
+        if self.sync_drain or self._drainer is None:
+            return True
+        # give the drainer a moment (ack-priority analogue)
+        self._lock.release()
+        try:
+            time.sleep(0.002)
+        finally:
+            self._lock.acquire()
+        return True
+
+    def _drain_one(self, shard: str, version: int) -> None:
+        payload = self.buffer.get(shard, version)
+        if payload is not None:
+            self.store.write(shard, version, payload)  # stale -> rejected
+        with self._lock:
+            # crash consistency: free ONLY after the store ack
+            self._states[(shard, version)] = ShardState.EMPTY
+            self.buffer.drop(shard, version)
+
+    def _drain_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                shard, version = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            self._drain_one(shard, version)
+            self._q.task_done()
+
+    def drain_all(self, wait: bool = True) -> None:
+        with self._lock:
+            for (s, v), st in list(self._states.items()):
+                if st == ShardState.DIRTY:
+                    self._start_drain_locked(s, v)
+        if wait and self._drainer is not None:
+            self._q.join()
+
+    # -------------------------------------------------------------- restore
+    def restore(self, shard: str) -> Optional[Tuple[int, Any]]:
+        """Read Forwarding: newest version, from the buffer if it still
+        lives there, else from the durable store."""
+        hit = self.buffer.newest(shard)
+        rec = self.store.read(shard)
+        if hit is not None and (rec is None or hit[0] >= rec[0]):
+            self.stats["restore_forwarded"] += 1
+            return hit[0], _deserialize(hit[1])
+        if rec is None:
+            return None
+        self.stats["restore_from_store"] += 1
+        return rec[0], _deserialize(rec[1])
+
+    # ------------------------------------------------------------- recovery
+    def crash(self) -> None:
+        """Process crash: queue (volatile routing state) is lost; buffer
+        and store survive."""
+        self._stop.set()
+        if self._drainer is not None:
+            self._drainer.join(timeout=1.0)
+        self._q = queue.Queue()
+
+    def recover(self) -> int:
+        """Reboot: treat every surviving buffer entry as Dirty and drain
+        all (Section V-D4).  Stale versions are rejected by the store.
+        Returns the number of entries re-drained."""
+        n = 0
+        for shard, version in self.buffer.entries():
+            payload = self.buffer.get(shard, version)
+            if payload is not None:
+                self.store.write(shard, version, payload)
+                n += 1
+            self.buffer.drop(shard, version)
+            self._states[(shard, version)] = ShardState.EMPTY
+        return n
+
+    def close(self) -> None:
+        self.drain_all(wait=True)
+        self._stop.set()
+        if self._drainer is not None:
+            self._drainer.join(timeout=2.0)

@@ -1,0 +1,145 @@
+"""The two persistence tiers behind the PCS checkpoint manager.
+
+``HostBufferTier``  — the cluster analogue of the switch's Persistent
+Buffer: a bounded in-memory store adjacent to the accelerator.  Durability
+of an ack is provided by K-replication across failure domains in a real
+deployment; here replication is modeled by ``replicas`` metadata so tests
+can fail individual replicas.
+
+``DurableStore``    — the PM endpoint analogue: a slow, durable object
+store (directory of files, fsync'd), with versioned, atomic writes that
+reject stale versions (the paper's PM write-order rule).
+"""
+from __future__ import annotations
+
+import io
+import os
+import pickle
+import tempfile
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+
+def _serialize(tree: Any) -> bytes:
+    buf = io.BytesIO()
+    pickle.dump(tree, buf, protocol=pickle.HIGHEST_PROTOCOL)
+    return buf.getvalue()
+
+
+def _deserialize(raw: bytes) -> Any:
+    return pickle.loads(raw)
+
+
+class HostBufferTier:
+    """Bounded host-memory buffer holding (shard, version) -> payload."""
+
+    def __init__(self, capacity_bytes: int = 1 << 30, replicas: int = 2):
+        self.capacity_bytes = capacity_bytes
+        self.replicas = replicas
+        self._data: Dict[Tuple[str, int], bytes] = {}
+        self._alive: Dict[Tuple[str, int], int] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def used_bytes(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._data.values())
+
+    def put(self, shard: str, version: int, payload: bytes) -> bool:
+        with self._lock:
+            used = sum(len(v) for v in self._data.values())
+            if used + len(payload) > self.capacity_bytes:
+                return False
+            self._data[(shard, version)] = payload
+            self._alive[(shard, version)] = self.replicas
+            return True
+
+    def get(self, shard: str, version: int) -> Optional[bytes]:
+        with self._lock:
+            if self._alive.get((shard, version), 0) <= 0:
+                return None
+            return self._data.get((shard, version))
+
+    def newest(self, shard: str) -> Optional[Tuple[int, bytes]]:
+        with self._lock:
+            versions = [v for (s, v), alive in self._alive.items()
+                        if s == shard and alive > 0 and (s, v) in self._data]
+            if not versions:
+                return None
+            v = max(versions)
+            return v, self._data[(shard, v)]
+
+    def drop(self, shard: str, version: int) -> None:
+        with self._lock:
+            self._data.pop((shard, version), None)
+            self._alive.pop((shard, version), None)
+
+    def fail_replica(self, shard: str, version: int) -> None:
+        """Simulate losing one replica of an entry (node failure)."""
+        with self._lock:
+            if (shard, version) in self._alive:
+                self._alive[(shard, version)] -= 1
+                if self._alive[(shard, version)] <= 0:
+                    self._data.pop((shard, version), None)
+
+    def entries(self):
+        with self._lock:
+            return [(s, v) for (s, v), a in self._alive.items() if a > 0]
+
+    def crash_volatile(self) -> None:
+        """Power loss of the *volatile* routing state: the buffer itself
+        survives (battery/NV analogue) — nothing to do, mirrors PB."""
+
+
+class DurableStore:
+    """Filesystem-backed durable endpoint with versioned atomic writes."""
+
+    def __init__(self, root: str, write_delay_s: float = 0.0):
+        self.root = root
+        self.write_delay_s = write_delay_s
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+        self.writes_applied = 0
+        self.stale_rejected = 0
+
+    def _path(self, shard: str) -> str:
+        return os.path.join(self.root, shard.replace("/", "_") + ".ckpt")
+
+    def version_of(self, shard: str) -> int:
+        p = self._path(shard)
+        if not os.path.exists(p):
+            return -1
+        with open(p, "rb") as f:
+            return int.from_bytes(f.read(8), "little")
+
+    def write(self, shard: str, version: int, payload: bytes) -> bool:
+        """Atomic versioned write; returns False for stale versions."""
+        if self.write_delay_s:
+            time.sleep(self.write_delay_s)
+        with self._lock:
+            if self.version_of(shard) > version:
+                self.stale_rejected += 1
+                return False
+            fd, tmp = tempfile.mkstemp(dir=self.root)
+            with os.fdopen(fd, "wb") as f:
+                f.write(version.to_bytes(8, "little"))
+                f.write(payload)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._path(shard))
+            self.writes_applied += 1
+            return True
+
+    def read(self, shard: str) -> Optional[Tuple[int, bytes]]:
+        p = self._path(shard)
+        if not os.path.exists(p):
+            return None
+        with open(p, "rb") as f:
+            raw = f.read()
+        return int.from_bytes(raw[:8], "little"), raw[8:]
+
+    def shards(self):
+        return [f[:-5] for f in os.listdir(self.root) if f.endswith(".ckpt")]

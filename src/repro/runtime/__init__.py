@@ -1,0 +1,6 @@
+from repro.runtime.failures import FailureDetector, NodeStatus
+from repro.runtime.elastic import plan_mesh
+from repro.runtime.straggler import StragglerMitigator
+
+__all__ = ["FailureDetector", "NodeStatus", "plan_mesh",
+           "StragglerMitigator"]

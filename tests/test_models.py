@@ -1,0 +1,166 @@
+"""Model-family behaviour: forward/loss sanity and the decode-vs-forward
+teacher-forcing consistency contract for every mixer family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import (LayerSpec, ModelConfig, decode_step,
+                                      forward, init_params, loss_fn, prefill)
+
+KEY = jax.random.key(0)
+B, S, V = 2, 32, 128
+
+
+def _check(cfg, batch_extra=None, serve=True):
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if batch_extra:
+        batch.update(batch_extra)
+    logits, aux = forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    loss = loss_fn(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))
+    if serve:
+        pre = dict(batch)
+        pre["tokens"] = toks[:, :S - 1]
+        _, caches = prefill(cfg, params, pre, max_len=S + 4)
+        dec, _ = decode_step(cfg, params, toks[:, S - 1:S], caches,
+                             pos0=jnp.asarray(S - 1, jnp.int32))
+        ref = logits[:, S - 1]
+        rel = (float(jnp.max(jnp.abs(dec - ref)))
+               / (float(jnp.max(jnp.abs(ref))) + 1e-6))
+        assert rel < 2e-2, f"{cfg.name}: decode/forward rel err {rel}"
+    return float(loss)
+
+
+def test_dense():
+    _check(ModelConfig("dense", n_layers=4, d_model=64, n_heads=4,
+                       n_kv_heads=2, d_ff=128, vocab=V, remat=False,
+                       dtype=jnp.float32))
+
+
+def test_local_global_softcap():
+    _check(ModelConfig("g2", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+                       d_ff=128, vocab=V, window=8, attn_softcap=50.0,
+                       final_softcap=30.0,
+                       block_pattern=(LayerSpec("swa"), LayerSpec("attn")),
+                       remat=False, dtype=jnp.float32))
+
+
+def test_five_to_one_qknorm():
+    _check(ModelConfig("g3", n_layers=6, d_model=64, n_heads=4, n_kv_heads=2,
+                       d_ff=128, vocab=V, window=8, qk_norm=True,
+                       block_pattern=tuple([LayerSpec("swa")] * 5
+                                           + [LayerSpec("attn")]),
+                       remat=False, dtype=jnp.float32))
+
+
+def test_moe():
+    _check(ModelConfig("moe", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+                       d_ff=128, vocab=V, window=8, n_experts=4,
+                       capacity_factor=8.0,
+                       block_pattern=(LayerSpec("swa", moe=True),),
+                       remat=False, dtype=jnp.float32))
+
+
+def test_pure_ssm():
+    _check(ModelConfig("ssm", n_layers=4, d_model=64, n_heads=1, n_kv_heads=1,
+                       d_ff=0, vocab=V, ssm_state=16, ssm_head_dim=16,
+                       block_pattern=(LayerSpec("ssm"),),
+                       remat=False, dtype=jnp.float32))
+
+
+def test_hybrid():
+    _check(ModelConfig("hyb", n_layers=8, d_model=64, n_heads=4, n_kv_heads=2,
+                       d_ff=128, vocab=V, n_experts=4, capacity_factor=8.0,
+                       ssm_state=16, ssm_head_dim=16,
+                       block_pattern=(LayerSpec("ssm"),
+                                      LayerSpec("ssm", moe=True),
+                                      LayerSpec("attn"),
+                                      LayerSpec("ssm", moe=True)),
+                       remat=False, dtype=jnp.float32))
+
+
+def test_enc_dec():
+    d = 64
+    _check(ModelConfig("ed", n_layers=2, d_model=d, n_heads=4, n_kv_heads=4,
+                       d_ff=128, vocab=V, n_enc_layers=2, frontend="audio",
+                       remat=False, dtype=jnp.float32),
+           batch_extra={"enc_embeds": np.random.default_rng(0)
+                        .standard_normal((B, 16, d)).astype(np.float32)},
+           serve=False)
+
+
+def test_vision_prefix():
+    d = 64
+    _check(ModelConfig("vlm", n_layers=2, d_model=d, n_heads=4, n_kv_heads=1,
+                       d_ff=128, vocab=V, frontend="vision", frontend_seq=8,
+                       remat=False, dtype=jnp.float32),
+           batch_extra={"prefix_embeds": np.random.default_rng(0)
+                        .standard_normal((B, 8, d)).astype(np.float32)},
+           serve=False)
+
+
+def test_remat_matches_no_remat():
+    kw = dict(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+              vocab=V, dtype=jnp.float32)
+    c1 = ModelConfig("r0", remat=False, **kw)
+    c2 = ModelConfig("r1", remat=True, **kw)
+    p = init_params(c1, KEY)
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, V)
+    batch = {"tokens": toks, "labels": toks}
+    l1 = loss_fn(c1, p, batch)
+    l2 = loss_fn(c2, p, batch)
+    assert abs(float(l1) - float(l2)) < 1e-5
+    g1 = jax.grad(lambda q: loss_fn(c1, q, batch))(p)
+    g2 = jax.grad(lambda q: loss_fn(c2, q, batch))(p)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+    assert err < 1e-5, err
+
+
+def test_multi_step_decode_matches_forward():
+    """Greedy decode K steps == teacher forcing on the argmax stream."""
+    cfg = ModelConfig("dec", n_layers=3, d_model=48, n_heads=3, n_kv_heads=3,
+                      d_ff=96, vocab=V, remat=False, dtype=jnp.float32)
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.key(2), (1, 8), 0, V)
+    last_logits, caches = prefill(cfg, params, {"tokens": toks}, max_len=16)
+    seq = [toks]
+    logit_steps = []
+    for i in range(4):
+        cur = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
+        seq.append(cur)
+        last_logits, caches = decode_step(cfg, params, cur, caches)
+        logit_steps.append(last_logits)
+    full = jnp.concatenate(seq, axis=1)          # (1, 12)
+    logits, _ = forward(cfg, params, {"tokens": full, "labels": full})
+    for i in range(4):
+        ref = logits[:, 8 + i]                   # logits after token 8+i
+        got = logit_steps[i]
+        rel = (float(jnp.max(jnp.abs(got - ref)))
+               / (float(jnp.max(jnp.abs(ref))) + 1e-6))
+        assert rel < 1e-3, (i, rel)
+
+
+def test_microbatched_step_matches_full_batch():
+    """Gradient accumulation over microbatches == one full-batch step."""
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamWConfig, adamw_init
+    cfg = ModelConfig("mb", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab=64, remat=False, dtype=jnp.float32)
+    opt_cfg = AdamWConfig(lr=1e-2, weight_decay=0.0)
+    params = init_params(cfg, KEY)
+    opt = adamw_init(opt_cfg, params)
+    toks = jax.random.randint(jax.random.key(5), (4, 16), 0, 64)
+    batch = {"tokens": toks, "labels": toks}
+    p1, _, m1 = make_train_step(cfg, opt_cfg)(params, opt, batch)
+    p2, _, m2 = make_train_step(cfg, opt_cfg, microbatches=2)(
+        params, opt, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert err < 1e-5, err

@@ -1,0 +1,120 @@
+"""Layer-B persistence tier: PCS semantics over checkpoint shards."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.persistence import (DurableStore, HostBufferTier,
+                               PCSCheckpointManager, PersistScheme)
+
+
+def mk(tmp_path, scheme, cap_mb=64, sync=True, delay=0.0):
+    buf = HostBufferTier(capacity_bytes=cap_mb << 20)
+    store = DurableStore(str(tmp_path / "store"), write_delay_s=delay)
+    return PCSCheckpointManager(buf, store, scheme=scheme, sync_drain=sync)
+
+
+@pytest.mark.parametrize("scheme", list(PersistScheme))
+def test_persist_restore_roundtrip(tmp_path, scheme):
+    mgr = mk(tmp_path, scheme)
+    arr = np.arange(100, dtype=np.float32)
+    mgr.persist("w", 1, arr)
+    got = mgr.restore("w")
+    assert got is not None and got[0] == 1
+    np.testing.assert_array_equal(got[1], arr)
+    mgr.close()
+
+
+def test_write_order_stale_rejected(tmp_path):
+    store = DurableStore(str(tmp_path / "s"))
+    assert store.write("x", 5, b"new")
+    assert not store.write("x", 3, b"old")     # stale must not overwrite
+    assert store.read("x") == (5, b"new")
+    assert store.stale_rejected == 1
+
+
+def test_rf_read_forwarding(tmp_path):
+    mgr = mk(tmp_path, PersistScheme.PB_RF, sync=False)
+    mgr.persist("w", 1, np.ones(4))
+    got = mgr.restore("w")
+    assert got[0] == 1
+    assert mgr.stats["restore_forwarded"] >= 1
+    mgr.close()
+
+
+def test_rf_write_coalescing(tmp_path):
+    mgr = mk(tmp_path, PersistScheme.PB_RF, sync=False)
+    for v in range(1, 6):
+        mgr.persist("w", v, np.full(4, v))
+    assert mgr.stats["coalesces"] >= 3         # undrained olds superseded
+    mgr.drain_all()
+    assert mgr.store.read("w")[0] == 5
+    mgr.close()
+
+
+def test_pb_drains_every_version(tmp_path):
+    mgr = mk(tmp_path, PersistScheme.PB, sync=True)
+    for v in range(1, 4):
+        mgr.persist("w", v, np.full(4, v))
+    assert mgr.stats["coalesces"] == 0
+    assert mgr.store.writes_applied == 3
+    mgr.close()
+
+
+def test_crash_recovery_drains_survivors(tmp_path):
+    mgr = mk(tmp_path, PersistScheme.PB_RF, sync=False)
+    mgr.persist("a", 1, np.ones(8))
+    mgr.persist("b", 1, np.zeros(8))
+    mgr.crash()                                 # drainer dies, queue lost
+    assert mgr.store.read("a") is None or mgr.store.read("b") is None \
+        or True  # drains may or may not have landed — recovery must fix it
+    n = mgr.recover()
+    assert n >= 0
+    for s in ("a", "b"):
+        assert mgr.store.read(s) is not None, f"{s} lost after recovery"
+
+
+def test_replica_failure_falls_back_to_store(tmp_path):
+    mgr = mk(tmp_path, PersistScheme.PB_RF, sync=False)
+    mgr.persist("w", 1, np.ones(4))
+    mgr.drain_all(wait=True)
+    # now kill every replica of the buffered copy
+    for (s, v) in mgr.buffer.entries():
+        for _ in range(mgr.buffer.replicas):
+            mgr.buffer.fail_replica(s, v)
+    got = mgr.restore("w")
+    assert got is not None and got[0] == 1
+    assert mgr.stats["restore_from_store"] >= 1
+    mgr.close()
+
+
+def test_capacity_stall_then_drain(tmp_path):
+    mgr = mk(tmp_path, PersistScheme.PB_RF, cap_mb=1, sync=False)
+    big = np.zeros(200_000, dtype=np.float32)   # 0.8 MB each
+    mgr.persist("a", 1, big)
+    mgr.persist("b", 1, big)                    # must evict a first
+    assert mgr.stats["stalls"] >= 1
+    assert mgr.restore("b")[0] == 1
+    mgr.close()
+
+
+def test_concurrent_persists(tmp_path):
+    mgr = mk(tmp_path, PersistScheme.PB_RF, sync=False)
+    errs = []
+
+    def worker(i):
+        try:
+            for v in range(1, 6):
+                mgr.persist(f"w{i}", v, np.full(16, v))
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert not errs
+    mgr.drain_all()
+    for i in range(4):
+        assert mgr.store.read(f"w{i}")[0] == 5
+    mgr.close()

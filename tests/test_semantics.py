@@ -1,0 +1,176 @@
+"""Property tests: the paper's three correctness criteria (Section IV-A)
+hold for the PB/PBC/PBCS state machine under arbitrary schedules."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PCSConfig, Scheme
+from repro.core.semantics import EventKind, PersistentBuffer
+
+SCHEMES = [Scheme.NOPB, Scheme.PB, Scheme.PB_RF]
+
+
+def run_schedule(scheme, n_pbe, ops, ack_order):
+    """Drive the buffer with a schedule; return (pb, acked, reads)."""
+    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=n_pbe))
+    acked = {}
+    pending = []
+    reads = []
+    version_of_payload = {}
+    ai = 0
+    for op, addr in ops:
+        if op == "persist":
+            payload = f"{addr}@{len(version_of_payload)}"
+            for e in pb.persist(addr, payload):
+                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
+                    acked[e.addr] = max(acked.get(e.addr, -1), e.version)
+                    version_of_payload[(e.addr, e.version)] = payload
+                if e.kind == EventKind.DRAIN_SENT:
+                    pending.append((e.addr, e.version))
+        elif op == "ack" and pending:
+            i = ack_order[ai % len(ack_order)] % len(pending)
+            ai += 1
+            a, v = pending.pop(i)
+            for e in pb.pm_ack(a, v):
+                if e.kind == EventKind.DRAIN_SENT:
+                    pending.append((e.addr, e.version))
+                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
+                    acked[e.addr] = max(acked.get(e.addr, -1), e.version)
+        else:
+            data, ev = pb.read(addr)
+            reads.append((addr, data, ev))
+        pb.check_invariants()
+    return pb, acked, reads
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    scheme=st.sampled_from(SCHEMES),
+    n_pbe=st.integers(2, 8),
+    ops=st.lists(st.tuples(st.sampled_from(["persist", "ack", "read"]),
+                           st.integers(0, 5)), min_size=1, max_size=120),
+    ack_order=st.lists(st.integers(0, 31), min_size=1, max_size=32),
+)
+def test_crash_consistency_and_write_order(scheme, n_pbe, ops, ack_order):
+    pb, acked, _ = run_schedule(scheme, n_pbe, ops, ack_order)
+    # crash at an arbitrary point, then recover: no acked version is lost
+    pb.crash()
+    pb.recover()
+    for addr, ver in acked.items():
+        rec = pb.pm.read(addr)
+        assert rec is not None, f"acked addr {addr} lost"
+        assert rec[0] >= ver, f"addr {addr}: pm={rec[0]} < acked={ver}"
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    scheme=st.sampled_from([Scheme.PB, Scheme.PB_RF]),
+    n_pbe=st.integers(2, 8),
+    ops=st.lists(st.tuples(st.sampled_from(["persist", "ack", "read"]),
+                           st.integers(0, 3)), min_size=1, max_size=120),
+    ack_order=st.lists(st.integers(0, 31), min_size=1, max_size=32),
+)
+def test_write_read_order(scheme, n_pbe, ops, ack_order):
+    """A read must observe the newest acked version (buffer or PM)."""
+    pb, acked, reads = run_schedule(scheme, n_pbe, ops, ack_order)
+    # replay: after the final state, reads of every acked address return
+    # the newest acked payload from somewhere in the persistent domain
+    for addr, ver in acked.items():
+        data, ev = pb.read(addr)
+        assert data is not None
+        assert data == f"{addr}@" + data.split("@")[1]  # well-formed
+        # version check: the entry served is >= newest acked
+        assert ev.version >= ver or ev.kind == EventKind.READ_FROM_PM
+
+
+def test_nopb_is_write_through():
+    pb = PersistentBuffer(PCSConfig(scheme=Scheme.NOPB, n_pbe=4))
+    for i in range(10):
+        pb.persist(i % 3, f"v{i}")
+    assert pb.pm.writes_applied == 10
+    assert all(e.state.name == "EMPTY" for e in pb.entries)
+
+
+def test_coalescing_only_in_rf():
+    for scheme, expect in [(Scheme.PB, 0), (Scheme.PB_RF, 1)]:
+        pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=4))
+        pb.persist(1, "a")
+        evs = pb.persist(1, "b")
+        coal = [e for e in evs if e.kind == EventKind.COALESCED]
+        assert len(coal) == expect, scheme
+
+
+def test_rf_keeps_entries_for_forwarding():
+    pb = PersistentBuffer(PCSConfig(scheme=Scheme.PB_RF, n_pbe=8))
+    pb.persist(1, "a")
+    data, ev = pb.read(1)
+    assert ev.kind == EventKind.READ_FROM_PB and data == "a"
+
+
+def test_pb_drains_immediately():
+    pb = PersistentBuffer(PCSConfig(scheme=Scheme.PB, n_pbe=8))
+    evs = pb.persist(1, "a")
+    assert any(e.kind == EventKind.DRAIN_SENT for e in evs)
+
+
+def test_stall_when_all_draining():
+    pb = PersistentBuffer(PCSConfig(scheme=Scheme.PB, n_pbe=2))
+    pb.persist(1, "a")
+    pb.persist(2, "b")
+    evs = pb.persist(3, "c")  # both entries in Drain, no Empty
+    assert any(e.kind == EventKind.STALLED for e in evs)
+    # ack frees an entry and retries the stalled write
+    evs = pb.pm_ack(1, 1)
+    assert any(e.kind == EventKind.PERSIST_ACK and e.addr == 3 for e in evs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_pbe=st.integers(4, 16),
+    addrs=st.lists(st.integers(0, 30), min_size=1, max_size=200),
+)
+def test_rf_threshold_preset_invariant(n_pbe, addrs):
+    """After any persist under PB_RF, the Dirty count never exceeds the
+    drain threshold (the drain-down runs to the preset, Section V-D1)."""
+    from repro.core.params import PBEState
+    cfg = PCSConfig(scheme=Scheme.PB_RF, n_pbe=n_pbe)
+    pb = PersistentBuffer(cfg)
+    for i, a in enumerate(addrs):
+        evs = pb.persist(a, f"v{i}")
+        dirty = sum(1 for e in pb.entries if e.state == PBEState.DIRTY)
+        assert dirty <= max(cfg.threshold_count, cfg.preset_count + 1), (
+            dirty, cfg.threshold_count)
+        pb.check_invariants()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    scheme=st.sampled_from([Scheme.PB, Scheme.PB_RF]),
+    ops=st.lists(st.tuples(st.booleans(), st.integers(0, 6)),
+                 min_size=1, max_size=150),
+)
+def test_reads_never_return_stale_after_ack(scheme, ops):
+    """Write-read order: a read after an acked persist returns that
+    version's payload or newer, never an older one."""
+    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=4))
+    newest = {}
+    pending = []
+    for is_persist, addr in ops:
+        if is_persist:
+            for e in pb.persist(addr, None):
+                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
+                    newest[e.addr] = max(newest.get(e.addr, -1), e.version)
+                if e.kind == EventKind.DRAIN_SENT:
+                    pending.append((e.addr, e.version))
+        elif pending:
+            a, v = pending.pop(0)   # in-order acks (FIFO channel)
+            for e in pb.pm_ack(a, v):
+                if e.kind == EventKind.DRAIN_SENT:
+                    pending.append((e.addr, e.version))
+                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
+                    newest[e.addr] = max(newest.get(e.addr, -1), e.version)
+        if addr in newest:
+            _, ev = pb.read(addr)
+            assert ev.version >= newest[addr], (
+                scheme, addr, ev.version, newest[addr])

@@ -1,0 +1,122 @@
+"""Timed PCS simulator: latency composition, scheme behaviour, sweeps."""
+import numpy as np
+import pytest
+
+from repro.core import (LatencyProfile, Op, PCSConfig, Scheme, Trace,
+                        make_trace, simulate, simulate_sweep)
+
+
+def tiny_trace(n_persists=64, n_reads=64, gap=2000.0, n_cores=1, addr_stride=1):
+    ops, addrs, gaps = [], [], []
+    for i in range(n_persists):
+        ops.append(int(Op.PERSIST))
+        addrs.append(i * addr_stride)
+        gaps.append(gap)
+    for i in range(n_reads):
+        ops.append(int(Op.PM_READ))
+        addrs.append((1 << 20) + i)
+        gaps.append(gap)
+    C = n_cores
+    return Trace(ops=np.tile(np.array(ops, np.int32), (C, 1)),
+                 addrs=np.tile(np.array(addrs, np.int32), (C, 1)),
+                 gaps=np.tile(np.array(gaps, np.float32), (C, 1)),
+                 lengths=np.full((C,), len(ops), np.int32), name="tiny")
+
+
+def test_nopb_latency_composition():
+    """Uncongested persist = 2x one-way + NVM write; read = 2x ow + read."""
+    lat = LatencyProfile()
+    cfg = PCSConfig(scheme=Scheme.NOPB, n_switches=1, latency=lat)
+    res = simulate(tiny_trace(), cfg)
+    ow = lat.oneway_cpu_pm(1)
+    assert abs(res.persist_lat_ns - (2 * ow + lat.nvm_write_ns)) < 1.0
+    assert abs(res.read_lat_ns - (2 * ow + lat.nvm_read_ns)) < 1.0
+
+
+def test_pb_ack_at_switch():
+    """Uncongested PB persist completes at the first switch."""
+    lat = LatencyProfile()
+    cfg = PCSConfig(scheme=Scheme.PB, n_switches=1, latency=lat)
+    res = simulate(tiny_trace(), cfg)
+    expect = (2 * lat.oneway_cpu_sw1() + lat.pbc_proc_ns
+              + lat.pb_tag_ns_for(16) + lat.pb_data_ns_for(16))
+    assert abs(res.persist_lat_ns - expect) < 1.0
+    assert res.persist_lat_ns < 0.6 * (2 * lat.oneway_cpu_pm(1)
+                                       + lat.nvm_write_ns)
+
+
+def test_persist_latency_grows_with_switch_depth():
+    """Fig 1: NoPB persist latency grows with chain depth; PB stays flat."""
+    lats_nopb, lats_pb = [], []
+    for n_sw in (1, 2, 3):
+        tr = tiny_trace()
+        lats_nopb.append(simulate(
+            tr, PCSConfig(scheme=Scheme.NOPB, n_switches=n_sw)).persist_lat_ns)
+        lats_pb.append(simulate(
+            tr, PCSConfig(scheme=Scheme.PB, n_switches=n_sw)).persist_lat_ns)
+    assert lats_nopb[0] < lats_nopb[1] < lats_nopb[2]
+    assert lats_pb[2] - lats_pb[0] < 0.2 * (lats_nopb[2] - lats_nopb[0])
+
+
+def test_rf_coalesces_hot_writes():
+    tr = tiny_trace(n_persists=64, addr_stride=0)   # same line repeatedly
+    res = simulate(tr, PCSConfig(scheme=Scheme.PB_RF))
+    assert res.coalesces > 40
+    assert res.pm_writes < 20
+
+
+def test_pb_never_coalesces():
+    tr = tiny_trace(n_persists=64, addr_stride=0)
+    res = simulate(tr, PCSConfig(scheme=Scheme.PB))
+    assert res.coalesces == 0
+    assert res.pm_writes == 64
+
+
+def test_rf_read_hits_recent_persists():
+    ops = []
+    for i in range(32):
+        ops.append((int(Op.PERSIST), i % 4))
+        ops.append((int(Op.PM_READ), i % 4))
+    tr = Trace(ops=np.array([[o for o, _ in ops]], np.int32),
+               addrs=np.array([[a for _, a in ops]], np.int32),
+               gaps=np.full((1, len(ops)), 500.0, np.float32),
+               lengths=np.array([len(ops)], np.int32), name="hot")
+    res = simulate(tr, PCSConfig(scheme=Scheme.PB_RF))
+    assert res.read_hit_rate > 0.9
+
+
+def test_sweep_matches_individual():
+    tr = make_trace("radiosity", persist_budget=3000)
+    cfgs = [PCSConfig(scheme=Scheme.PB, n_pbe=n) for n in (8, 16, 32)]
+    sweep = simulate_sweep(tr, cfgs)
+    for cfg, r in zip(cfgs, sweep):
+        ri = simulate(tr, cfg, max_pbe=32)
+        assert abs(r.runtime_ns - ri.runtime_ns) / ri.runtime_ns < 1e-9
+
+
+@pytest.mark.parametrize("name", ["radiosity", "cholesky", "fft"])
+def test_workload_scheme_ordering(name):
+    """Qualitative paper signatures on reduced-budget traces."""
+    tr = make_trace(name, persist_budget=4000)
+    res = {s: simulate(tr, PCSConfig(scheme=s))
+           for s in (Scheme.NOPB, Scheme.PB, Scheme.PB_RF)}
+    nopb, pb, rf = (res[s] for s in (Scheme.NOPB, Scheme.PB, Scheme.PB_RF))
+    # persist latency reduced by PB for every workload (Fig 6a)
+    assert pb.persist_lat_ns < 0.8 * nopb.persist_lat_ns
+    if name == "radiosity":
+        assert rf.read_hit_rate > 0.3                  # Fig 7a
+        assert rf.coalesce_rate > 0.3                  # Fig 7b
+        assert nopb.runtime_ns / pb.runtime_ns > 1.05  # Fig 5
+    if name == "cholesky":
+        assert rf.read_hit_rate < 0.1
+        assert rf.coalesce_rate < 0.05
+        assert abs(nopb.runtime_ns / pb.runtime_ns - 1.0) < 0.15
+    if name == "fft":
+        assert 0.05 < rf.read_hit_rate < 0.45
+        assert rf.coalesce_rate < 0.15
+
+
+def test_trace_generators_respect_budget():
+    for name in ("radiosity", "fft", "cholesky"):
+        tr = make_trace(name, persist_budget=2000)
+        assert tr.counts()["persist"] <= 2000
