@@ -1,0 +1,19 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test bench-smoke bench calibrate
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# each figure on a tiny trace (<60s); writes BENCH_engine.json
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --smoke
+
+# full paper-budget benchmark CSV
+bench:
+	$(PYTHON) -m benchmarks.run
+
+calibrate:
+	$(PYTHON) -m benchmarks._calibrate

@@ -1,36 +1,85 @@
 """Shared simulation cache for the per-figure benchmarks.
 
-Every figure consumes the same (workload x scheme) grid; this module
-runs each cell once per process and caches the SimResult.
+Every figure consumes the same (workload x scheme) grid.  Since the
+engine traces the scheme id, the whole grid — all seven workloads under
+NoPB/PB/PB_RF — runs as ONE compiled program via ``simulate_grid``; this
+module runs it once per process, caches the per-cell results, and
+records the grid wall time / compile count for BENCH_engine.json.
 """
 from __future__ import annotations
 
-import functools
 import os
 import time
 from typing import Dict, Tuple
 
-from repro.core import PCSConfig, Scheme, WORKLOADS, make_trace, simulate
+from repro.core import PCSConfig, Scheme, WORKLOADS, make_trace
+from repro.core.engine import compile_count, simulate_grid
 
 # full paper budget by default; BENCH_QUICK=1 runs a reduced grid fast
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
 BUDGET = 8_000 if QUICK else 100_000
 
+SCHEMES = (Scheme.NOPB, Scheme.PB, Scheme.PB_RF)
+
+# smoke mode: tiny traces, small shape buckets, sub-minute total runtime
+SMOKE = False
+_SMOKE_BUDGET = 600
+_SMOKE_BUCKET = 2048
+_SMOKE_TRACE_KW = {"fft": {"m": 9}}
+
 _traces: Dict[str, object] = {}
 _results: Dict[Tuple[str, Scheme, int], object] = {}
+# grid telemetry for BENCH_engine.json: wall time, compile count, cells
+grid_metrics: Dict[str, float] = {}
+
+
+def set_smoke() -> None:
+    """Switch to tiny traces; must be called before the first trace()."""
+    global SMOKE, BUDGET
+    assert not _traces, "set_smoke() must run before any trace is built"
+    SMOKE = True
+    BUDGET = _SMOKE_BUDGET
+
+
+def bucket() -> int:
+    return _SMOKE_BUCKET if SMOKE else 16384
 
 
 def trace(name: str):
     if name not in _traces:
-        _traces[name] = make_trace(name, persist_budget=BUDGET)
+        kw = dict(_SMOKE_TRACE_KW.get(name, {})) if SMOKE else {}
+        _traces[name] = make_trace(name, persist_budget=BUDGET, **kw)
     return _traces[name]
+
+
+def _ensure_grid() -> None:
+    """Run the full mixed-scheme {workload x scheme} grid once."""
+    if grid_metrics:
+        return
+    names = list(WORKLOADS)
+    traces = [trace(n) for n in names]
+    configs = [PCSConfig(scheme=s) for s in SCHEMES]
+    c0, t0 = compile_count(), time.time()
+    cells = simulate_grid(traces, configs, bucket=bucket())
+    grid_metrics.update(
+        grid_wall_s=round(time.time() - t0, 3),
+        grid_compiles=compile_count() - c0,
+        grid_cells=len(names) * len(SCHEMES),
+    )
+    for i, n in enumerate(names):
+        for j, s in enumerate(SCHEMES):
+            _results[(n, s, 16)] = cells[i][j]
 
 
 def result(name: str, scheme: Scheme, n_pbe: int = 16):
     key = (name, scheme, n_pbe)
     if key not in _results:
-        _results[key] = simulate(trace(name),
-                                 PCSConfig(scheme=scheme, n_pbe=n_pbe))
+        if n_pbe == 16 and name in WORKLOADS:
+            _ensure_grid()
+        else:
+            _results[key] = simulate_grid(
+                [trace(name)], [PCSConfig(scheme=scheme, n_pbe=n_pbe)],
+                bucket=bucket())[0][0]
     return _results[key]
 
 

@@ -8,13 +8,19 @@ Latency (not throughput) measurement: a low-intensity FFT-like
 persist/read mix (1:1, one core, 2 us of compute between operations) so
 device queueing does not mask the path composition — the paper's Fig 1
 is likewise a latency figure, normalized to local PM.
+
+The whole depth sweep — NoPB at every depth plus PB at every depth with
+a switch — is one mixed-scheme ``simulate_grid`` call: switch depth
+enters through the traced one-way latencies and the scheme is a traced
+scalar, so the figure costs a single XLA compilation.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Op, PCSConfig, Scheme, Trace, simulate
+from repro.core import Op, PCSConfig, Scheme, Trace, simulate_grid
 
+from benchmarks import _shared
 from benchmarks._shared import emit
 
 
@@ -32,19 +38,21 @@ def _probe_trace(n_ops: int = 2000, gap: float = 2000.0) -> Trace:
 
 
 def run(depths=(0, 1, 2, 3)) -> list:
-    tr = _probe_trace()
-    rows = []
-    base = None
+    tr = _probe_trace(n_ops=200 if _shared.SMOKE else 2000)
+    labels, configs = [], []
     for n_sw in depths:
-        nopb = simulate(tr, PCSConfig(scheme=Scheme.NOPB, n_switches=n_sw))
-        if base is None:
-            base = nopb.persist_lat_ns
-        rows.append((f"fig1_nopb_n{n_sw}", round(nopb.persist_lat_ns, 1),
-                     f"norm={nopb.persist_lat_ns / base:.2f}x"))
+        labels.append(("nopb", n_sw))
+        configs.append(PCSConfig(scheme=Scheme.NOPB, n_switches=n_sw))
         if n_sw > 0:
-            pb = simulate(tr, PCSConfig(scheme=Scheme.PB, n_switches=n_sw))
-            rows.append((f"fig1_pb_n{n_sw}", round(pb.persist_lat_ns, 1),
-                         f"norm={pb.persist_lat_ns / base:.2f}x"))
+            labels.append(("pb", n_sw))
+            configs.append(PCSConfig(scheme=Scheme.PB, n_switches=n_sw))
+    cells = simulate_grid([tr], configs, bucket=_shared.bucket())[0]
+    base = next(r.persist_lat_ns for (k, n), r in zip(labels, cells)
+                if k == "nopb" and n == depths[0])
+    rows = []
+    for (key, n_sw), r in zip(labels, cells):
+        rows.append((f"fig1_{key}_n{n_sw}", round(r.persist_lat_ns, 1),
+                     f"norm={r.persist_lat_ns / base:.2f}x"))
     return rows
 
 

@@ -1,5 +1,9 @@
 """Fig 5: speedup of PB and PB_RF over NoPB per workload (+ the paper's
-headline 12% / 15% means)."""
+headline 12% / 15% means).
+
+Cells come from the shared one-program {workload x scheme} grid
+(`_shared.result` -> `simulate_grid`): one XLA compilation for all 21
+cells, scheme traced."""
 from __future__ import annotations
 
 from repro.core import Scheme

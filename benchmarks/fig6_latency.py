@@ -1,5 +1,8 @@
 """Fig 6: persist and read latencies (from LLC) per scheme, normalized to
-NoPB.  Paper: PB cuts persist latency 43-56%; read latency rises 2.5-12%."""
+NoPB.  Paper: PB cuts persist latency 43-56%; read latency rises 2.5-12%.
+
+Cells come from the shared one-program {workload x scheme} grid
+(`_shared.result` -> `simulate_grid`)."""
 from __future__ import annotations
 
 from repro.core import Scheme

@@ -1,6 +1,9 @@
 """Fig 7: PB_RF read-hit rate and write-coalescing rate per workload.
 Paper: radiosity ~51% hit / ~50% coalesce; cholesky & volrend ~1%; FFT
-coalescing 2.8%; others ~20%."""
+coalescing 2.8%; others ~20%.
+
+Cells come from the shared one-program {workload x scheme} grid
+(`_shared.result` -> `simulate_grid`)."""
 from __future__ import annotations
 
 from repro.core import Scheme

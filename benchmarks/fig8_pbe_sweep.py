@@ -1,29 +1,42 @@
 """Fig 8: speedup vs PBE count for radiosity / cholesky / FFT.
 
-One vmap per (workload, scheme): the PBE count enters as traced tag/data
-latencies (CACTI trend) and a traced live-entry bound.
+The whole figure — three workloads x {NoPB baseline, PB/PB_RF at every
+PBE count} — is ONE ``simulate_grid`` call: the PBE count enters as
+traced tag/data latencies (CACTI trend) and a traced live-entry bound,
+and the scheme id is traced too, so the mixed-scheme grid shares a
+single compiled program.
 """
 from __future__ import annotations
 
-from repro.core import PCSConfig, Scheme, simulate, simulate_sweep
+from repro.core import PCSConfig, Scheme, simulate_grid
 
+from benchmarks import _shared
 from benchmarks._shared import emit, trace
 
 COUNTS = (8, 16, 32, 64, 128)
+# smoke keeps max_pbe small: the RF drain policy does O(max_pbe^2) work
+# per step, and the vmapped grid pays it for every cell
+SMOKE_COUNTS = (8, 16, 32)
 NAMES = ("radiosity", "cholesky", "fft")
 
 
 def run() -> list:
+    counts = SMOKE_COUNTS if _shared.SMOKE else COUNTS
+    traces = [trace(n) for n in NAMES]
+    configs = [PCSConfig(scheme=Scheme.NOPB)]
+    keys = [("nopb", 16)]
+    for key, scheme in (("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF)):
+        for n in counts:
+            configs.append(PCSConfig(scheme=scheme, n_pbe=n))
+            keys.append((key, n))
+    cells = simulate_grid(traces, configs, bucket=_shared.bucket())
     rows = []
-    for name in NAMES:
-        tr = trace(name)
-        nopb = simulate(tr, PCSConfig(scheme=Scheme.NOPB))
-        for key, scheme in (("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF)):
-            cfgs = [PCSConfig(scheme=scheme, n_pbe=n) for n in COUNTS]
-            for n, r in zip(COUNTS, simulate_sweep(tr, cfgs)):
-                s = 100.0 * (nopb.runtime_ns / r.runtime_ns - 1.0)
-                rows.append((f"fig8_{key}_{name}_pbe{n}", round(s, 1),
-                             "speedup_%"))
+    for name, row in zip(NAMES, cells):
+        nopb = row[0]
+        for (key, n), r in zip(keys[1:], row[1:]):
+            s = 100.0 * (nopb.runtime_ns / r.runtime_ns - 1.0)
+            rows.append((f"fig8_{key}_{name}_pbe{n}", round(s, 1),
+                         "speedup_%"))
     return rows
 
 

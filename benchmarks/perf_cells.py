@@ -1,14 +1,21 @@
 """Re-run the §Perf hillclimbed cells: baseline vs optimized layout.
 
-    PYTHONPATH=src python -m benchmarks.perf_cells          # ~10 min (compiles)
+    PYTHONPATH=src python -m benchmarks.perf_cells             # both sections
+    PYTHONPATH=src python -m benchmarks.perf_cells --pcs       # engine only
+    PYTHONPATH=src python -m benchmarks.perf_cells --roofline  # roofline only
 
-Prints the roofline terms for each of the three chosen cells under the
-baseline layout and under the winning layout from EXPERIMENTS.md §Perf,
-so the before/after table is reproducible from source.
+Two sections:
+  * ``pcs_grid_cells`` — the PCS engine hot path: per-cell ``simulate``
+    loop vs the one-program ``simulate_grid`` on the same mixed-scheme
+    {workload x scheme} grid, with wall times and XLA compile counts.
+  * roofline terms for the three launch/dryrun cells under the baseline
+    layout and the winning layout from EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
+import argparse
 import os
+import time
 
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512")
@@ -21,8 +28,38 @@ CELLS = [
     ("mixtral-8x7b", "prefill_32k", {}, 1),        # negative result: baseline
 ]
 
+PCS_NAMES = ("radiosity", "cholesky", "raytrace")
+PCS_BUDGET = 2_000
+PCS_BUCKET = 4096
 
-def main() -> None:
+
+def pcs_grid_cells() -> None:
+    """Sequential per-cell simulate vs the batched one-program grid."""
+    from repro.core import PCSConfig, Scheme, make_trace
+    from repro.core.engine import compile_count, simulate, simulate_grid
+
+    traces = [make_trace(n, persist_budget=PCS_BUDGET) for n in PCS_NAMES]
+    configs = [PCSConfig(scheme=s)
+               for s in (Scheme.NOPB, Scheme.PB, Scheme.PB_RF)]
+
+    print("name,wall_s,compiles,cells")
+    c0, t0 = compile_count(), time.time()
+    seq = [[simulate(tr, cfg, bucket=PCS_BUCKET) for cfg in configs]
+           for tr in traces]
+    print(f"pcs_sequential,{time.time() - t0:.3f},{compile_count() - c0},"
+          f"{len(traces) * len(configs)}", flush=True)
+
+    c0, t0 = compile_count(), time.time()
+    grid = simulate_grid(traces, configs, bucket=PCS_BUCKET)
+    print(f"pcs_grid,{time.time() - t0:.3f},{compile_count() - c0},"
+          f"{len(traces) * len(configs)}", flush=True)
+
+    worst = max(abs(a.runtime_ns - b.runtime_ns) / max(b.runtime_ns, 1.0)
+                for ra, rb in zip(seq, grid) for a, b in zip(ra, rb))
+    print(f"pcs_grid_vs_seq_rel_err,{worst:.3g},-,-", flush=True)
+
+
+def roofline_cells() -> None:
     from repro.launch import sharding as sh
     from repro.launch import dryrun as dr
 
@@ -42,6 +79,20 @@ def main() -> None:
                 sh.FLAGS.clear()
                 sh.FLAGS.update(saved)
                 dr.MICROBATCHES[0] = 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    section = ap.add_mutually_exclusive_group()
+    section.add_argument("--pcs", action="store_true",
+                         help="PCS engine cells only")
+    section.add_argument("--roofline", action="store_true",
+                         help="roofline cells only")
+    args = ap.parse_args()
+    if not args.roofline:
+        pcs_grid_cells()
+    if not args.pcs:
+        roofline_cells()
 
 
 if __name__ == "__main__":

@@ -2,26 +2,72 @@
 
     PYTHONPATH=src python -m benchmarks.run            # full paper budget
     BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --smoke    # tiny traces, <60s
+
+``--smoke`` runs each figure script on a tiny trace and writes
+machine-readable ``BENCH_engine.json`` (per-figure wall time, the shared
+grid's wall time and XLA compile count) so the engine perf trajectory is
+tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
-from benchmarks import (ckpt_tier_bench, fig1_switch_depth, fig5_speedup,
-                        fig6_latency, fig7_rf_rates, fig8_pbe_sweep,
-                        kernel_bench)
-from benchmarks._shared import emit
+from benchmarks import _shared
 
 
 def main() -> None:
-    rows = []
-    for mod in (fig1_switch_depth, fig5_speedup, fig6_latency, fig7_rf_rates,
-                fig8_pbe_sweep, ckpt_tier_bench, kernel_bench):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny traces; write BENCH_engine.json")
+    # Only smoke runs write BENCH_engine.json by default: the tracked
+    # perf trajectory must stay budget-comparable across PRs.  A full
+    # run writes a report only when --out is passed explicitly.
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None and args.smoke:
+        args.out = "BENCH_engine.json"
+    if args.smoke:
+        _shared.set_smoke()
+
+    # imported late so smoke mode is set before any trace is built
+    from benchmarks import (ckpt_tier_bench, fig1_switch_depth, fig5_speedup,
+                            fig6_latency, fig7_rf_rates, fig8_pbe_sweep,
+                            kernel_bench)
+    from repro.core.engine import compile_count
+
+    figures = (fig1_switch_depth, fig5_speedup, fig6_latency, fig7_rf_rates,
+               fig8_pbe_sweep)
+    extras = () if args.smoke else (ckpt_tier_bench, kernel_bench)
+
+    rows, timings = [], {}
+    t_start = time.time()
+    for mod in figures + extras:
+        name = mod.__name__.split(".")[-1]
         t0 = time.time()
         rows.extend(mod.run())
-        rows.append((f"_elapsed_{mod.__name__.split('.')[-1]}",
-                     round(time.time() - t0, 1), "seconds"))
-    emit(rows)
+        timings[name] = round(time.time() - t0, 2)
+        rows.append((f"_elapsed_{name}", timings[name], "seconds"))
+    _shared.emit(rows)
+
+    if args.out is None:
+        return
+    report = {
+        "smoke": args.smoke,
+        "budget": _shared.BUDGET,
+        "bucket": _shared.bucket(),
+        "total_wall_s": round(time.time() - t_start, 2),
+        "compile_count": compile_count(),
+        "figures_wall_s": timings,
+        # telemetry of the shared {workload x scheme} one-program grid
+        **{f"shared_{k}": v for k, v in _shared.grid_metrics.items()},
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}")
 
 
 if __name__ == "__main__":

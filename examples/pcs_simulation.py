@@ -1,14 +1,16 @@
 """Reproduce the paper's headline numbers programmatically.
 
-Runs the radiosity (best case) and cholesky (worst case) workloads under
-all three schemes and prints speedups, persist/read latencies and the RF
-hit/coalesce rates (Figs 5-7).
+Runs the selected workloads under all three schemes and prints speedups,
+persist/read latencies and the RF hit/coalesce rates (Figs 5-7).  The
+whole {workload x scheme} grid — schemes mixed — is ONE ``simulate_grid``
+call and therefore one XLA compilation: the scheme id is a traced
+scalar, not a compile-time static.
 
     PYTHONPATH=src python examples/pcs_simulation.py [--quick]
 """
 import argparse
 
-from repro.core import PCSConfig, Scheme, make_trace, simulate
+from repro.core import PCSConfig, Scheme, make_trace, simulate_grid
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -18,13 +20,13 @@ if __name__ == "__main__":
     args = ap.parse_args()
     budget = 8_000 if args.quick else 100_000
 
-    for name in args.workloads:
-        tr = make_trace(name, persist_budget=budget)
-        res = {s: simulate(tr, PCSConfig(scheme=s))
-               for s in (Scheme.NOPB, Scheme.PB, Scheme.PB_RF)}
-        nopb, pb, rf = (res[s] for s in (Scheme.NOPB, Scheme.PB,
-                                         Scheme.PB_RF))
-        print(f"\n=== {name} ({tr.total_ops} ops) ===")
+    schemes = (Scheme.NOPB, Scheme.PB, Scheme.PB_RF)
+    traces = [make_trace(n, persist_budget=budget) for n in args.workloads]
+    grid = simulate_grid(traces, [PCSConfig(scheme=s) for s in schemes])
+
+    for tr, row in zip(traces, grid):
+        nopb, pb, rf = row
+        print(f"\n=== {tr.name} ({tr.total_ops} ops) ===")
         print(f"  speedup:   PB {100*(nopb.runtime_ns/pb.runtime_ns-1):+.1f}%"
               f"   PB_RF {100*(nopb.runtime_ns/rf.runtime_ns-1):+.1f}%")
         print(f"  persist:   NoPB {nopb.persist_lat_ns:.0f}ns -> "

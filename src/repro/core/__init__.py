@@ -1,21 +1,24 @@
 """PCS core: the paper's contribution (Persistent CXL Switch).
 
-Two coupled layers:
+Coupled layers (DESIGN.md §2):
   * ``semantics`` — the exact PB/PBC/PBCS state machine (correctness
     oracle; also reused by the cluster persistence tier).
-  * ``simulator`` — the timed, jit/vmap-able queueing simulator that
-    replaces the paper's gem5 evaluation.
+  * ``engine``    — the timed, jit/vmap-able queueing engine that
+    replaces the paper's gem5 evaluation; ``simulate_grid`` runs the
+    whole {trace x config x scheme} grid as one XLA program.  Both read
+    their drain-policy definitions from ``engine.policy``.
 """
+from repro.core.engine import (SimResult, simulate, simulate_grid,
+                               simulate_sweep)
 from repro.core.params import (LatencyProfile, Op, PBEState, PCSConfig,
                                Scheme)
 from repro.core.semantics import (Event, EventKind, PersistentBuffer,
                                   PersistentMemory)
-from repro.core.simulator import SimResult, simulate, simulate_sweep
 from repro.core.traces import Trace, WORKLOADS, make_trace
 
 __all__ = [
     "LatencyProfile", "Op", "PBEState", "PCSConfig", "Scheme",
     "Event", "EventKind", "PersistentBuffer", "PersistentMemory",
-    "SimResult", "simulate", "simulate_sweep",
+    "SimResult", "simulate", "simulate_grid", "simulate_sweep",
     "Trace", "WORKLOADS", "make_trace",
 ]

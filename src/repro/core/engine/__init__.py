@@ -1,0 +1,22 @@
+"""Composable timed PCS engine (DESIGN.md §3).
+
+Replaces the monolithic ``_simulate`` scan with individually testable
+pieces:
+
+  * ``state``    — machine-state pytree, stats layout, config lowering
+  * ``channels`` — PM bank + PBC resource model (next-free scalars)
+  * ``policy``   — allocation, victim selection, drain policies; the one
+                   home of the scheme/threshold constants shared with
+                   the untimed oracle and the checkpoint tier
+  * ``handlers`` — per-op handlers with traced-scheme ``lax.switch``
+  * ``step``     — clock-merge step driver + the scan (compile counter)
+  * ``grid``     — ``simulate_grid`` batched front-end and the
+                   ``simulate`` / ``simulate_sweep`` compat wrappers
+"""
+from repro.core.engine.grid import (simulate, simulate_grid,  # noqa: F401
+                                    simulate_sweep)
+from repro.core.engine.state import SimResult  # noqa: F401
+from repro.core.engine.step import compile_count  # noqa: F401
+
+__all__ = ["SimResult", "simulate", "simulate_grid", "simulate_sweep",
+           "compile_count"]

@@ -1,0 +1,40 @@
+"""Resource model: PM device banks and the PBC service port.
+
+Every shared resource is a scalar "next-free time".  A requester that
+arrives at ``ready`` starts service at ``max(next_free, ready)`` and
+holds the resource for its *occupancy* (device-internal pipelining lets
+a PM bank accept the next request before the requester observes its
+response, so occupancy < latency).
+
+The PBC is a single FIFO front: persists and PI-routed reads serialize
+on ``pbc_busy``; the head-of-line blocking of reads behind stalled
+writes (the paper's Fig. 6b mechanism) falls out of this scalar.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bank_of(addr, n_banks: int):
+    """Static interleave of cache lines across independent PM banks."""
+    return addr % n_banks
+
+
+def service_start(busy, bank, ready):
+    """When bank ``bank`` can begin serving a request arriving at ``ready``."""
+    return jnp.maximum(busy[bank], ready)
+
+
+def reserve(busy, bank, start, occ):
+    """Hold the bank from ``start`` for ``occ`` ns; returns updated vector."""
+    return busy.at[bank].set(start + occ)
+
+
+def pbc_start(pbc_busy, arrival, proc_ns):
+    """PBC FIFO service start + processing for one packet."""
+    return jnp.maximum(pbc_busy, arrival) + proc_ns
+
+
+def pbc_hold(pbc_busy, arrival, occ_ns):
+    """Advance the PBC next-free time past one packet's issue interval."""
+    return jnp.maximum(pbc_busy, arrival) + occ_ns

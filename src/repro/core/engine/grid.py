@@ -1,0 +1,155 @@
+"""Batched (trace x config x scheme) front-end and compatibility wrappers.
+
+``simulate_grid`` runs the paper's whole evaluation grid as one XLA
+program: traces are padded into shared (C, L) buckets and stacked on a
+leading axis, configs are lowered to stacked latency/policy scalars plus
+a traced scheme id, and the cell program (``engine.step.scan_cell``) is
+nested-``vmap``-ed over the config axis then the trace axis.  Mixed
+schemes in one grid are first-class — the scheme is traced, not a
+compile-time static.
+
+``simulate`` and ``simulate_sweep`` are thin compatibility wrappers over
+the same cell program, returning identical ``SimResult`` objects to the
+original monolithic simulator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.engine.state import (SimResult, result_from_stats,
+                                     scalars_from_config)
+from repro.core.engine.step import scan_cell
+from repro.core.params import PCSConfig
+from repro.core.traces import Trace
+
+_BUCKET = 16384
+
+
+def _pad_up(n: int, b: int = _BUCKET) -> int:
+    return ((max(n, 1) + b - 1) // b) * b
+
+
+def _stack_traces(traces: Sequence[Trace], bucket: int):
+    """Pad traces into one shared (C, L) bucket and stack them.
+
+    Padded cores get zero-length streams (they never issue an op and
+    never count toward barriers); padded steps are no-ops, so sharing
+    one bucket across workloads of different sizes changes no result.
+    """
+    C = max(t.ops.shape[0] for t in traces)
+    L = _pad_up(max(t.ops.shape[1] for t in traces), bucket)
+    T = len(traces)
+    ops = np.zeros((T, C, L), np.int32)
+    addrs = np.zeros((T, C, L), np.int32)
+    gaps = np.zeros((T, C, L), np.float32)
+    lengths = np.zeros((T, C), np.int32)
+    for k, t in enumerate(traces):
+        c, l = t.ops.shape
+        ops[k, :c, :l] = t.ops
+        addrs[k, :c, :l] = t.addrs
+        gaps[k, :c, :l] = t.gaps
+        lengths[k, :c] = t.lengths
+    n_steps = _pad_up(max(t.total_ops for t in traces), bucket)
+    return ops, addrs, gaps, lengths, n_steps
+
+
+def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None):
+    max_pbe = max_pbe or max(c.n_pbe for c in configs)
+    if any(c.n_pbe > max_pbe for c in configs):
+        raise ValueError("n_pbe exceeds max_pbe")
+    banks = {c.pm_banks for c in configs}
+    if len(banks) != 1:
+        raise ValueError("grid configs must share pm_banks (array shape)")
+    rows = [scalars_from_config(c) for c in configs]
+    sc = {k: np.asarray([r[k] for r in rows], np.float64) for k in rows[0]}
+    schemes = np.asarray([int(c.scheme) for c in configs], np.int32)
+    return sc, schemes, max_pbe, banks.pop()
+
+
+@functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
+                                             "pm_banks"))
+def _run_cell(ops, addrs, gaps, lengths, scheme, sc, *,
+              max_pbe, n_steps, pm_banks):
+    # single-cell program: no batch axes, so `lax.switch` lowers to real
+    # branches instead of vmap's execute-all-and-select
+    return scan_cell(ops, addrs, gaps, lengths, scheme, sc,
+                     max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks)
+
+
+@functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
+                                             "pm_banks"))
+def _run_grid(ops, addrs, gaps, lengths, schemes, sc, *,
+              max_pbe, n_steps, pm_banks):
+    cell = functools.partial(scan_cell, max_pbe=max_pbe, n_steps=n_steps,
+                             pm_banks=pm_banks)
+    over_cfg = jax.vmap(cell, in_axes=(None, None, None, None, 0, 0))
+    over_tr = jax.vmap(over_cfg, in_axes=(0, 0, 0, 0, None, None))
+    return over_tr(ops, addrs, gaps, lengths, schemes, sc)
+
+
+def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
+                  max_pbe: int | None = None,
+                  bucket: int = _BUCKET) -> List[List[SimResult]]:
+    """Simulate every (trace, config) cell in one compiled program.
+
+    Returns a ``len(traces) x len(configs)`` nested list of SimResult.
+    Schemes may be mixed freely; ``pm_banks`` must agree (array shape).
+    ``bucket`` controls shape-padding granularity only — results are
+    invariant to it.
+    """
+    if not traces or not configs:
+        return [[] for _ in traces]
+    ops, addrs, gaps, lengths, n_steps = _stack_traces(traces, bucket)
+    sc_np, schemes, max_pbe, pm_banks = _stack_configs(configs, max_pbe)
+    single = len(traces) == 1 and len(configs) == 1
+    with enable_x64():
+        if single:
+            # 1x1 grid: skip the vmap so the op/scheme switches keep
+            # their branch semantics (~4x less work per scan step)
+            sc = {k: jnp.asarray(v[0], jnp.float64)
+                  for k, v in sc_np.items()}
+            runtime, stats = _run_cell(
+                jnp.asarray(ops[0]), jnp.asarray(addrs[0]),
+                jnp.asarray(gaps[0]), jnp.asarray(lengths[0]),
+                jnp.asarray(schemes[0]), sc,
+                max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks)
+            runtimes = np.asarray(runtime)[None, None]
+            stats = np.asarray(stats)[None, None]
+        else:
+            sc = {k: jnp.asarray(v, jnp.float64) for k, v in sc_np.items()}
+            runtimes, stats = _run_grid(
+                jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(gaps),
+                jnp.asarray(lengths), jnp.asarray(schemes), sc,
+                max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks)
+            runtimes = np.asarray(runtimes)
+            stats = np.asarray(stats)
+    return [[result_from_stats(float(runtimes[i, j]), stats[i, j])
+             for j in range(len(configs))] for i in range(len(traces))]
+
+
+def simulate(trace: Trace, config: PCSConfig,
+             max_pbe: int | None = None, *,
+             bucket: int = _BUCKET) -> SimResult:
+    """Simulate one (trace, config) pair and return aggregate metrics."""
+    max_pbe = max_pbe or config.n_pbe
+    return simulate_grid([trace], [config], max_pbe=max_pbe,
+                         bucket=bucket)[0][0]
+
+
+def simulate_sweep(trace: Trace, configs: List[PCSConfig], *,
+                   bucket: int = _BUCKET) -> List[SimResult]:
+    """vmap one trace over many configs (Fig. 1 / Fig. 8).
+
+    All latency scalars *and the scheme id* are batched; the padded PBE
+    capacity is the only shared static, so the whole sweep — including
+    mixed-scheme sweeps — is a single compiled program.
+    """
+    if not configs:
+        return []
+    return simulate_grid([trace], configs, bucket=bucket)[0]

@@ -1,0 +1,252 @@
+"""Op handlers of the timed engine: one function per trace-op kind.
+
+Each handler maps ``(ctx, MachineState) -> MachineState`` for the op the
+selected core issues at time ``ctx.t``.  The step driver dispatches over
+the op kind with ``jax.lax.switch``; *within* the PM-read and persist
+handlers a second ``lax.switch`` dispatches over the **traced** scheme
+scalar (NoPB / PB / PB_RF), so mixed-scheme grids share one XLA program.
+
+PM write acks are modeled lazily: when a drain is scheduled its ack
+arrival time at the switch is computed immediately (PM queueing
+included) and stored per entry; any later event observes Drain->Empty
+transitions whose ack time has passed (``policy.lazy_free``).  This
+reproduces the paper's PI-buffer ack-priority rule (acks never wait
+behind stalled writes) with one scan step per trace op.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import channels, policy
+from repro.core.engine.state import (DIRTY, DRAIN, EMPTY, INF, MachineState,
+                                     S_COALESCES, S_DRAM_READS, S_PBCQ_SUM,
+                                     S_PERSIST_CNT, S_PERSIST_SUM,
+                                     S_PI_DETOURS, S_PM_WRITES, S_READ_CNT,
+                                     S_READ_HITS, S_READ_SUM, S_STALL_TIME,
+                                     S_VICTIM_CNT)
+
+
+class StepCtx(NamedTuple):
+    """Per-step context handed to every handler."""
+
+    c: jnp.ndarray          # ()  selected core
+    t: jnp.ndarray          # ()  op issue time (core clock + compute gap)
+    addr: jnp.ndarray       # ()  target cache line
+    scheme: jnp.ndarray     # ()  i32 traced scheme id (Scheme value)
+    sc: Dict[str, jnp.ndarray]  # traced latency/policy scalars
+    slot_ids: jnp.ndarray   # (P,) arange over PBE slots
+    slot_active: jnp.ndarray  # (P,) live-slot mask (slot_ids < n_pbe)
+    n_live: jnp.ndarray     # ()  number of cores participating in barriers
+    n_banks: int            # static PM bank count
+
+
+# ---------------------------------------------------------------- volatile
+def handle_compute(ctx: StepCtx, st: MachineState) -> MachineState:
+    return st._replace(clock=st.clock.at[ctx.c].set(ctx.t))
+
+
+def handle_dram_read(ctx: StepCtx, st: MachineState) -> MachineState:
+    stats = st.stats.at[S_DRAM_READS].add(1.0)
+    return st._replace(clock=st.clock.at[ctx.c].set(ctx.t + ctx.sc["dram_ns"]),
+                       stats=stats)
+
+
+def handle_dram_write(ctx: StepCtx, st: MachineState) -> MachineState:
+    # posted write: ~free for the core
+    return st._replace(clock=st.clock.at[ctx.c].set(ctx.t))
+
+
+# ----------------------------------------------------------------- PM read
+def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
+    sc, t, addr = ctx.sc, ctx.t, ctx.addr
+    ow = sc["ow_cpu_pm"]
+    bank = channels.bank_of(addr, ctx.n_banks)
+
+    def direct(st: MachineState) -> MachineState:
+        # NoPB: the volatile switch forwards every read to PM.
+        pm_start = channels.service_start(st.pm_busy, bank, t + ow)
+        resp = pm_start + sc["nvm_read"] + ow
+        stats = st.stats.at[S_READ_SUM].add(resp - t)
+        stats = stats.at[S_READ_CNT].add(1.0)
+        return st._replace(
+            clock=st.clock.at[ctx.c].set(resp),
+            pm_busy=channels.reserve(st.pm_busy, bank, pm_start,
+                                     sc["nvm_r_occ"]),
+            stats=stats)
+
+    def via_pb(st: MachineState) -> MachineState:
+        # PB/PB_RF: the PBCS classifies the read; a live entry routes it
+        # through the PI buffer to the PBC (read forwarding).
+        pm_start_dir = channels.service_start(st.pm_busy, bank, t + ow)
+        resp_dir = pm_start_dir + sc["nvm_read"] + ow
+
+        state0 = policy.lazy_free(st.state, st.dd, t)
+        has, idx = policy.pb_lookup(st.tag, state0, ctx.slot_active, addr)
+        # PI-buffer path: wait for the PBC (head-of-line blocking)
+        arr = t + sc["ow_cpu_sw1"]
+        pbc_start = channels.pbc_start(st.pbc_busy, arr,
+                                       sc["pbc_read_ns"] + sc["tag_ns"])
+        st_i = state0[idx]
+        dd_i = st.dd[idx]
+        served = (st_i == DIRTY) | (
+            (st_i == DRAIN) & (dd_i > pbc_start + sc["fwd_margin"]))
+        resp_pb = pbc_start + sc["data_ns"] + sc["ow_cpu_sw1"]
+        # forwarded to PM through the PO buffer after the detour; the
+        # packet re-enters the routing pipeline (one extra pipe pass)
+        pm_start_fwd = jnp.maximum(
+            st.pm_busy[bank],
+            pbc_start + sc["switch_pipe"] + sc["ow_sw1_pm"])
+        resp_fwd = pm_start_fwd + sc["nvm_read"] + ow
+
+        resp = jnp.where(has, jnp.where(served, resp_pb, resp_fwd),
+                         resp_dir)
+        pm_busy2 = st.pm_busy.at[bank].set(jnp.where(
+            has,
+            jnp.where(served, st.pm_busy[bank],
+                      pm_start_fwd + sc["nvm_r_occ"]),
+            pm_start_dir + sc["nvm_r_occ"]))
+        pbc_busy2 = jnp.where(
+            has, channels.pbc_hold(st.pbc_busy, arr, sc["pbc_read_occ"]),
+            st.pbc_busy)
+        lru2 = st.lru.at[idx].set(jnp.where(has & served, t, st.lru[idx]))
+        stats = st.stats.at[S_READ_SUM].add(resp - t)
+        stats = stats.at[S_READ_CNT].add(1.0)
+        stats = stats.at[S_READ_HITS].add((has & served).astype(jnp.float64))
+        stats = stats.at[S_PI_DETOURS].add(has.astype(jnp.float64))
+        return st._replace(clock=st.clock.at[ctx.c].set(resp), state=state0,
+                           lru=lru2, pm_busy=pm_busy2, pbc_busy=pbc_busy2,
+                           stats=stats)
+
+    return jax.lax.switch(jnp.minimum(ctx.scheme, 1), [direct, via_pb], st)
+
+
+# ----------------------------------------------------------------- persist
+def _persist_with_buffer(ctx: StepCtx, st: MachineState,
+                         coalesce_enabled: bool,
+                         drain_policy) -> MachineState:
+    """Shared PB persist core: PBC service, lookup, allocation / victim
+    selection, entry write — then the scheme's drain policy."""
+    sc, t, addr = ctx.sc, ctx.t, ctx.addr
+    bank = channels.bank_of(addr, ctx.n_banks)
+    arr = t + sc["ow_cpu_sw1"]
+    pbc_start = channels.pbc_start(st.pbc_busy, arr,
+                                   sc["pbc_proc_ns"] + sc["tag_ns"])
+    state1 = policy.lazy_free(st.state, st.dd, pbc_start)
+    match_dirty = ctx.slot_active & (st.tag == addr) & (state1 == DIRTY)
+    has_dirty = jnp.any(match_dirty)
+    idx = jnp.argmax(match_dirty)
+
+    is_coalesce = jnp.logical_and(coalesce_enabled, has_dirty)
+    # An in-flight (Drain) older version does NOT block the new persist
+    # (write order, Section IV-A): the new version gets its own entry.
+    # The switch->PM path is FIFO per bank, so drains of the same line
+    # arrive at PM in version order without waiting for the previous ack.
+    (any_empty, empty_idx, any_dirty, victim_idx,
+     earliest_idx) = policy.select_slot(state1, ctx.slot_active, st.lru,
+                                        st.dd)
+
+    # victim drain (only used when no Empty entry exists)
+    victim_bank = channels.bank_of(st.tag[victim_idx], ctx.n_banks)
+    victim_pm_start = jnp.maximum(st.pm_busy[victim_bank],
+                                  pbc_start + sc["ow_sw1_pm"])
+    victim_dd = victim_pm_start + sc["nvm_write"] + sc["ow_sw1_pm"]
+    needs_victim = (~is_coalesce) & (~any_empty) & any_dirty
+
+    slot = jnp.where(any_empty, empty_idx,
+                     jnp.where(any_dirty, victim_idx, earliest_idx))
+    ta = jnp.where(any_empty, pbc_start,
+                   jnp.where(any_dirty, victim_dd,
+                             jnp.maximum(pbc_start, st.dd[earliest_idx])))
+    pm_busy1 = st.pm_busy.at[victim_bank].set(jnp.where(
+        needs_victim, victim_pm_start + sc["nvm_w_occ"],
+        st.pm_busy[victim_bank]))
+    state2 = jnp.where(
+        needs_victim & (ctx.slot_ids == victim_idx), DRAIN, state1)
+    dd2 = jnp.where(
+        needs_victim & (ctx.slot_ids == victim_idx), victim_dd, st.dd)
+
+    # write the entry (new allocation or coalesce-in-place)
+    wslot = jnp.where(is_coalesce, idx, slot)
+    t_written = jnp.where(is_coalesce, pbc_start, ta) + sc["data_ns"]
+    ack = t_written + sc["ow_cpu_sw1"]
+    state3 = jnp.where(ctx.slot_ids == wslot, DIRTY, state2)
+    tag3 = st.tag.at[wslot].set(addr)
+    lru3 = st.lru.at[wslot].set(t_written)
+    dd3 = dd2
+
+    state4, dd4, pm_busy2, policy_writes = drain_policy(
+        bank=bank, wslot=wslot, t_written=t_written, state3=state3,
+        tag3=tag3, lru3=lru3, dd3=dd3, pm_busy1=pm_busy1)
+    pm_writes_inc = needs_victim.astype(jnp.float64) + policy_writes
+
+    stall = jnp.where(is_coalesce, 0.0, ta - pbc_start)
+    stats = st.stats.at[S_VICTIM_CNT].add(
+        ((~is_coalesce) & (~any_empty)).astype(jnp.float64))
+    stats = stats.at[S_PBCQ_SUM].add(
+        jnp.maximum(st.pbc_busy - arr, 0.0))
+    # Only a genuine Empty-shortage stall (ta > pbc_start) holds the PI
+    # front beyond the pipelined issue interval.
+    pbc_free = jnp.maximum(
+        channels.pbc_hold(st.pbc_busy, arr, sc["pbc_occ_ns"]),
+        jnp.where(is_coalesce | (ta <= pbc_start), 0.0, ta))
+    stats = stats.at[S_PERSIST_SUM].add(ack - t)
+    stats = stats.at[S_PERSIST_CNT].add(1.0)
+    stats = stats.at[S_COALESCES].add(is_coalesce.astype(jnp.float64))
+    stats = stats.at[S_PM_WRITES].add(pm_writes_inc)
+    stats = stats.at[S_STALL_TIME].add(stall)
+    return st._replace(clock=st.clock.at[ctx.c].set(ack), tag=tag3,
+                       state=state4, lru=lru3, dd=dd4, pm_busy=pm_busy2,
+                       pbc_busy=pbc_free, stats=stats)
+
+
+def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
+    sc, t, addr = ctx.sc, ctx.t, ctx.addr
+
+    def nopb(st: MachineState) -> MachineState:
+        # Volatile switch: the persist round-trips to PM.
+        ow = sc["ow_cpu_pm"]
+        bank = channels.bank_of(addr, ctx.n_banks)
+        pm_start = channels.service_start(st.pm_busy, bank, t + ow)
+        ack = pm_start + sc["nvm_write"] + ow
+        stats = st.stats.at[S_PERSIST_SUM].add(ack - t)
+        stats = stats.at[S_PERSIST_CNT].add(1.0)
+        stats = stats.at[S_PM_WRITES].add(1.0)
+        return st._replace(
+            clock=st.clock.at[ctx.c].set(ack),
+            pm_busy=channels.reserve(st.pm_busy, bank, pm_start,
+                                     sc["nvm_w_occ"]),
+            stats=stats)
+
+    def pb(st: MachineState) -> MachineState:
+        return _persist_with_buffer(
+            ctx, st, coalesce_enabled=False,
+            drain_policy=lambda **kw: policy.drain_immediate(
+                sc, kw["bank"], ctx.slot_ids, kw["wslot"], kw["t_written"],
+                kw["state3"], kw["dd3"], kw["pm_busy1"]))
+
+    def pb_rf(st: MachineState) -> MachineState:
+        return _persist_with_buffer(
+            ctx, st, coalesce_enabled=True,
+            drain_policy=lambda **kw: policy.drain_threshold_preset(
+                sc, ctx.n_banks, ctx.slot_active, kw["t_written"],
+                kw["state3"], kw["tag3"], kw["lru3"], kw["dd3"],
+                kw["pm_busy1"]))
+
+    return jax.lax.switch(ctx.scheme, [nopb, pb, pb_rf], st)
+
+
+# ----------------------------------------------------------------- barrier
+def handle_barrier(ctx: StepCtx, st: MachineState) -> MachineState:
+    # centralized barrier over all participating cores; the last arrival
+    # releases everyone at its arrival time.
+    last = (st.bcount + 1) >= ctx.n_live
+    released = jnp.where(st.blocked, ctx.t, st.clock).at[ctx.c].set(ctx.t)
+    waiting = st.clock.at[ctx.c].set(INF * 0.9)
+    return st._replace(clock=jnp.where(last, released, waiting))
+
+
+HANDLERS = [handle_compute, handle_dram_read, handle_dram_write,
+            handle_pm_read, handle_persist, handle_barrier]

@@ -1,0 +1,138 @@
+"""Pluggable PB policy layer: allocation, victim selection, drain policies.
+
+This module is the *single home* of the persistence-policy logic that was
+previously restated informally in three places — the timed scan, the
+untimed oracle (``core.semantics``) and the checkpoint tier
+(``persistence.manager``).  It provides:
+
+  * the canonical scheme names / drain-threshold constants (re-exported
+    from ``core.params`` so every layer reads one definition);
+  * :func:`rf_drain_count` — the PB_RF threshold/preset + keep-one-free
+    drain decision as a pure scalar function, used verbatim by the
+    untimed oracle and mirrored sub-expression-for-sub-expression by the
+    traced :func:`drain_threshold_preset`;
+  * the traced policy pieces of the timed engine: PB lookup
+    (:func:`pb_lookup`), Empty/victim/earliest-Drain slot selection
+    (:func:`select_slot`) and the per-scheme drain policies
+    (:func:`drain_immediate`, :func:`drain_threshold_preset`), which the
+    persist handler dispatches with ``jax.lax.switch`` on the *traced*
+    scheme scalar.
+
+All traced functions are written against the carry arrays of
+``engine.state.MachineState`` and must stay bit-compatible with the
+original monolithic scan: each arithmetic expression is kept in the same
+form and order.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Canonical scalar policy: defined once in the jax-free dependency leaf
+# (core.params) so the untimed oracle and the checkpoint tier can import
+# it without initializing jax; re-exported here as the policy facade.
+from repro.core.params import (DEFAULT_DRAIN_PRESET,          # noqa: F401
+                               DEFAULT_DRAIN_THRESHOLD, RF_EMPTY_SLACK,
+                               RF_LOW_WATER_DRAINS, SCHEME_NAMES, Scheme,
+                               preset_count, rf_drain_count,
+                               threshold_count)
+from repro.core.engine.state import DIRTY, DRAIN, EMPTY, INF
+
+
+# ---------------------------------------------------------------------------
+# Traced policy pieces (operate on MachineState arrays)
+# ---------------------------------------------------------------------------
+
+def lazy_free(state, dd, now):
+    """Observe Drain->Empty transitions whose PM ack time has passed."""
+    freed = (state == DRAIN) & (dd <= now)
+    return jnp.where(freed, EMPTY, state)
+
+
+def pb_lookup(tag, state, slot_active, addr):
+    """Newest live entry for ``addr`` (a Dirty entry supersedes Drain).
+
+    Returns (has_entry, idx): whether any live entry matches, and the
+    index of the newest one.
+    """
+    match = slot_active & (tag == addr) & (state != EMPTY)
+    has = jnp.any(match)
+    idx = jnp.argmax(match & (state == DIRTY)) * jnp.any(
+        match & (state == DIRTY)) + jnp.argmax(match) * (
+        ~jnp.any(match & (state == DIRTY)))
+    return has, idx
+
+
+def select_slot(state, slot_active, lru, dd):
+    """Allocation / victim selection over the PBE array.
+
+    Preference order of the persist handler: an Empty slot (LRU-oldest),
+    else the LRU Dirty entry (victim drain), else the Drain entry whose
+    PM ack lands earliest (pure wait).
+    """
+    empty_mask = slot_active & (state == EMPTY)
+    any_empty = jnp.any(empty_mask)
+    empty_idx = jnp.argmin(jnp.where(empty_mask, lru, INF))
+    dirty_mask = slot_active & (state == DIRTY)
+    any_dirty = jnp.any(dirty_mask)
+    victim_idx = jnp.argmin(jnp.where(dirty_mask, lru, INF))
+    drain_mask = slot_active & (state == DRAIN)
+    earliest_idx = jnp.argmin(jnp.where(drain_mask, dd, INF))
+    return any_empty, empty_idx, any_dirty, victim_idx, earliest_idx
+
+
+def drain_immediate(sc, bank, slot_ids, wslot, t_written,
+                    state3, dd3, pm_busy1):
+    """PB scheme: drain the just-written entry at once (ack at switch).
+
+    The channel FIFO preserves the version order of same-line drains.
+    Returns (state4, dd4, pm_busy2, policy_writes).
+    """
+    pm_start2 = jnp.maximum(pm_busy1[bank], t_written + sc["ow_sw1_pm"])
+    dd_new = pm_start2 + sc["nvm_write"] + sc["ow_sw1_pm"]
+    state4 = jnp.where(slot_ids == wslot, DRAIN, state3)
+    dd4 = dd3.at[wslot].set(dd_new)
+    pm_busy2 = pm_busy1.at[bank].set(pm_start2 + sc["nvm_w_occ"])
+    return state4, dd4, pm_busy2, jnp.asarray(1.0, jnp.float64)
+
+
+def drain_threshold_preset(sc, n_banks, slot_active, t_written,
+                           state3, tag3, lru3, dd3, pm_busy1):
+    """PB_RF: threshold/preset drain-down over LRU Dirty entries.
+
+    Traced twin of :func:`rf_drain_count` plus the per-bank burst
+    serialization: drains sharing a PM bank are issued back-to-back at
+    the bank's write occupancy, overlapping across banks.
+    Returns (state4, dd4, pm_busy2, policy_writes).
+    """
+    B = n_banks
+    dirty_cnt = jnp.sum((state3 == DIRTY) & slot_active)
+    empty_cnt = jnp.sum((state3 == EMPTY) & slot_active)
+    do_drain = dirty_cnt >= sc["threshold_count"]
+    k_thresh = jnp.where(do_drain, dirty_cnt - sc["preset_count"], 0.0)
+    k_low = jnp.where(empty_cnt <= float(RF_EMPTY_SLACK),
+                      jnp.minimum(float(RF_LOW_WATER_DRAINS), dirty_cnt),
+                      0.0)
+    k = jnp.maximum(k_thresh, k_low)
+    key = jnp.where((state3 == DIRTY) & slot_active, lru3, INF)
+    rank = jnp.argsort(jnp.argsort(key)).astype(jnp.float64)
+    to_drain = (rank < k) & (state3 == DIRTY) & slot_active
+    banks = tag3 % B
+    # rank among drained entries sharing a bank (serializes the burst per
+    # PM bank, overlapping across banks)
+    same_bank = banks[:, None] == banks[None, :]
+    earlier = rank[None, :] < rank[:, None]
+    rank_b = jnp.sum(
+        (same_bank & earlier & to_drain[None, :]).astype(jnp.float64),
+        axis=1)
+    start_i = (jnp.maximum(pm_busy1[banks], t_written + sc["ow_sw1_pm"])
+               + rank_b * sc["nvm_w_occ"])
+    dd_j = start_i + sc["nvm_write"] + sc["ow_sw1_pm"]
+    state4 = jnp.where(to_drain, DRAIN, state3)
+    dd4 = jnp.where(to_drain, dd_j, dd3)
+    busy_after = jnp.where(to_drain, start_i + sc["nvm_w_occ"], 0.0)
+    per_bank = jnp.max(
+        jnp.where(same_bank & to_drain[None, :], busy_after[None, :], 0.0),
+        axis=1)
+    pm_busy2 = jnp.maximum(
+        pm_busy1, jnp.zeros((B,), jnp.float64).at[banks].max(per_bank))
+    return state4, dd4, pm_busy2, k

@@ -1,0 +1,142 @@
+"""Machine-state pytree, statistics layout and config lowering.
+
+The scan carry of the timed engine is one :class:`MachineState` pytree:
+per-core clocks and trace cursors, the PB tables (TAT tags, ST states,
+LRU stamps, in-flight drain-ack times), the resource next-free times
+(PM banks, PBC) and the statistics accumulators behind Figs. 1 and 5-8.
+
+Every latency parameter, the live PBE bound, the drain thresholds *and
+the scheme id* are traced scalars (see :func:`scalars_from_config`), so
+a full {trace x config x scheme} grid lowers to a single XLA program.
+Only array shapes stay static: core count, ``max_pbe``, bank count and
+the scan length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import PBEState, PCSConfig
+
+INF = 1e30
+
+# statistics vector layout
+S_PERSIST_SUM = 0
+S_PERSIST_CNT = 1
+S_READ_SUM = 2
+S_READ_CNT = 3
+S_READ_HITS = 4
+S_COALESCES = 5
+S_PM_WRITES = 6
+S_STALL_TIME = 7
+S_PI_DETOURS = 8
+S_DRAM_READS = 9
+S_VICTIM_CNT = 10    # persists that took the no-Empty victim path
+S_PBCQ_SUM = 11      # total PBC queueing wait (arrival -> service start)
+N_STATS = 12
+
+EMPTY = int(PBEState.EMPTY)
+DIRTY = int(PBEState.DIRTY)
+DRAIN = int(PBEState.DRAIN)
+
+
+class MachineState(NamedTuple):
+    """The scan carry: the entire machine at one instant."""
+
+    clock: jnp.ndarray     # (C,)  f64  per-core clocks
+    ptr: jnp.ndarray       # (C,)  i32  per-core trace cursors
+    tag: jnp.ndarray       # (P,)  i32  TAT tags (P = max_pbe)
+    state: jnp.ndarray     # (P,)  i32  ST states (Empty/Dirty/Drain)
+    lru: jnp.ndarray       # (P,)  f64  LRU stamps
+    dd: jnp.ndarray        # (P,)  f64  in-flight drain-ack times
+    pm_busy: jnp.ndarray   # (B,)  f64  PM bank next-free times
+    pbc_busy: jnp.ndarray  # ()    f64  PBC next-free time
+    blocked: jnp.ndarray   # (C,)  bool blocked at barrier
+    bcount: jnp.ndarray    # ()    i32  barrier arrival count
+    stats: jnp.ndarray     # (N_STATS,) f64
+
+
+def init_state(n_cores: int, max_pbe: int, pm_banks: int) -> MachineState:
+    return MachineState(
+        clock=jnp.zeros((n_cores,), jnp.float64),
+        ptr=jnp.zeros((n_cores,), jnp.int32),
+        tag=jnp.full((max_pbe,), -1, jnp.int32),
+        state=jnp.full((max_pbe,), EMPTY, jnp.int32),
+        lru=jnp.zeros((max_pbe,), jnp.float64),
+        dd=jnp.zeros((max_pbe,), jnp.float64),
+        pm_busy=jnp.zeros((pm_banks,), jnp.float64),
+        pbc_busy=jnp.zeros((), jnp.float64),
+        blocked=jnp.zeros((n_cores,), bool),
+        bcount=jnp.zeros((), jnp.int32),
+        stats=jnp.zeros((N_STATS,), jnp.float64),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Aggregate metrics of one simulated run."""
+
+    runtime_ns: float
+    persist_lat_ns: float       # mean persist latency (fence round trip)
+    read_lat_ns: float          # mean PM-read latency (from LLC)
+    persists: int
+    pm_reads: int
+    read_hits: int              # reads served from the PB
+    coalesces: int              # persists absorbed into a Dirty entry
+    pm_writes: int              # write packets that reached the PM device
+    stall_ns: float             # PBC time spent waiting for Empty entries
+    pi_detours: int             # reads routed through the PI buffer
+    victim_drains: int = 0      # persists that took the no-Empty victim path
+
+    @property
+    def read_hit_rate(self) -> float:
+        return self.read_hits / max(self.pm_reads, 1)
+
+    @property
+    def coalesce_rate(self) -> float:
+        return self.coalesces / max(self.persists, 1)
+
+
+def result_from_stats(runtime: float, stats: np.ndarray) -> SimResult:
+    return SimResult(
+        runtime_ns=runtime,
+        persist_lat_ns=float(stats[S_PERSIST_SUM] / max(stats[S_PERSIST_CNT], 1)),
+        read_lat_ns=float(stats[S_READ_SUM] / max(stats[S_READ_CNT], 1)),
+        persists=int(stats[S_PERSIST_CNT]),
+        pm_reads=int(stats[S_READ_CNT]),
+        read_hits=int(stats[S_READ_HITS]),
+        coalesces=int(stats[S_COALESCES]),
+        pm_writes=int(stats[S_PM_WRITES]),
+        stall_ns=float(stats[S_STALL_TIME]),
+        pi_detours=int(stats[S_PI_DETOURS]),
+        victim_drains=int(stats[S_VICTIM_CNT]),
+    )
+
+
+def scalars_from_config(cfg: PCSConfig) -> Dict[str, float]:
+    """Lower one config to the dict of traced latency/policy scalars."""
+    lat = cfg.latency
+    return dict(
+        n_pbe=float(cfg.n_pbe),
+        threshold_count=float(cfg.threshold_count),
+        preset_count=float(cfg.preset_count),
+        tag_ns=lat.pb_tag_ns_for(cfg.n_pbe),
+        data_ns=lat.pb_data_ns_for(cfg.n_pbe),
+        pbc_proc_ns=lat.pbc_proc_ns,
+        pbc_occ_ns=lat.pbc_occ_ns,
+        pbc_read_ns=lat.pbc_read_ns,
+        pbc_read_occ=lat.pbc_read_occ_ns,
+        nvm_read=lat.nvm_read_ns,
+        nvm_write=lat.nvm_write_ns,
+        nvm_r_occ=lat.nvm_read_occ_ns,
+        nvm_w_occ=lat.nvm_write_occ_ns,
+        dram_ns=lat.dram_ns,
+        fwd_margin=lat.fwd_margin_ns,
+        switch_pipe=lat.switch_pipe_ns,
+        ow_cpu_pm=lat.oneway_cpu_pm(cfg.n_switches),
+        ow_cpu_sw1=lat.oneway_cpu_sw1() if cfg.n_switches > 0 else lat.cpu_link_ns,
+        ow_sw1_pm=lat.oneway_sw1_pm(cfg.n_switches) if cfg.n_switches > 0 else 0.0,
+    )

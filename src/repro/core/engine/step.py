@@ -1,0 +1,83 @@
+"""Step driver: merge per-core op streams by clock and run the scan.
+
+One scan step = one trace op of the globally earliest unblocked core
+(fence semantics: a core blocks on its persists and PM reads, so its
+clock only advances when its op completes).  Padded steps after stream
+exhaustion are provable no-ops, which lets callers pad the scan length
+to shared buckets without changing any result.
+
+``scan_cell`` is the unjitted single-cell program; the front-ends in
+``engine.grid`` wrap it in ``jax.jit`` (single cell) or
+``jit(vmap(vmap(...)))`` (full trace x config grid).  A module-level
+compile counter increments once per trace of ``scan_cell`` — i.e. once
+per XLA program built — backing the one-compilation acceptance test and
+the BENCH_engine.json perf tracking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.handlers import HANDLERS, StepCtx
+from repro.core.engine.state import INF, MachineState, init_state
+from repro.core.params import Op
+
+# Incremented inside `scan_cell` at trace time: one tick per XLA program
+# built from the engine (jit caches hits do not retrace).
+_COMPILES = [0]
+
+
+def compile_count() -> int:
+    """Number of engine XLA programs traced/compiled so far this process."""
+    return _COMPILES[0]
+
+
+def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
+              max_pbe: int, n_steps: int, pm_banks: int):
+    """Simulate one (trace, config) cell; returns (runtime, stats).
+
+    ``scheme`` and every entry of ``sc`` are traced scalars; only array
+    shapes (core count C, ``max_pbe``, ``pm_banks``, ``n_steps``) are
+    static.
+    """
+    _COMPILES[0] += 1
+    C = ops.shape[0]
+    slot_ids = jnp.arange(max_pbe)
+    slot_active = slot_ids < sc["n_pbe"].astype(jnp.int32)
+    # Cores with a non-empty stream participate in barriers (padded cores
+    # from stacked grids have zero-length streams and never arrive).
+    n_live = jnp.sum((lengths > 0).astype(jnp.int32))
+
+    def step(st: MachineState, _):
+        active = st.ptr < lengths
+        # blocked cores wait at a barrier and cannot be selected
+        tsel = jnp.where(active & ~st.blocked, st.clock, INF)
+        c = jnp.argmin(tsel)
+        # padded steps after exhaustion (or a barrier mismatch) are no-ops
+        valid = jnp.any(active) & (tsel[c] < INF * 0.5)
+        i = jnp.minimum(st.ptr[c], lengths[c] - 1)
+        op = jnp.where(valid, ops[c, i], int(Op.COMPUTE))
+        addr = addrs[c, i]
+        gap = jnp.where(valid, gaps[c, i].astype(jnp.float64), 0.0)
+        t = jnp.where(valid, tsel[c], st.clock[c]) + gap
+
+        ctx = StepCtx(c=c, t=t, addr=addr, scheme=scheme, sc=sc,
+                      slot_ids=slot_ids, slot_active=slot_active,
+                      n_live=n_live, n_banks=pm_banks)
+        branches = [lambda s, h=h: h(ctx, s) for h in HANDLERS]
+        st2 = jax.lax.switch(jnp.clip(op, 0, 5), branches, st)
+
+        is_bar = valid & (op == int(Op.BARRIER))
+        last = is_bar & ((st.bcount + 1) >= n_live)
+        blocked = jnp.where(last, jnp.zeros_like(st.blocked),
+                            jnp.where(is_bar, st.blocked.at[c].set(True),
+                                      st.blocked))
+        bcount = jnp.where(last, 0,
+                           jnp.where(is_bar, st.bcount + 1, st.bcount))
+        ptr = st2.ptr.at[c].add(jnp.where(valid, 1, 0))
+        return st2._replace(ptr=ptr, blocked=blocked, bcount=bcount), None
+
+    final, _ = jax.lax.scan(step, init_state(C, max_pbe, pm_banks), None,
+                            length=n_steps)
+    runtime = jnp.max(jnp.where(final.clock < INF * 0.5, final.clock, 0.0))
+    return runtime, final.stats

@@ -18,11 +18,60 @@ import math
 
 
 class Scheme(enum.IntEnum):
-    """Persistence scheme evaluated in the paper (Section VI)."""
+    """Persistence scheme evaluated in the paper (Section VI).
+
+    The integer values are load-bearing: the timed engine dispatches its
+    persist/read handlers with ``jax.lax.switch`` on a *traced* scheme
+    scalar carrying exactly these values (see ``core.engine.handlers``).
+    """
 
     NOPB = 0   # volatile switch: every persist round-trips to PM
     PB = 1     # persistent buffer, drain-immediately (ack at switch)
     PB_RF = 2  # persistent buffer + read forwarding / write coalescing
+
+
+# Canonical scalar drain policy (paper Section V-D1).  This module is the
+# dependency leaf (no jax), so the untimed oracle and the checkpoint tier
+# read the shared policy from here; ``core.engine.policy`` re-exports it
+# next to the traced twin used by the timed engine.
+DEFAULT_DRAIN_THRESHOLD = 0.8  # start draining above this fill fraction
+DEFAULT_DRAIN_PRESET = 0.6     # drain down to this fill fraction
+
+# Scheme <-> wire-name mapping shared with the checkpoint tier / CLIs.
+SCHEME_NAMES = {s: s.name.lower() for s in Scheme}
+
+
+def threshold_count(n_pbe: int,
+                    threshold: float = DEFAULT_DRAIN_THRESHOLD) -> int:
+    """Entry count at which the PB_RF drain-down engages."""
+    return max(1, int(math.ceil(threshold * n_pbe)))
+
+
+def preset_count(n_pbe: int, preset: float = DEFAULT_DRAIN_PRESET) -> int:
+    """Entry count the PB_RF drain-down drains down to."""
+    return max(0, int(math.floor(preset * n_pbe)))
+
+
+# PB_RF keep-one-free heuristic: when the Empty pool is down to
+# RF_EMPTY_SLACK entries, drain up to RF_LOW_WATER_DRAINS LRU Dirty
+# entries pre-emptively so the PI front cannot cascade into head-of-line
+# victim stalls.
+RF_EMPTY_SLACK = 1
+RF_LOW_WATER_DRAINS = 2
+
+
+def rf_drain_count(dirty: int, empty: int, threshold: int, preset: int) -> int:
+    """How many LRU Dirty entries the PB_RF policy drains right now.
+
+    Pure-scalar twin of ``engine.policy.drain_threshold_preset``'s ``k``
+    (same sub-expressions, Python ints instead of traced f64).  The
+    untimed oracle calls this directly; the engine-vs-oracle
+    cross-validation test (tests/test_engine_oracle.py) is the drift
+    guard between the two forms.
+    """
+    k_thresh = dirty - preset if dirty >= threshold else 0
+    k_low = min(RF_LOW_WATER_DRAINS, dirty) if empty <= RF_EMPTY_SLACK else 0
+    return max(k_thresh, k_low)
 
 
 class PBEState(enum.IntEnum):
@@ -114,8 +163,8 @@ class PCSConfig:
     n_pbe: int = 16              # persistent buffer entries (paper Table I)
     n_switches: int = 1          # CXL switches between CPU and PM
     n_cores: int = 8             # paper: 8-core OoO
-    drain_threshold: float = 0.8  # PB_RF: start draining above this fill
-    drain_preset: float = 0.6     # PB_RF: drain down to this fill
+    drain_threshold: float = DEFAULT_DRAIN_THRESHOLD
+    drain_preset: float = DEFAULT_DRAIN_PRESET
     pm_banks: int = 4             # independent PM device banks (the single
                                   # NVM device of Table I pipelines requests
                                   # across internal banks)
@@ -131,8 +180,8 @@ class PCSConfig:
 
     @property
     def threshold_count(self) -> int:
-        return max(1, int(math.ceil(self.drain_threshold * self.n_pbe)))
+        return threshold_count(self.n_pbe, self.drain_threshold)
 
     @property
     def preset_count(self) -> int:
-        return max(0, int(math.floor(self.drain_preset * self.n_pbe)))
+        return preset_count(self.n_pbe, self.drain_preset)

@@ -12,7 +12,8 @@ It is used by:
     check the paper's three correctness criteria under random schedules;
   * the cluster-scale persistence tier (repro.persistence), which runs the
     *same* state machine over checkpoint shards instead of cache lines;
-  * cross-validation of the timed JAX simulator (repro.core.simulator).
+  * cross-validation of the timed JAX engine (repro.core.engine), via
+    tests/test_engine_oracle.py.
 
 The model is event-explicit: every externally visible action (ack to the
 CPU, drain packet to PM, read response and its source) is returned as an
@@ -24,7 +25,8 @@ import dataclasses
 import enum
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.params import PBEState, PCSConfig, Scheme
+from repro.core.params import (PBEState, PCSConfig, Scheme,
+                               rf_drain_count)
 
 
 class EventKind(enum.Enum):
@@ -168,12 +170,22 @@ class PersistentBuffer:
         self.pm.write(e.addr, e.version, e.data)
 
     def _rf_drain_down(self, events: List[Event]) -> None:
-        """PB_RF policy: above threshold, drain LRU Dirty down to preset."""
+        """PB_RF drain policy, shared with the timed engine.
+
+        The decision (threshold/preset drain-down plus the keep-one-free
+        low-water heuristic) lives in ``params.rf_drain_count`` (the
+        shared policy scalar, re-exported by ``engine.policy``); this
+        method only supplies the counts and drains the LRU Dirty victims
+        it asks for.
+        """
         if self.config.scheme != Scheme.PB_RF:
             return
-        if self._count(PBEState.DIRTY) <= self.config.threshold_count - 1:
-            return
-        while self._count(PBEState.DIRTY) > self.config.preset_count:
+        dirty = self._count(PBEState.DIRTY)
+        empty = self.config.n_pbe - sum(
+            1 for e in self.entries if e.state != PBEState.EMPTY)
+        k = rf_drain_count(dirty, empty, self.config.threshold_count,
+                           self.config.preset_count)
+        for _ in range(k):
             victim = self._lru_dirty()
             if victim is None:
                 break
@@ -277,6 +289,9 @@ class PersistentBuffer:
             # PB the entry is in Drain: serving from PB is still correct
             # (same bytes as the in-flight drain) and preserves write-read
             # order because the drain was emitted before this response.
+            # A forwarded read refreshes the entry's LRU stamp, matching
+            # the timed engine's victim-selection discipline.
+            self._touch(e)
             self.stats["read_hits"] += 1
             return e.data, Event(EventKind.READ_FROM_PB, addr, e.version,
                                  self._next_seq())

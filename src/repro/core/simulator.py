@@ -1,485 +1,15 @@
-"""Timed PCS simulator: a jit/vmap-able replacement for the paper's gem5 run.
+"""Compatibility shim over ``repro.core.engine``.
 
-The gem5 SE-mode simulation of the paper is replaced by a *trace-driven
-queueing simulator* expressed as one ``jax.lax.scan`` over the merged
-memory-request stream of all cores.  The scan carry holds the entire
-machine state:
-
-    * per-core clocks + trace cursors (fence semantics: a core blocks on
-      its persists and PM reads),
-    * the PB tables (TAT tags, ST states, LRU stamps) plus the in-flight
-      drain-completion times — the Data Table carries no payload here
-      because timing does not depend on the bytes,
-    * resource next-free times: the PM controller channel and the PBC
-      (head-of-line blocking of reads behind stalled writes — the effect
-      behind the paper's Fig. 6b read-latency increase),
-    * the statistics accumulators behind Figs. 1 and 5-8.
-
-PM write acks are modeled *lazily*: when a drain is scheduled, its ack
-arrival time at the switch is computed immediately (PM queueing included)
-and stored per entry; any later event observes Drain->Empty transitions
-whose ack time has passed.  This reproduces exactly the effect of the
-paper's PI-buffer ack-priority rule (acks never wait behind stalled
-writes) with one scan step per trace op.
-
-Scheme and buffer capacity bound are static (compile-time); every latency
-parameter and the live entry count are traced scalars, so Figure 8's PBE
-sweep and Figure 1's switch-depth sweep are single ``vmap`` calls.
+The monolithic ``_simulate`` scan that used to live here was decomposed
+into the composable ``core.engine`` package (DESIGN.md §3): machine
+state + step driver, per-op handlers, a pluggable PB policy layer with
+traced-scheme dispatch, the PM/PBC resource model, and the batched
+``simulate_grid`` front-end.  ``simulate`` / ``simulate_sweep`` keep
+their original signatures and return identical ``SimResult`` objects;
+new code should import from ``repro.core.engine`` directly and prefer
+``simulate_grid`` for anything that sweeps.
 """
-from __future__ import annotations
+from repro.core.engine import (SimResult, simulate,  # noqa: F401
+                               simulate_grid, simulate_sweep)
 
-import dataclasses
-import functools
-from typing import Dict, List
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.params import LatencyProfile, Op, PBEState, PCSConfig, Scheme
-from repro.core.traces import Trace
-
-INF = 1e30
-
-# statistics vector layout
-S_PERSIST_SUM = 0
-S_PERSIST_CNT = 1
-S_READ_SUM = 2
-S_READ_CNT = 3
-S_READ_HITS = 4
-S_COALESCES = 5
-S_PM_WRITES = 6
-S_STALL_TIME = 7
-S_PI_DETOURS = 8
-S_DRAM_READS = 9
-S_VICTIM_CNT = 10    # persists that took the no-Empty victim path
-S_PBCQ_SUM = 11      # total PBC queueing wait (arrival -> service start)
-N_STATS = 12
-
-EMPTY = int(PBEState.EMPTY)
-DIRTY = int(PBEState.DIRTY)
-DRAIN = int(PBEState.DRAIN)
-
-
-@dataclasses.dataclass(frozen=True)
-class SimResult:
-    """Aggregate metrics of one simulated run."""
-
-    runtime_ns: float
-    persist_lat_ns: float       # mean persist latency (fence round trip)
-    read_lat_ns: float          # mean PM-read latency (from LLC)
-    persists: int
-    pm_reads: int
-    read_hits: int              # reads served from the PB
-    coalesces: int              # persists absorbed into a Dirty entry
-    pm_writes: int              # write packets that reached the PM device
-    stall_ns: float             # PBC time spent waiting for Empty entries
-    pi_detours: int             # reads routed through the PI buffer
-
-    @property
-    def read_hit_rate(self) -> float:
-        return self.read_hits / max(self.pm_reads, 1)
-
-    @property
-    def coalesce_rate(self) -> float:
-        return self.coalesces / max(self.persists, 1)
-
-
-def _scalars_from_config(cfg: PCSConfig) -> Dict[str, float]:
-    lat = cfg.latency
-    return dict(
-        n_pbe=float(cfg.n_pbe),
-        threshold_count=float(cfg.threshold_count),
-        preset_count=float(cfg.preset_count),
-        tag_ns=lat.pb_tag_ns_for(cfg.n_pbe),
-        data_ns=lat.pb_data_ns_for(cfg.n_pbe),
-        pbc_proc_ns=lat.pbc_proc_ns,
-        pbc_occ_ns=lat.pbc_occ_ns,
-        pbc_read_ns=lat.pbc_read_ns,
-        pbc_read_occ=lat.pbc_read_occ_ns,
-        nvm_read=lat.nvm_read_ns,
-        nvm_write=lat.nvm_write_ns,
-        nvm_r_occ=lat.nvm_read_occ_ns,
-        nvm_w_occ=lat.nvm_write_occ_ns,
-        dram_ns=lat.dram_ns,
-        fwd_margin=lat.fwd_margin_ns,
-        switch_pipe=lat.switch_pipe_ns,
-        ow_cpu_pm=lat.oneway_cpu_pm(cfg.n_switches),
-        ow_cpu_sw1=lat.oneway_cpu_sw1() if cfg.n_switches > 0 else lat.cpu_link_ns,
-        ow_sw1_pm=lat.oneway_sw1_pm(cfg.n_switches) if cfg.n_switches > 0 else 0.0,
-    )
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("scheme", "max_pbe", "n_steps", "pm_banks"))
-def _simulate(ops, addrs, gaps, lengths, sc, *, scheme: int, max_pbe: int,
-              n_steps: int, pm_banks: int = 4):
-    """Run the scan.  ``sc`` is the dict of traced latency scalars."""
-    C = ops.shape[0]
-    B = pm_banks
-    slot_ids = jnp.arange(max_pbe)
-    slot_active = slot_ids < sc["n_pbe"].astype(jnp.int32)
-
-    def lazy_free(state, dd, now):
-        freed = (state == DRAIN) & (dd <= now)
-        return jnp.where(freed, EMPTY, state)
-
-    def step(carry, _):
-        (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy, blocked,
-         bcount, stats) = carry
-        active = ptr < lengths
-        # blocked cores wait at a barrier and cannot be selected
-        tsel = jnp.where(active & ~blocked, clock, INF)
-        c = jnp.argmin(tsel)
-        # padded steps after exhaustion (or a barrier mismatch) are no-ops
-        valid = jnp.any(active) & (tsel[c] < INF * 0.5)
-        i = jnp.minimum(ptr[c], lengths[c] - 1)
-        op = jnp.where(valid, ops[c, i], int(Op.COMPUTE))
-        addr = addrs[c, i]
-        gap = jnp.where(valid, gaps[c, i].astype(jnp.float64), 0.0)
-        t = jnp.where(valid, tsel[c], clock[c]) + gap
-
-        # ---------------- volatile branches -------------------------------
-        def br_compute(a):
-            (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy, stats) = a
-            return (clock.at[c].set(t), ptr, tag, state, lru, dd,
-                    pm_busy, pbc_busy, stats)
-
-        def br_dram_read(a):
-            (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy, stats) = a
-            stats = stats.at[S_DRAM_READS].add(1.0)
-            return (clock.at[c].set(t + sc["dram_ns"]), ptr, tag, state,
-                    lru, dd, pm_busy, pbc_busy, stats)
-
-        def br_dram_write(a):
-            (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy, stats) = a
-            return (clock.at[c].set(t), ptr, tag, state, lru, dd,
-                    pm_busy, pbc_busy, stats)
-
-        # ---------------- PM read -----------------------------------------
-        def br_pm_read(a):
-            (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy, stats) = a
-            ow = sc["ow_cpu_pm"]
-            bank = addr % B
-            # direct path (NoPB, or no PB entry for this line)
-            pm_start_dir = jnp.maximum(pm_busy[bank], t + ow)
-            resp_dir = pm_start_dir + sc["nvm_read"] + ow
-
-            if scheme == int(Scheme.NOPB):
-                stats = stats.at[S_READ_SUM].add(resp_dir - t)
-                stats = stats.at[S_READ_CNT].add(1.0)
-                return (clock.at[c].set(resp_dir), ptr, tag, state, lru, dd,
-                        pm_busy.at[bank].set(pm_start_dir + sc["nvm_r_occ"]),
-                        pbc_busy, stats)
-
-            state0 = lazy_free(state, dd, t)
-            match = slot_active & (tag == addr) & (state0 != EMPTY)
-            has = jnp.any(match)
-            # newest version first: a Dirty entry supersedes a Drain one
-            idx = jnp.argmax(match & (state0 == DIRTY)) * jnp.any(
-                match & (state0 == DIRTY)) + jnp.argmax(match) * (
-                ~jnp.any(match & (state0 == DIRTY)))
-            # PI-buffer path: wait for the PBC (head-of-line blocking)
-            arr = t + sc["ow_cpu_sw1"]
-            pbc_start = (jnp.maximum(pbc_busy, arr)
-                         + sc["pbc_read_ns"] + sc["tag_ns"])
-            st_i = state0[idx]
-            dd_i = dd[idx]
-            served = (st_i == DIRTY) | (
-                (st_i == DRAIN) & (dd_i > pbc_start + sc["fwd_margin"]))
-            resp_pb = pbc_start + sc["data_ns"] + sc["ow_cpu_sw1"]
-            # forwarded to PM through the PO buffer after the detour; the
-            # packet re-enters the routing pipeline (one extra pipe pass)
-            pm_start_fwd = jnp.maximum(
-                pm_busy[bank],
-                pbc_start + sc["switch_pipe"] + sc["ow_sw1_pm"])
-            resp_fwd = pm_start_fwd + sc["nvm_read"] + ow
-
-            resp = jnp.where(has, jnp.where(served, resp_pb, resp_fwd),
-                             resp_dir)
-            pm_busy2 = pm_busy.at[bank].set(jnp.where(
-                has,
-                jnp.where(served, pm_busy[bank],
-                          pm_start_fwd + sc["nvm_r_occ"]),
-                pm_start_dir + sc["nvm_r_occ"]))
-            pbc_busy2 = jnp.where(
-                has, jnp.maximum(pbc_busy, arr) + sc["pbc_read_occ"],
-                pbc_busy)
-            lru2 = lru.at[idx].set(jnp.where(has & served, t, lru[idx]))
-            stats = stats.at[S_READ_SUM].add(resp - t)
-            stats = stats.at[S_READ_CNT].add(1.0)
-            stats = stats.at[S_READ_HITS].add((has & served).astype(jnp.float64))
-            stats = stats.at[S_PI_DETOURS].add(has.astype(jnp.float64))
-            return (clock.at[c].set(resp), ptr, tag, state0, lru2, dd,
-                    pm_busy2, pbc_busy2, stats)
-
-        # ---------------- persist -----------------------------------------
-        def br_persist(a):
-            (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy, stats) = a
-            ow = sc["ow_cpu_pm"]
-            bank = addr % B
-            if scheme == int(Scheme.NOPB):
-                pm_start = jnp.maximum(pm_busy[bank], t + ow)
-                ack = pm_start + sc["nvm_write"] + ow
-                stats = stats.at[S_PERSIST_SUM].add(ack - t)
-                stats = stats.at[S_PERSIST_CNT].add(1.0)
-                stats = stats.at[S_PM_WRITES].add(1.0)
-                return (clock.at[c].set(ack), ptr, tag, state, lru, dd,
-                        pm_busy.at[bank].set(pm_start + sc["nvm_w_occ"]),
-                        pbc_busy, stats)
-
-            arr = t + sc["ow_cpu_sw1"]
-            pbc_start = (jnp.maximum(pbc_busy, arr)
-                         + sc["pbc_proc_ns"] + sc["tag_ns"])
-            state1 = lazy_free(state, dd, pbc_start)
-            match_dirty = slot_active & (tag == addr) & (state1 == DIRTY)
-            match_drain = slot_active & (tag == addr) & (state1 == DRAIN)
-            has_dirty = jnp.any(match_dirty)
-            idx = jnp.argmax(match_dirty)
-
-            is_coalesce = jnp.logical_and(
-                scheme == int(Scheme.PB_RF), has_dirty)
-            # An in-flight (Drain) older version does NOT block the new
-            # persist (write order, Section IV-A): the new version gets its
-            # own entry.  The switch->PM path is FIFO per bank, so drains of
-            # the same line arrive at PM in version order without waiting
-            # for the previous ack.
-
-            empty_mask = slot_active & (state1 == EMPTY)
-            any_empty = jnp.any(empty_mask)
-            empty_idx = jnp.argmin(jnp.where(empty_mask, lru, INF))
-            dirty_mask = slot_active & (state1 == DIRTY)
-            any_dirty = jnp.any(dirty_mask)
-            victim_idx = jnp.argmin(jnp.where(dirty_mask, lru, INF))
-            drain_mask = slot_active & (state1 == DRAIN)
-            earliest_idx = jnp.argmin(jnp.where(drain_mask, dd, INF))
-
-            # victim drain (only used when no Empty entry exists)
-            victim_bank = tag[victim_idx] % B
-            victim_pm_start = jnp.maximum(pm_busy[victim_bank],
-                                          pbc_start + sc["ow_sw1_pm"])
-            victim_dd = victim_pm_start + sc["nvm_write"] + sc["ow_sw1_pm"]
-            needs_victim = (~is_coalesce) & (~any_empty) & any_dirty
-
-            slot = jnp.where(any_empty, empty_idx,
-                             jnp.where(any_dirty, victim_idx, earliest_idx))
-            ta = jnp.where(any_empty, pbc_start,
-                           jnp.where(any_dirty, victim_dd,
-                                     jnp.maximum(pbc_start,
-                                                 dd[earliest_idx])))
-            pm_busy1 = pm_busy.at[victim_bank].set(jnp.where(
-                needs_victim, victim_pm_start + sc["nvm_w_occ"],
-                pm_busy[victim_bank]))
-            state2 = jnp.where(
-                needs_victim & (slot_ids == victim_idx), DRAIN, state1)
-            dd2 = jnp.where(
-                needs_victim & (slot_ids == victim_idx), victim_dd, dd)
-
-            # write the entry (new allocation or coalesce-in-place)
-            wslot = jnp.where(is_coalesce, idx, slot)
-            t_written = jnp.where(is_coalesce, pbc_start, ta) + sc["data_ns"]
-            ack = t_written + sc["ow_cpu_sw1"]
-            state3 = jnp.where(slot_ids == wslot, DIRTY, state2)
-            tag3 = tag.at[wslot].set(addr)
-            lru3 = lru.at[wslot].set(t_written)
-            dd3 = dd2
-
-            pm_writes_inc = needs_victim.astype(jnp.float64)
-            if scheme == int(Scheme.PB):
-                # drain-immediately policy (channel FIFO preserves the
-                # version order of same-line drains)
-                pm_start2 = jnp.maximum(pm_busy1[bank],
-                                        t_written + sc["ow_sw1_pm"])
-                dd_new = pm_start2 + sc["nvm_write"] + sc["ow_sw1_pm"]
-                state4 = jnp.where(slot_ids == wslot, DRAIN, state3)
-                dd4 = dd3.at[wslot].set(dd_new)
-                pm_busy2 = pm_busy1.at[bank].set(pm_start2 + sc["nvm_w_occ"])
-                pm_writes_inc = pm_writes_inc + 1.0
-            else:
-                # PB_RF threshold/preset drain-down over LRU Dirty
-                # entries, plus a keep-one-free heuristic: if the Empty
-                # pool is (nearly) exhausted, drain a couple of LRU Dirty
-                # entries pre-emptively so the PI front cannot cascade into
-                # head-of-line victim stalls.
-                dirty_cnt = jnp.sum((state3 == DIRTY) & slot_active)
-                empty_cnt = jnp.sum((state3 == EMPTY) & slot_active)
-                do_drain = dirty_cnt >= sc["threshold_count"]
-                k_thresh = jnp.where(do_drain,
-                                     dirty_cnt - sc["preset_count"], 0.0)
-                k_low = jnp.where(empty_cnt <= 1.0,
-                                  jnp.minimum(2.0, dirty_cnt), 0.0)
-                k = jnp.maximum(k_thresh, k_low)
-                key = jnp.where((state3 == DIRTY) & slot_active, lru3, INF)
-                rank = jnp.argsort(jnp.argsort(key)).astype(jnp.float64)
-                to_drain = (rank < k) & (state3 == DIRTY) & slot_active
-                banks = tag3 % B
-                # rank among drained entries sharing a bank (serializes the
-                # burst per PM bank, overlapping across banks)
-                same_bank = banks[:, None] == banks[None, :]
-                earlier = rank[None, :] < rank[:, None]
-                rank_b = jnp.sum(
-                    (same_bank & earlier & to_drain[None, :]).astype(
-                        jnp.float64), axis=1)
-                start_i = (jnp.maximum(pm_busy1[banks],
-                                       t_written + sc["ow_sw1_pm"])
-                           + rank_b * sc["nvm_w_occ"])
-                dd_j = start_i + sc["nvm_write"] + sc["ow_sw1_pm"]
-                state4 = jnp.where(to_drain, DRAIN, state3)
-                dd4 = jnp.where(to_drain, dd_j, dd3)
-                busy_after = jnp.where(to_drain,
-                                       start_i + sc["nvm_w_occ"], 0.0)
-                per_bank = jnp.max(
-                    jnp.where(same_bank & to_drain[None, :],
-                              busy_after[None, :], 0.0), axis=1)
-                pm_busy2 = jnp.maximum(
-                    pm_busy1,
-                    jnp.zeros((B,), jnp.float64).at[banks].max(per_bank))
-                pm_writes_inc = pm_writes_inc + k
-
-            stall = jnp.where(is_coalesce, 0.0, ta - pbc_start)
-            stats = stats.at[S_VICTIM_CNT].add(
-                ((~is_coalesce) & (~any_empty)).astype(jnp.float64))
-            stats = stats.at[S_PBCQ_SUM].add(
-                jnp.maximum(pbc_busy - arr, 0.0))
-            # Only a genuine Empty-shortage stall (ta > pbc_start) holds
-            # the PI front beyond the pipelined issue interval.
-            pbc_free = jnp.maximum(
-                jnp.maximum(pbc_busy, arr) + sc["pbc_occ_ns"],
-                jnp.where(is_coalesce | (ta <= pbc_start), 0.0, ta))
-            stats = stats.at[S_PERSIST_SUM].add(ack - t)
-            stats = stats.at[S_PERSIST_CNT].add(1.0)
-            stats = stats.at[S_COALESCES].add(is_coalesce.astype(jnp.float64))
-            stats = stats.at[S_PM_WRITES].add(pm_writes_inc)
-            stats = stats.at[S_STALL_TIME].add(stall)
-            return (clock.at[c].set(ack), ptr, tag3, state4, lru3, dd4,
-                    pm_busy2, pbc_free, stats)
-
-        # ---------------- barrier ------------------------------------------
-        def br_barrier(a):
-            (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy, stats) = a
-            # centralized barrier over all C cores; the last arrival
-            # releases everyone at its arrival time.
-            last = (bcount + 1) >= C
-            released = jnp.where(blocked, t, clock).at[c].set(t)
-            waiting = clock.at[c].set(INF * 0.9)
-            return (jnp.where(last, released, waiting), ptr, tag, state,
-                    lru, dd, pm_busy, pbc_busy, stats)
-
-        new = jax.lax.switch(
-            jnp.clip(op, 0, 5),
-            [br_compute, br_dram_read, br_dram_write, br_pm_read,
-             br_persist, br_barrier],
-            (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy, stats))
-        (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy, stats) = new
-        is_bar = valid & (op == int(Op.BARRIER))
-        last = is_bar & ((bcount + 1) >= C)
-        blocked = jnp.where(last, jnp.zeros_like(blocked),
-                            jnp.where(is_bar, blocked.at[c].set(True),
-                                      blocked))
-        bcount = jnp.where(last, 0, jnp.where(is_bar, bcount + 1, bcount))
-        ptr = ptr.at[c].add(jnp.where(valid, 1, 0))
-        return (clock, ptr, tag, state, lru, dd, pm_busy, pbc_busy,
-                blocked, bcount, stats), None
-
-    init = (
-        jnp.zeros((C,), jnp.float64),            # clocks
-        jnp.zeros((C,), jnp.int32),              # ptrs
-        jnp.full((max_pbe,), -1, jnp.int32),     # TAT tags
-        jnp.full((max_pbe,), EMPTY, jnp.int32),  # ST states
-        jnp.zeros((max_pbe,), jnp.float64),      # LRU stamps
-        jnp.zeros((max_pbe,), jnp.float64),      # drain-ack times
-        jnp.zeros((B,), jnp.float64),            # PM bank next-free times
-        jnp.zeros((), jnp.float64),              # PBC next-free
-        jnp.zeros((C,), bool),                   # blocked at barrier
-        jnp.zeros((), jnp.int32),                # barrier arrival count
-        jnp.zeros((N_STATS,), jnp.float64),
-    )
-    final, _ = jax.lax.scan(step, init, None, length=n_steps)
-    clock = final[0]
-    stats = final[-1]
-    runtime = jnp.max(jnp.where(clock < INF * 0.5, clock, 0.0))
-    return runtime, stats
-
-
-_BUCKET = 16384
-
-
-def _pad_up(n: int, b: int = _BUCKET) -> int:
-    return ((max(n, 1) + b - 1) // b) * b
-
-
-def _padded_arrays(trace: Trace):
-    """Pad trace arrays / step counts to bucket sizes so workloads of
-    similar size share one compiled program (jit keys on shapes)."""
-    C, L = trace.ops.shape
-    Lp = _pad_up(L)
-    ops = np.zeros((C, Lp), np.int32)
-    addrs = np.zeros((C, Lp), np.int32)
-    gaps = np.zeros((C, Lp), np.float32)
-    ops[:, :L] = trace.ops
-    addrs[:, :L] = trace.addrs
-    gaps[:, :L] = trace.gaps
-    return ops, addrs, gaps, trace.lengths, _pad_up(trace.total_ops)
-
-
-def simulate(trace: Trace, config: PCSConfig, max_pbe: int | None = None
-             ) -> SimResult:
-    """Simulate one (trace, config) pair and return aggregate metrics."""
-    max_pbe = max_pbe or config.n_pbe
-    if config.n_pbe > max_pbe:
-        raise ValueError("n_pbe exceeds max_pbe")
-    sc_np = _scalars_from_config(config)
-    ops, addrs, gaps, lengths, n_steps = _padded_arrays(trace)
-    with jax.enable_x64(True):
-        sc = {k: jnp.asarray(v, jnp.float64) for k, v in sc_np.items()}
-        runtime, stats = _simulate(
-            jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(gaps),
-            jnp.asarray(lengths), sc,
-            scheme=int(config.scheme), max_pbe=max_pbe, n_steps=n_steps,
-            pm_banks=config.pm_banks)
-        runtime = float(runtime)
-        stats = np.asarray(stats)
-    return _result(runtime, stats)
-
-
-def _result(runtime: float, stats: np.ndarray) -> SimResult:
-    return SimResult(
-        runtime_ns=runtime,
-        persist_lat_ns=float(stats[S_PERSIST_SUM] / max(stats[S_PERSIST_CNT], 1)),
-        read_lat_ns=float(stats[S_READ_SUM] / max(stats[S_READ_CNT], 1)),
-        persists=int(stats[S_PERSIST_CNT]),
-        pm_reads=int(stats[S_READ_CNT]),
-        read_hits=int(stats[S_READ_HITS]),
-        coalesces=int(stats[S_COALESCES]),
-        pm_writes=int(stats[S_PM_WRITES]),
-        stall_ns=float(stats[S_STALL_TIME]),
-        pi_detours=int(stats[S_PI_DETOURS]),
-    )
-
-
-def simulate_sweep(trace: Trace, configs: List[PCSConfig]) -> List[SimResult]:
-    """vmap one trace over many configs sharing a scheme (Fig. 1 / Fig. 8).
-
-    All latency scalars are batched; scheme and the padded PBE capacity are
-    shared statics, so the whole sweep is a single compiled program.
-    """
-    if not configs:
-        return []
-    scheme = configs[0].scheme
-    if any(c.scheme != scheme for c in configs):
-        raise ValueError("sweep configs must share a scheme")
-    max_pbe = max(c.n_pbe for c in configs)
-    rows = [_scalars_from_config(c) for c in configs]
-    ops, addrs, gaps, lengths, n_steps = _padded_arrays(trace)
-    with jax.enable_x64(True):
-        sc = {k: jnp.asarray([r[k] for r in rows], jnp.float64) for k in rows[0]}
-        fn = jax.vmap(
-            lambda s: _simulate(
-                jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(gaps),
-                jnp.asarray(lengths), s,
-                scheme=int(scheme), max_pbe=max_pbe, n_steps=n_steps,
-                pm_banks=configs[0].pm_banks))
-        runtimes, stats = fn(sc)
-        runtimes = np.asarray(runtimes)
-        stats = np.asarray(stats)
-    return [_result(float(runtimes[i]), stats[i]) for i in range(len(configs))]
+__all__ = ["SimResult", "simulate", "simulate_grid", "simulate_sweep"]

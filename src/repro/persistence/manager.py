@@ -31,13 +31,15 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core.params import (DEFAULT_DRAIN_PRESET,
+                               DEFAULT_DRAIN_THRESHOLD, SCHEME_NAMES, Scheme)
 from repro.persistence.store import DurableStore, HostBufferTier, _deserialize, _serialize
 
-
-class PersistScheme(enum.Enum):
-    NOPB = "nopb"
-    PB = "pb"
-    PB_RF = "pb_rf"
+# The checkpoint tier speaks the same scheme vocabulary as the timed
+# engine and the untimed oracle: names and drain thresholds come from the
+# shared policy definitions, so the layers can no longer drift.
+PersistScheme = enum.Enum(
+    "PersistScheme", {s.name: SCHEME_NAMES[s] for s in Scheme})
 
 
 class ShardState(enum.Enum):
@@ -49,8 +51,8 @@ class ShardState(enum.Enum):
 class PCSCheckpointManager:
     def __init__(self, buffer: HostBufferTier, store: DurableStore, *,
                  scheme: PersistScheme = PersistScheme.PB_RF,
-                 drain_threshold: float = 0.8,
-                 drain_preset: float = 0.6,
+                 drain_threshold: float = DEFAULT_DRAIN_THRESHOLD,
+                 drain_preset: float = DEFAULT_DRAIN_PRESET,
                  sync_drain: bool = False):
         self.buffer = buffer
         self.store = store

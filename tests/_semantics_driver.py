@@ -1,0 +1,51 @@
+"""Shared schedule driver for the PB state-machine tests.
+
+Used by the deterministic tests (tests/test_semantics.py) and, when
+``hypothesis`` is installed, the property tests
+(tests/test_semantics_props.py).
+"""
+from repro.core import PCSConfig
+from repro.core.semantics import EventKind, PersistentBuffer
+
+
+def run_schedule(scheme, n_pbe, ops, ack_order):
+    """Drive the buffer with a schedule; return (pb, acked, reads).
+
+    PM write-acks may be reordered freely *across* addresses, but stay
+    FIFO *per address*: same-address drains travel the same
+    switch->PM->switch path (the protocol's write-order argument rests
+    on this), so a newer version's ack can never overtake an older one.
+    """
+    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=n_pbe))
+    acked = {}
+    pending = []
+    reads = []
+    version_of_payload = {}
+    ai = 0
+    for op, addr in ops:
+        if op == "persist":
+            payload = f"{addr}@{len(version_of_payload)}"
+            for e in pb.persist(addr, payload):
+                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
+                    acked[e.addr] = max(acked.get(e.addr, -1), e.version)
+                    version_of_payload[(e.addr, e.version)] = payload
+                if e.kind == EventKind.DRAIN_SENT:
+                    pending.append((e.addr, e.version))
+        elif op == "ack" and pending:
+            i = ack_order[ai % len(ack_order)] % len(pending)
+            ai += 1
+            a, _ = pending[i]
+            # per-address FIFO: deliver the oldest in-flight version
+            a, v = min((p for p in pending if p[0] == a),
+                       key=lambda p: p[1])
+            pending.remove((a, v))
+            for e in pb.pm_ack(a, v):
+                if e.kind == EventKind.DRAIN_SENT:
+                    pending.append((e.addr, e.version))
+                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
+                    acked[e.addr] = max(acked.get(e.addr, -1), e.version)
+        else:
+            data, ev = pb.read(addr)
+            reads.append((addr, data, ev))
+        pb.check_invariants()
+    return pb, acked, reads

@@ -1,0 +1,114 @@
+"""The batched engine front-end: one program for the whole paper grid.
+
+Acceptance for the core.engine refactor: ``simulate_grid`` runs a
+mixed-scheme {7 workloads x NoPB/PB/PB_RF} grid with exactly ONE XLA
+compilation (the scheme is traced, not static), and every per-cell
+``SimResult`` matches what ``simulate()`` returns for that cell.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Op, PCSConfig, Scheme, Trace, WORKLOADS, make_trace
+from repro.core.engine import (compile_count, simulate, simulate_grid,
+                               simulate_sweep)
+
+BUDGET = 400
+BUCKET = 1024
+TRACE_KW = {"fft": {"m": 9}}   # shrink the FFT read volume for test time
+FIELDS = ("runtime_ns", "persist_lat_ns", "read_lat_ns", "persists",
+          "pm_reads", "read_hits", "coalesces", "pm_writes", "stall_ns",
+          "pi_detours", "victim_drains")
+
+
+@pytest.fixture(scope="module")
+def tiny_traces():
+    return {name: make_trace(name, persist_budget=BUDGET,
+                             **TRACE_KW.get(name, {}))
+            for name in WORKLOADS}
+
+
+def _assert_cells_equal(a, b, label):
+    for f in FIELDS:
+        va, vb = getattr(a, f), getattr(b, f)
+        if isinstance(va, int):
+            assert va == vb, (label, f, va, vb)
+        else:
+            assert va == pytest.approx(vb, rel=1e-12), (label, f, va, vb)
+
+
+def test_mixed_scheme_grid_single_compile_matches_simulate(tiny_traces):
+    names = list(tiny_traces)
+    traces = [tiny_traces[n] for n in names]
+    configs = [PCSConfig(scheme=s)
+               for s in (Scheme.NOPB, Scheme.PB, Scheme.PB_RF)]
+    c0 = compile_count()
+    cells = simulate_grid(traces, configs, bucket=BUCKET)
+    assert compile_count() - c0 == 1, (
+        "mixed-scheme grid must lower to exactly one XLA program")
+    assert len(cells) == len(names) and all(
+        len(row) == len(configs) for row in cells)
+    for name, tr, row in zip(names, traces, cells):
+        for cfg, cell in zip(configs, row):
+            ref = simulate(tr, cfg, bucket=BUCKET)
+            _assert_cells_equal(cell, ref, (name, cfg.scheme.name))
+
+
+def test_grid_results_invariant_to_bucket(tiny_traces):
+    """Padding steps are no-ops: shape-bucket choice changes nothing."""
+    tr = tiny_traces["radiosity"]
+    cfg = PCSConfig(scheme=Scheme.PB_RF)
+    a = simulate(tr, cfg, bucket=BUCKET)
+    b = simulate(tr, cfg, bucket=2 * BUCKET)
+    _assert_cells_equal(a, b, "bucket")
+
+
+def test_sweep_allows_mixed_schemes(tiny_traces):
+    """simulate_sweep no longer refuses mixed-scheme config lists."""
+    tr = tiny_traces["raytrace"]
+    cfgs = [PCSConfig(scheme=Scheme.NOPB),
+            PCSConfig(scheme=Scheme.PB, n_pbe=8),
+            PCSConfig(scheme=Scheme.PB_RF, n_pbe=32)]
+    sweep = simulate_sweep(tr, cfgs, bucket=BUCKET)
+    assert len(sweep) == 3
+    for cfg, r in zip(cfgs, sweep):
+        ref = simulate(tr, cfg, max_pbe=32, bucket=BUCKET)
+        _assert_cells_equal(r, ref, cfg.scheme.name)
+
+
+def test_grid_pads_heterogeneous_core_counts():
+    """Traces with different core counts share one stacked program; the
+    padded cores never issue ops and never count toward barriers."""
+    def one_core_trace():
+        ops = [int(Op.PERSIST), int(Op.PM_READ)] * 8
+        addrs = list(range(16))
+        return Trace(ops=np.array([ops], np.int32),
+                     addrs=np.array([addrs], np.int32),
+                     gaps=np.full((1, 16), 2000.0, np.float32),
+                     lengths=np.array([16], np.int32), name="c1")
+
+    tr1 = one_core_trace()
+    tr8 = make_trace("radiosity", persist_budget=200)   # 8 cores, barriers=0
+    cfg = PCSConfig(scheme=Scheme.PB)
+    cells = simulate_grid([tr1, tr8], [cfg], bucket=BUCKET)
+    _assert_cells_equal(cells[0][0], simulate(tr1, cfg, bucket=BUCKET), "c1")
+    _assert_cells_equal(cells[1][0], simulate(tr8, cfg, bucket=BUCKET), "c8")
+
+
+def test_grid_rejects_mixed_pm_banks(tiny_traces):
+    tr = tiny_traces["radiosity"]
+    with pytest.raises(ValueError, match="pm_banks"):
+        simulate_grid([tr], [PCSConfig(pm_banks=4), PCSConfig(pm_banks=8)],
+                      bucket=BUCKET)
+
+
+def test_barrier_workload_in_grid(tiny_traces):
+    """A barrier-heavy trace (FFT) completes and matches its single-cell
+    run inside a stacked grid (regression: barrier release threshold must
+    count only live cores)."""
+    tr = tiny_traces["fft"]
+    cfg = PCSConfig(scheme=Scheme.PB_RF)
+    cells = simulate_grid([tr, tiny_traces["radiosity"]], [cfg],
+                          bucket=BUCKET)
+    ref = simulate(tr, cfg, bucket=BUCKET)
+    _assert_cells_equal(cells[0][0], ref, "fft-in-grid")
+    assert ref.runtime_ns > 0

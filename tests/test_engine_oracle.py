@@ -1,0 +1,107 @@
+"""Cross-validation: the timed engine against the untimed oracle.
+
+On single-core random traces whose compute gaps exceed the worst-case
+drain round trip ("prompt-ack regime"), the timed engine's event counts
+must match the untimed state machine of ``core.semantics`` exactly, for
+all three schemes: every drain scheduled by one op completes before the
+next op, which is precisely the oracle's semantics when every pending PM
+ack is delivered between ops.
+
+This is the drift guard between the three policy copies: the traced
+policy (``engine.policy.drain_threshold_preset``), its scalar twin
+(``engine.policy.rf_drain_count``, used by the oracle) and the LRU /
+coalescing rules shared by both layers.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import Op, PCSConfig, Scheme, Trace
+from repro.core.engine import simulate
+from repro.core.semantics import EventKind, PersistentBuffer
+
+# gap >> worst-case drain ack (PBC + burst of n_pbe bank-serialized
+# writes + links): keeps the machine uncongested between ops.
+GAP_NS = 50_000.0
+
+
+def _random_ops(seed, n_ops=160, n_addrs=12, p_persist=0.55):
+    rng = random.Random(seed)
+    return [(Op.PERSIST if rng.random() < p_persist else Op.PM_READ,
+             rng.randrange(n_addrs)) for _ in range(n_ops)]
+
+
+def _as_trace(op_list):
+    ops = np.array([[int(o) for o, _ in op_list]], np.int32)
+    addrs = np.array([[a for _, a in op_list]], np.int32)
+    gaps = np.full(ops.shape, GAP_NS, np.float32)
+    lengths = np.array([ops.shape[1]], np.int32)
+    return Trace(ops=ops, addrs=addrs, gaps=gaps, lengths=lengths,
+                 name="xval")
+
+
+def _oracle_counts(op_list, scheme, n_pbe):
+    """Drive the oracle, delivering every pending PM ack between ops."""
+    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=n_pbe))
+    pending = []
+    victim_drains = 0
+    for op, addr in op_list:
+        if op == Op.PERSIST:
+            events = pb.persist(addr, f"v@{addr}")
+            pending += [(e.addr, e.version) for e in events
+                        if e.kind == EventKind.DRAIN_SENT]
+            victim_drains += sum(
+                1 for e in events if e.kind == EventKind.STALLED)
+        else:
+            pb.read(addr)
+        # prompt-ack regime: all in-flight drains complete before the
+        # next op (FIFO channel order)
+        while pending:
+            a, v = pending.pop(0)
+            events = pb.pm_ack(a, v)
+            pending += [(e.addr, e.version) for e in events
+                        if e.kind == EventKind.DRAIN_SENT]
+    return dict(
+        persists=pb.stats["persists"],
+        coalesces=pb.stats["coalesces"],
+        read_hits=pb.stats["read_hits"],
+        pm_reads=pb.stats["read_hits"] + pb.stats["read_misses"],
+        pm_writes=(pb.pm.writes_applied if scheme == Scheme.NOPB
+                   else pb.stats["drains"]),
+        victim_drains=victim_drains,
+    )
+
+
+@pytest.mark.parametrize("scheme", [Scheme.NOPB, Scheme.PB, Scheme.PB_RF])
+@pytest.mark.parametrize("seed,n_pbe", [(0, 8), (1, 8), (2, 4), (3, 16)])
+def test_engine_counts_match_oracle(scheme, seed, n_pbe):
+    op_list = _random_ops(seed)
+    res = simulate(_as_trace(op_list), PCSConfig(scheme=scheme, n_pbe=n_pbe),
+                   bucket=256)
+    want = _oracle_counts(op_list, scheme, n_pbe)
+    got = dict(persists=res.persists, coalesces=res.coalesces,
+               read_hits=res.read_hits, pm_reads=res.pm_reads,
+               pm_writes=res.pm_writes, victim_drains=res.victim_drains)
+    assert got == want, (scheme.name, seed, n_pbe)
+
+
+@pytest.mark.parametrize("seed", [5, 6])
+def test_engine_matches_oracle_hot_set(seed):
+    """High write locality (the radiosity shape): coalescing and read
+    forwarding dominate; counts must still agree exactly."""
+    rng = random.Random(seed)
+    op_list = [(Op.PERSIST if rng.random() < 0.7 else Op.PM_READ,
+                rng.randrange(4)) for _ in range(200)]
+    for scheme in (Scheme.PB, Scheme.PB_RF):
+        res = simulate(_as_trace(op_list), PCSConfig(scheme=scheme, n_pbe=8),
+                       bucket=256)
+        want = _oracle_counts(op_list, scheme, 8)
+        assert res.coalesces == want["coalesces"]
+        assert res.read_hits == want["read_hits"]
+        assert res.pm_writes == want["pm_writes"]
+        assert res.victim_drains == want["victim_drains"] == 0
+    # PB_RF on a 4-line hot set actually coalesces; the oracle agrees
+    res_rf = simulate(_as_trace(op_list), PCSConfig(scheme=Scheme.PB_RF,
+                                                    n_pbe=8), bucket=256)
+    assert res_rf.coalesces > 0 and res_rf.read_hits > 0

@@ -1,60 +1,39 @@
-"""Property tests: the paper's three correctness criteria (Section IV-A)
-hold for the PB/PBC/PBCS state machine under arbitrary schedules."""
+"""Deterministic tests of the PB/PBC/PBCS state machine (Section IV-A).
+
+The hypothesis-based property tests live in tests/test_semantics_props.py
+and are skipped when the optional ``hypothesis`` dependency is absent;
+this module keeps a deterministic random-schedule fallback so the three
+correctness criteria are always exercised by the tier-1 suite.
+"""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import PCSConfig, Scheme
 from repro.core.semantics import EventKind, PersistentBuffer
 
+from _semantics_driver import run_schedule
+
 SCHEMES = [Scheme.NOPB, Scheme.PB, Scheme.PB_RF]
 
 
-def run_schedule(scheme, n_pbe, ops, ack_order):
-    """Drive the buffer with a schedule; return (pb, acked, reads)."""
-    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=n_pbe))
-    acked = {}
-    pending = []
-    reads = []
-    version_of_payload = {}
-    ai = 0
-    for op, addr in ops:
-        if op == "persist":
-            payload = f"{addr}@{len(version_of_payload)}"
-            for e in pb.persist(addr, payload):
-                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
-                    acked[e.addr] = max(acked.get(e.addr, -1), e.version)
-                    version_of_payload[(e.addr, e.version)] = payload
-                if e.kind == EventKind.DRAIN_SENT:
-                    pending.append((e.addr, e.version))
-        elif op == "ack" and pending:
-            i = ack_order[ai % len(ack_order)] % len(pending)
-            ai += 1
-            a, v = pending.pop(i)
-            for e in pb.pm_ack(a, v):
-                if e.kind == EventKind.DRAIN_SENT:
-                    pending.append((e.addr, e.version))
-                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
-                    acked[e.addr] = max(acked.get(e.addr, -1), e.version)
-        else:
-            data, ev = pb.read(addr)
-            reads.append((addr, data, ev))
-        pb.check_invariants()
-    return pb, acked, reads
+def _random_schedule(rng, n_ops=120, n_addrs=6):
+    ops = [(rng.choice(["persist", "ack", "read"]), rng.randrange(n_addrs))
+           for _ in range(n_ops)]
+    ack_order = [rng.randrange(32) for _ in range(16)]
+    return ops, ack_order
 
 
-@settings(max_examples=60, deadline=None)
-@given(
-    scheme=st.sampled_from(SCHEMES),
-    n_pbe=st.integers(2, 8),
-    ops=st.lists(st.tuples(st.sampled_from(["persist", "ack", "read"]),
-                           st.integers(0, 5)), min_size=1, max_size=120),
-    ack_order=st.lists(st.integers(0, 31), min_size=1, max_size=32),
-)
-def test_crash_consistency_and_write_order(scheme, n_pbe, ops, ack_order):
-    pb, acked, _ = run_schedule(scheme, n_pbe, ops, ack_order)
-    # crash at an arbitrary point, then recover: no acked version is lost
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_crash_consistency_random_schedules(scheme, seed):
+    """Deterministic fallback for the crash-consistency property: drive
+    the machine with a seeded random schedule, crash, recover — no acked
+    version may be lost."""
+    rng = random.Random(1000 * int(scheme) + seed)
+    ops, ack_order = _random_schedule(rng)
+    pb, acked, _ = run_schedule(scheme, n_pbe=2 + seed, ops=ops,
+                                ack_order=ack_order)
     pb.crash()
     pb.recover()
     for addr, ver in acked.items():
@@ -63,24 +42,18 @@ def test_crash_consistency_and_write_order(scheme, n_pbe, ops, ack_order):
         assert rec[0] >= ver, f"addr {addr}: pm={rec[0]} < acked={ver}"
 
 
-@settings(max_examples=60, deadline=None)
-@given(
-    scheme=st.sampled_from([Scheme.PB, Scheme.PB_RF]),
-    n_pbe=st.integers(2, 8),
-    ops=st.lists(st.tuples(st.sampled_from(["persist", "ack", "read"]),
-                           st.integers(0, 3)), min_size=1, max_size=120),
-    ack_order=st.lists(st.integers(0, 31), min_size=1, max_size=32),
-)
-def test_write_read_order(scheme, n_pbe, ops, ack_order):
-    """A read must observe the newest acked version (buffer or PM)."""
-    pb, acked, reads = run_schedule(scheme, n_pbe, ops, ack_order)
-    # replay: after the final state, reads of every acked address return
-    # the newest acked payload from somewhere in the persistent domain
+@pytest.mark.parametrize("scheme", [Scheme.PB, Scheme.PB_RF])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_write_read_order_random_schedules(scheme, seed):
+    """Deterministic fallback for write-read order: after the run, reads
+    of every acked address observe the newest acked version or newer."""
+    rng = random.Random(2000 * int(scheme) + seed)
+    ops, ack_order = _random_schedule(rng, n_addrs=4)
+    pb, acked, _ = run_schedule(scheme, n_pbe=2 + seed, ops=ops,
+                                ack_order=ack_order)
     for addr, ver in acked.items():
         data, ev = pb.read(addr)
         assert data is not None
-        assert data == f"{addr}@" + data.split("@")[1]  # well-formed
-        # version check: the entry served is >= newest acked
         assert ev.version >= ver or ev.kind == EventKind.READ_FROM_PM
 
 
@@ -125,52 +98,38 @@ def test_stall_when_all_draining():
     assert any(e.kind == EventKind.PERSIST_ACK and e.addr == 3 for e in evs)
 
 
-@settings(max_examples=40, deadline=None)
-@given(
-    n_pbe=st.integers(4, 16),
-    addrs=st.lists(st.integers(0, 30), min_size=1, max_size=200),
-)
-def test_rf_threshold_preset_invariant(n_pbe, addrs):
+def test_rf_threshold_preset_invariant_deterministic():
     """After any persist under PB_RF, the Dirty count never exceeds the
     drain threshold (the drain-down runs to the preset, Section V-D1)."""
     from repro.core.params import PBEState
-    cfg = PCSConfig(scheme=Scheme.PB_RF, n_pbe=n_pbe)
-    pb = PersistentBuffer(cfg)
-    for i, a in enumerate(addrs):
-        evs = pb.persist(a, f"v{i}")
-        dirty = sum(1 for e in pb.entries if e.state == PBEState.DIRTY)
-        assert dirty <= max(cfg.threshold_count, cfg.preset_count + 1), (
-            dirty, cfg.threshold_count)
-        pb.check_invariants()
+    rng = random.Random(7)
+    for n_pbe in (4, 8, 16):
+        cfg = PCSConfig(scheme=Scheme.PB_RF, n_pbe=n_pbe)
+        pb = PersistentBuffer(cfg)
+        for i in range(200):
+            pb.persist(rng.randrange(30), f"v{i}")
+            dirty = sum(1 for e in pb.entries if e.state == PBEState.DIRTY)
+            assert dirty <= max(cfg.threshold_count, cfg.preset_count + 1), (
+                dirty, cfg.threshold_count)
+            pb.check_invariants()
 
 
-@settings(max_examples=40, deadline=None)
-@given(
-    scheme=st.sampled_from([Scheme.PB, Scheme.PB_RF]),
-    ops=st.lists(st.tuples(st.booleans(), st.integers(0, 6)),
-                 min_size=1, max_size=150),
-)
-def test_reads_never_return_stale_after_ack(scheme, ops):
-    """Write-read order: a read after an acked persist returns that
-    version's payload or newer, never an older one."""
-    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=4))
-    newest = {}
-    pending = []
-    for is_persist, addr in ops:
-        if is_persist:
-            for e in pb.persist(addr, None):
-                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
-                    newest[e.addr] = max(newest.get(e.addr, -1), e.version)
-                if e.kind == EventKind.DRAIN_SENT:
-                    pending.append((e.addr, e.version))
-        elif pending:
-            a, v = pending.pop(0)   # in-order acks (FIFO channel)
-            for e in pb.pm_ack(a, v):
-                if e.kind == EventKind.DRAIN_SENT:
-                    pending.append((e.addr, e.version))
-                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
-                    newest[e.addr] = max(newest.get(e.addr, -1), e.version)
-        if addr in newest:
-            _, ev = pb.read(addr)
-            assert ev.version >= newest[addr], (
-                scheme, addr, ev.version, newest[addr])
+def test_rf_keep_one_free_drains_early():
+    """The shared keep-one-free heuristic (engine.policy.rf_drain_count):
+    when the Empty pool is exhausted, the PB_RF policy drains LRU Dirty
+    entries pre-emptively even below the threshold fill."""
+    from repro.core.engine.policy import (RF_EMPTY_SLACK, RF_LOW_WATER_DRAINS,
+                                          rf_drain_count)
+    from repro.core.params import PBEState
+    # below threshold but out of Empty slots -> the low-water path fires
+    assert rf_drain_count(dirty=3, empty=RF_EMPTY_SLACK, threshold=7,
+                          preset=4) == min(RF_LOW_WATER_DRAINS, 3)
+    # above threshold -> drain down to the preset
+    assert rf_drain_count(dirty=7, empty=5, threshold=7, preset=4) == 3
+    # plenty of room -> no drains
+    assert rf_drain_count(dirty=3, empty=5, threshold=7, preset=4) == 0
+
+    pb = PersistentBuffer(PCSConfig(scheme=Scheme.PB_RF, n_pbe=4))
+    for a in (0, 1, 2):   # third persist leaves <= 1 Empty slot
+        pb.persist(a, "x")
+    assert sum(1 for e in pb.entries if e.state == PBEState.DRAIN) >= 1

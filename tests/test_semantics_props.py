@@ -1,0 +1,109 @@
+"""Property tests: the paper's three correctness criteria (Section IV-A)
+hold for the PB/PBC/PBCS state machine under arbitrary schedules.
+
+Requires the optional ``hypothesis`` dependency; the deterministic
+fallbacks in tests/test_semantics.py always run.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PCSConfig, Scheme
+from repro.core.semantics import EventKind, PersistentBuffer
+
+from _semantics_driver import run_schedule
+
+SCHEMES = [Scheme.NOPB, Scheme.PB, Scheme.PB_RF]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    scheme=st.sampled_from(SCHEMES),
+    n_pbe=st.integers(2, 8),
+    ops=st.lists(st.tuples(st.sampled_from(["persist", "ack", "read"]),
+                           st.integers(0, 5)), min_size=1, max_size=120),
+    ack_order=st.lists(st.integers(0, 31), min_size=1, max_size=32),
+)
+def test_crash_consistency_and_write_order(scheme, n_pbe, ops, ack_order):
+    pb, acked, _ = run_schedule(scheme, n_pbe, ops, ack_order)
+    # crash at an arbitrary point, then recover: no acked version is lost
+    pb.crash()
+    pb.recover()
+    for addr, ver in acked.items():
+        rec = pb.pm.read(addr)
+        assert rec is not None, f"acked addr {addr} lost"
+        assert rec[0] >= ver, f"addr {addr}: pm={rec[0]} < acked={ver}"
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    scheme=st.sampled_from([Scheme.PB, Scheme.PB_RF]),
+    n_pbe=st.integers(2, 8),
+    ops=st.lists(st.tuples(st.sampled_from(["persist", "ack", "read"]),
+                           st.integers(0, 3)), min_size=1, max_size=120),
+    ack_order=st.lists(st.integers(0, 31), min_size=1, max_size=32),
+)
+def test_write_read_order(scheme, n_pbe, ops, ack_order):
+    """A read must observe the newest acked version (buffer or PM)."""
+    pb, acked, reads = run_schedule(scheme, n_pbe, ops, ack_order)
+    # replay: after the final state, reads of every acked address return
+    # the newest acked payload from somewhere in the persistent domain
+    for addr, ver in acked.items():
+        data, ev = pb.read(addr)
+        assert data is not None
+        assert data == f"{addr}@" + data.split("@")[1]  # well-formed
+        # version check: the entry served is >= newest acked
+        assert ev.version >= ver or ev.kind == EventKind.READ_FROM_PM
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_pbe=st.integers(4, 16),
+    addrs=st.lists(st.integers(0, 30), min_size=1, max_size=200),
+)
+def test_rf_threshold_preset_invariant(n_pbe, addrs):
+    """After any persist under PB_RF, the Dirty count never exceeds the
+    drain threshold (the drain-down runs to the preset, Section V-D1)."""
+    from repro.core.params import PBEState
+    cfg = PCSConfig(scheme=Scheme.PB_RF, n_pbe=n_pbe)
+    pb = PersistentBuffer(cfg)
+    for i, a in enumerate(addrs):
+        evs = pb.persist(a, f"v{i}")
+        dirty = sum(1 for e in pb.entries if e.state == PBEState.DIRTY)
+        assert dirty <= max(cfg.threshold_count, cfg.preset_count + 1), (
+            dirty, cfg.threshold_count)
+        pb.check_invariants()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    scheme=st.sampled_from([Scheme.PB, Scheme.PB_RF]),
+    ops=st.lists(st.tuples(st.booleans(), st.integers(0, 6)),
+                 min_size=1, max_size=150),
+)
+def test_reads_never_return_stale_after_ack(scheme, ops):
+    """Write-read order: a read after an acked persist returns that
+    version's payload or newer, never an older one."""
+    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=4))
+    newest = {}
+    pending = []
+    for is_persist, addr in ops:
+        if is_persist:
+            for e in pb.persist(addr, None):
+                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
+                    newest[e.addr] = max(newest.get(e.addr, -1), e.version)
+                if e.kind == EventKind.DRAIN_SENT:
+                    pending.append((e.addr, e.version))
+        elif pending:
+            a, v = pending.pop(0)   # in-order acks (FIFO channel)
+            for e in pb.pm_ack(a, v):
+                if e.kind == EventKind.DRAIN_SENT:
+                    pending.append((e.addr, e.version))
+                if e.kind in (EventKind.PERSIST_ACK, EventKind.COALESCED):
+                    newest[e.addr] = max(newest.get(e.addr, -1), e.version)
+        if addr in newest:
+            _, ev = pb.read(addr)
+            assert ev.version >= newest[addr], (
+                scheme, addr, ev.version, newest[addr])
