@@ -1,11 +1,22 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench-smoke bench calibrate
+.PHONY: test test-all test-fuzz bench-smoke bench calibrate
 
-# tier-1 verify (ROADMAP.md)
+# fast suite (<1 min): everything except the @slow big-model smokes and
+# exhaustive grids
 test:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+# tier-1 verify (ROADMAP.md): the whole suite, slow tests included
+test-all:
 	$(PYTHON) -m pytest -x -q
+
+# differential crash-point conformance fuzzing at a raised budget
+# (engine <-> oracle; see tests/test_crash_differential.py)
+test-fuzz:
+	CRASH_FUZZ_SEEDS=20 CRASH_FUZZ_EXAMPLES=150 \
+	$(PYTHON) -m pytest -x -q tests/test_crash_differential.py
 
 # each figure on a tiny trace (<60s); writes BENCH_engine.json
 bench-smoke:

@@ -1,0 +1,78 @@
+"""Recovery figure: durability and recovery cost vs crash time.
+
+For NoPB / PB / PB_RF, crash the timed engine at fractions of the
+workload's NoPB runtime and record (a) the persisted fraction — how much
+of the issued work survives crash + recovery (Section V-D4) — and
+(b) the modeled recovery latency of the drain-all pass over the
+surviving Dirty/Drain PBEs.  The whole sweep — every workload x scheme x
+crash point — is ONE ``simulate_grid`` call: the crash instant is a
+traced config scalar like every latency.
+
+The ack-at-switch schemes dominate the volatile baseline here: at any
+crash instant more persists have completed (acks come back from the
+first switch), and all of them are durable.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import PCSConfig, Scheme, simulate_grid
+from repro.core.engine import compile_count
+
+from benchmarks import _shared
+from benchmarks._shared import emit, trace
+
+FRACS = (0.25, 0.5, 0.75)
+NAMES = ("radiosity", "cholesky", "fft")
+# smoke keeps one workload: the config axis carries one crash-anchor
+# group per workload, so cells grow quadratically with the name count
+SMOKE_NAMES = ("radiosity",)
+SCHEMES = (("nopb", Scheme.NOPB), ("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF))
+
+# telemetry of the recovery sweep for BENCH_engine.json (set by run())
+sweep_metrics: dict = {}
+
+
+def run() -> list:
+    names = SMOKE_NAMES if _shared.SMOKE else NAMES
+    traces = [trace(n) for n in names]
+    # Crash instants anchor on EACH workload's own NoPB (cached)
+    # runtime.  The grid is a {trace x config} cross product, so the
+    # config list carries one group per workload; workload i reads only
+    # its own group from cells[i] — still one compiled program.
+    ends = {n: _shared.result(n, Scheme.NOPB).runtime_ns for n in names}
+    configs, keys = [], []
+    for name in names:
+        for key, scheme in SCHEMES:
+            for f in FRACS:
+                configs.append(
+                    PCSConfig(scheme=scheme).with_crash(f * ends[name]))
+                keys.append((name, key, f))
+    c0, t0 = compile_count(), time.time()
+    cells = simulate_grid(traces, configs, bucket=_shared.bucket())
+    sweep_metrics.update(
+        recovery_sweep_wall_s=round(time.time() - t0, 3),
+        recovery_sweep_compiles=compile_count() - c0,
+        recovery_sweep_cells=len(traces) * len(SCHEMES) * len(FRACS),
+    )
+    rows = []
+    for name, row in zip(names, cells):
+        for (anchor, key, f), r in zip(keys, row):
+            if anchor != name:      # another workload's crash anchors
+                continue
+            scheme = dict(SCHEMES)[key]
+            total = _shared.result(name, scheme).persists
+            frac = r.durable_persists / max(total, 1)
+            rows.append((f"recovery_{key}_{name}_f{int(100 * f)}",
+                         round(frac, 4), "durable_fraction_of_run"))
+            rows.append((f"recovery_lat_{key}_{name}_f{int(100 * f)}",
+                         round(r.recovery_ns, 1), "recovery_ns"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

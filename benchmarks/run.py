@@ -35,11 +35,11 @@ def main() -> None:
     # imported late so smoke mode is set before any trace is built
     from benchmarks import (ckpt_tier_bench, fig1_switch_depth, fig5_speedup,
                             fig6_latency, fig7_rf_rates, fig8_pbe_sweep,
-                            kernel_bench)
+                            fig_recovery, kernel_bench)
     from repro.core.engine import compile_count
 
     figures = (fig1_switch_depth, fig5_speedup, fig6_latency, fig7_rf_rates,
-               fig8_pbe_sweep)
+               fig8_pbe_sweep, fig_recovery)
     extras = () if args.smoke else (ckpt_tier_bench, kernel_bench)
 
     rows, timings = [], {}
@@ -50,6 +50,15 @@ def main() -> None:
         rows.extend(mod.run())
         timings[name] = round(time.time() - t0, 2)
         rows.append((f"_elapsed_{name}", timings[name], "seconds"))
+
+    if args.smoke:
+        # the three-layer crash demo rides the smoke path so it can't rot
+        from examples.crash_recovery_demo import main as demo_main
+        t0 = time.time()
+        demo_main()
+        timings["crash_recovery_demo"] = round(time.time() - t0, 2)
+        rows.append(("_elapsed_crash_recovery_demo",
+                     timings["crash_recovery_demo"], "seconds"))
     _shared.emit(rows)
 
     if args.out is None:
@@ -63,6 +72,8 @@ def main() -> None:
         "figures_wall_s": timings,
         # telemetry of the shared {workload x scheme} one-program grid
         **{f"shared_{k}": v for k, v in _shared.grid_metrics.items()},
+        # telemetry of the {workload x scheme x crash-point} sweep
+        **fig_recovery.sweep_metrics,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

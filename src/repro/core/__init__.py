@@ -14,11 +14,12 @@ from repro.core.params import (LatencyProfile, Op, PBEState, PCSConfig,
                                Scheme)
 from repro.core.semantics import (Event, EventKind, PersistentBuffer,
                                   PersistentMemory)
-from repro.core.traces import Trace, WORKLOADS, make_trace
+from repro.core.traces import (Trace, WORKLOADS, fuzz_crash_ns, fuzz_trace,
+                               make_trace)
 
 __all__ = [
     "LatencyProfile", "Op", "PBEState", "PCSConfig", "Scheme",
     "Event", "EventKind", "PersistentBuffer", "PersistentMemory",
     "SimResult", "simulate", "simulate_grid", "simulate_sweep",
-    "Trace", "WORKLOADS", "make_trace",
+    "Trace", "WORKLOADS", "fuzz_crash_ns", "fuzz_trace", "make_trace",
 ]

@@ -73,21 +73,22 @@ def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None):
 
 
 @functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
-                                             "pm_banks"))
+                                             "pm_banks", "n_track"))
 def _run_cell(ops, addrs, gaps, lengths, scheme, sc, *,
-              max_pbe, n_steps, pm_banks):
+              max_pbe, n_steps, pm_banks, n_track):
     # single-cell program: no batch axes, so `lax.switch` lowers to real
     # branches instead of vmap's execute-all-and-select
     return scan_cell(ops, addrs, gaps, lengths, scheme, sc,
-                     max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks)
+                     max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
+                     n_track=n_track)
 
 
 @functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
-                                             "pm_banks"))
+                                             "pm_banks", "n_track"))
 def _run_grid(ops, addrs, gaps, lengths, schemes, sc, *,
-              max_pbe, n_steps, pm_banks):
+              max_pbe, n_steps, pm_banks, n_track):
     cell = functools.partial(scan_cell, max_pbe=max_pbe, n_steps=n_steps,
-                             pm_banks=pm_banks)
+                             pm_banks=pm_banks, n_track=n_track)
     over_cfg = jax.vmap(cell, in_axes=(None, None, None, None, 0, 0))
     over_tr = jax.vmap(over_cfg, in_axes=(0, 0, 0, 0, None, None))
     return over_tr(ops, addrs, gaps, lengths, schemes, sc)
@@ -95,13 +96,18 @@ def _run_grid(ops, addrs, gaps, lengths, schemes, sc, *,
 
 def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                   max_pbe: int | None = None,
-                  bucket: int = _BUCKET) -> List[List[SimResult]]:
+                  bucket: int = _BUCKET,
+                  track_addrs: int = 0) -> List[List[SimResult]]:
     """Simulate every (trace, config) cell in one compiled program.
 
     Returns a ``len(traces) x len(configs)`` nested list of SimResult.
     Schemes may be mixed freely; ``pm_banks`` must agree (array shape).
     ``bucket`` controls shape-padding granularity only — results are
-    invariant to it.
+    invariant to it.  A config's ``crash_at_ns`` is just another stacked
+    traced scalar, so crash-point sweeps share the one program.
+    ``track_addrs > 0`` additionally returns, per cell, the durable
+    version vector over addresses ``[0, track_addrs)`` (the differential
+    harness input); it is a static array shape, so changing it recompiles.
     """
     if not traces or not configs:
         return [[] for _ in traces]
@@ -114,32 +120,39 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
             # their branch semantics (~4x less work per scan step)
             sc = {k: jnp.asarray(v[0], jnp.float64)
                   for k, v in sc_np.items()}
-            runtime, stats = _run_cell(
+            out = _run_cell(
                 jnp.asarray(ops[0]), jnp.asarray(addrs[0]),
                 jnp.asarray(gaps[0]), jnp.asarray(lengths[0]),
                 jnp.asarray(schemes[0]), sc,
-                max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks)
-            runtimes = np.asarray(runtime)[None, None]
-            stats = np.asarray(stats)[None, None]
+                max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
+                n_track=track_addrs)
+            out = tuple(np.asarray(o)[None, None] for o in out)
         else:
             sc = {k: jnp.asarray(v, jnp.float64) for k, v in sc_np.items()}
-            runtimes, stats = _run_grid(
+            out = _run_grid(
                 jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(gaps),
                 jnp.asarray(lengths), jnp.asarray(schemes), sc,
-                max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks)
-            runtimes = np.asarray(runtimes)
-            stats = np.asarray(stats)
-    return [[result_from_stats(float(runtimes[i, j]), stats[i, j])
+                max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
+                n_track=track_addrs)
+            out = tuple(np.asarray(o) for o in out)
+    runtimes, stats, durable_ver, n_recov, recov_ns = out
+    return [[result_from_stats(
+                float(runtimes[i, j]), stats[i, j],
+                crash_at_ns=configs[j].crash_at_ns,
+                recovery_entries=int(n_recov[i, j]),
+                recovery_ns=float(recov_ns[i, j]),
+                durable_ver=(durable_ver[i, j][:track_addrs].copy()
+                             if track_addrs > 0 else None))
              for j in range(len(configs))] for i in range(len(traces))]
 
 
 def simulate(trace: Trace, config: PCSConfig,
              max_pbe: int | None = None, *,
-             bucket: int = _BUCKET) -> SimResult:
+             bucket: int = _BUCKET, track_addrs: int = 0) -> SimResult:
     """Simulate one (trace, config) pair and return aggregate metrics."""
     max_pbe = max_pbe or config.n_pbe
     return simulate_grid([trace], [config], max_pbe=max_pbe,
-                         bucket=bucket)[0][0]
+                         bucket=bucket, track_addrs=track_addrs)[0][0]
 
 
 def simulate_sweep(trace: Trace, configs: List[PCSConfig], *,

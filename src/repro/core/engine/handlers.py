@@ -22,11 +22,11 @@ import jax.numpy as jnp
 
 from repro.core.engine import channels, policy
 from repro.core.engine.state import (DIRTY, DRAIN, EMPTY, INF, MachineState,
-                                     S_COALESCES, S_DRAM_READS, S_PBCQ_SUM,
-                                     S_PERSIST_CNT, S_PERSIST_SUM,
-                                     S_PI_DETOURS, S_PM_WRITES, S_READ_CNT,
-                                     S_READ_HITS, S_READ_SUM, S_STALL_TIME,
-                                     S_VICTIM_CNT)
+                                     S_ACKED, S_COALESCES, S_DRAM_READS,
+                                     S_DURABLE, S_PBCQ_SUM, S_PERSIST_CNT,
+                                     S_PERSIST_SUM, S_PI_DETOURS, S_PM_WRITES,
+                                     S_READ_CNT, S_READ_HITS, S_READ_SUM,
+                                     S_STALL_TIME, S_VICTIM_CNT)
 
 
 class StepCtx(NamedTuple):
@@ -41,6 +41,12 @@ class StepCtx(NamedTuple):
     slot_active: jnp.ndarray  # (P,) live-slot mask (slot_ids < n_pbe)
     n_live: jnp.ndarray     # ()  number of cores participating in barriers
     n_banks: int            # static PM bank count
+    n_track: int = 0        # static durability-tracked address count
+
+
+def _tracked(ctx: StepCtx, addr):
+    """Is ``addr`` inside the durability-tracked window [0, n_track)?"""
+    return (addr >= 0) & (addr < ctx.n_track)
 
 
 # ---------------------------------------------------------------- volatile
@@ -130,6 +136,7 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     """Shared PB persist core: PBC service, lookup, allocation / victim
     selection, entry write — then the scheme's drain policy."""
     sc, t, addr = ctx.sc, ctx.t, ctx.addr
+    crash = sc["crash_at"]
     bank = channels.bank_of(addr, ctx.n_banks)
     arr = t + sc["ow_cpu_sw1"]
     pbc_start = channels.pbc_start(st.pbc_busy, arr,
@@ -138,6 +145,13 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     match_dirty = ctx.slot_active & (st.tag == addr) & (state1 == DIRTY)
     has_dirty = jnp.any(match_dirty)
     idx = jnp.argmax(match_dirty)
+
+    # durability tracking: this persist's per-address version number
+    A = st.aver.shape[0]
+    tracked = _tracked(ctx, addr)
+    a_idx = jnp.clip(addr, 0, A - 1)
+    v_new = st.aver[a_idx] + 1
+    aver2 = st.aver.at[a_idx].add(jnp.where(tracked, 1, 0))
 
     is_coalesce = jnp.logical_and(coalesce_enabled, has_dirty)
     # An in-flight (Drain) older version does NOT block the new persist
@@ -154,6 +168,14 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
                                   pbc_start + sc["ow_sw1_pm"])
     victim_dd = victim_pm_start + sc["nvm_write"] + sc["ow_sw1_pm"]
     needs_victim = (~is_coalesce) & (~any_empty) & any_dirty
+
+    # the victim's in-flight write is durable at PM iff its ack beats the
+    # crash (a later ack means the write is lost with the power)
+    vic_tag = st.tag[victim_idx]
+    vic_ok = (needs_victim & (victim_dd <= crash) & (vic_tag >= 0)
+              & (vic_tag < ctx.n_track))
+    pm_ver1 = st.pm_ver.at[jnp.clip(vic_tag, 0, A - 1)].max(
+        jnp.where(vic_ok, st.ver[victim_idx], 0))
 
     slot = jnp.where(any_empty, empty_idx,
                      jnp.where(any_dirty, victim_idx, earliest_idx))
@@ -176,11 +198,46 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     tag3 = st.tag.at[wslot].set(addr)
     lru3 = st.lru.at[wslot].set(t_written)
     dd3 = dd2
+    ver3 = st.ver.at[wslot].set(v_new)
 
     state4, dd4, pm_busy2, policy_writes = drain_policy(
         bank=bank, wslot=wslot, t_written=t_written, state3=state3,
         tag3=tag3, lru3=lru3, dd3=dd3, pm_busy1=pm_busy1)
-    pm_writes_inc = needs_victim.astype(jnp.float64) + policy_writes
+
+    # drains the policy just scheduled (Dirty -> Drain) whose PM ack
+    # beats the crash make their versions durable at the device
+    drained_now = (state4 == DRAIN) & (state3 == DIRTY)
+    drain_ok = (drained_now & (dd4 <= crash) & (tag3 >= 0)
+                & (tag3 < ctx.n_track))
+    pm_ver2 = pm_ver1.at[jnp.clip(tag3, 0, A - 1)].max(
+        jnp.where(drain_ok, ver3, 0))
+
+    # Switch-commit gate: a persist that issued before the crash but
+    # whose entry write lands only after it never reached the
+    # persistent switch.  Its PB-table effects (allocation, coalesce,
+    # policy drains) are discarded — otherwise it would overwrite a
+    # surviving entry whose in-flight drain is lost, dropping an acked
+    # version from the durable state.  The victim drain stands if the
+    # PBC emitted it before the power loss (its entry then survives in
+    # Drain when its ack is post-crash, so its version is never lost),
+    # and a non-committed persist consumes no version number.  Resource
+    # clocks (PBC/PM/core) stay as computed: the packet occupied them
+    # until the power died, and the core is dead afterwards anyway.
+    commit = t_written <= crash
+    vic_emit = needs_victim & (pbc_start <= crash)
+    vslot = ctx.slot_ids == victim_idx
+    state5 = jnp.where(commit, state4,
+                       jnp.where(vic_emit & vslot, DRAIN, st.state))
+    tag5 = jnp.where(commit, tag3, st.tag)
+    lru5 = jnp.where(commit, lru3, st.lru)
+    dd5 = jnp.where(commit, dd4,
+                    jnp.where(vic_emit & vslot, victim_dd, st.dd))
+    ver5 = jnp.where(commit, ver3, st.ver)
+    aver3 = jnp.where(commit, aver2, st.aver)
+    pm_ver3 = jnp.where(commit, pm_ver2, pm_ver1)
+    pm_busy3 = jnp.where(commit, pm_busy2, pm_busy1)
+    pm_writes_inc = (vic_emit.astype(jnp.float64)
+                     + jnp.where(commit, policy_writes, 0.0))
 
     stall = jnp.where(is_coalesce, 0.0, ta - pbc_start)
     stats = st.stats.at[S_VICTIM_CNT].add(
@@ -197,8 +254,15 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     stats = stats.at[S_COALESCES].add(is_coalesce.astype(jnp.float64))
     stats = stats.at[S_PM_WRITES].add(pm_writes_inc)
     stats = stats.at[S_STALL_TIME].add(stall)
-    return st._replace(clock=st.clock.at[ctx.c].set(ack), tag=tag3,
-                       state=state4, lru=lru3, dd=dd4, pm_busy=pm_busy2,
+    # A persist committed into the persistent switch is durable
+    # regardless of the drain's fate (the paper's core claim); the core
+    # only *observes* the ack if it lands before the crash.  ack beats
+    # the crash only if the write committed first, so acked => durable.
+    stats = stats.at[S_ACKED].add((ack <= crash).astype(jnp.float64))
+    stats = stats.at[S_DURABLE].add(commit.astype(jnp.float64))
+    return st._replace(clock=st.clock.at[ctx.c].set(ack), tag=tag5,
+                       state=state5, lru=lru5, dd=dd5, ver=ver5,
+                       aver=aver3, pm_ver=pm_ver3, pm_busy=pm_busy3,
                        pbc_busy=pbc_free, stats=stats)
 
 
@@ -206,16 +270,29 @@ def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
     sc, t, addr = ctx.sc, ctx.t, ctx.addr
 
     def nopb(st: MachineState) -> MachineState:
-        # Volatile switch: the persist round-trips to PM.
+        # Volatile switch: the persist round-trips to PM.  Nothing is
+        # durable until PM acks — a write whose ack lands after the
+        # crash is lost (and the core never saw the ack either).
         ow = sc["ow_cpu_pm"]
+        crash = sc["crash_at"]
         bank = channels.bank_of(addr, ctx.n_banks)
         pm_start = channels.service_start(st.pm_busy, bank, t + ow)
         ack = pm_start + sc["nvm_write"] + ow
+        ok = ack <= crash
+        A = st.aver.shape[0]
+        tracked = _tracked(ctx, addr)
+        a_idx = jnp.clip(addr, 0, A - 1)
+        v_new = st.aver[a_idx] + 1
         stats = st.stats.at[S_PERSIST_SUM].add(ack - t)
         stats = stats.at[S_PERSIST_CNT].add(1.0)
         stats = stats.at[S_PM_WRITES].add(1.0)
+        stats = stats.at[S_ACKED].add(ok.astype(jnp.float64))
+        stats = stats.at[S_DURABLE].add(ok.astype(jnp.float64))
         return st._replace(
             clock=st.clock.at[ctx.c].set(ack),
+            aver=st.aver.at[a_idx].add(jnp.where(tracked, 1, 0)),
+            pm_ver=st.pm_ver.at[a_idx].max(
+                jnp.where(tracked & ok, v_new, 0)),
             pm_busy=channels.reserve(st.pm_busy, bank, pm_start,
                                      sc["nvm_w_occ"]),
             stats=stats)
@@ -250,3 +327,34 @@ def handle_barrier(ctx: StepCtx, st: MachineState) -> MachineState:
 
 HANDLERS = [handle_compute, handle_dram_read, handle_dram_write,
             handle_pm_read, handle_persist, handle_barrier]
+
+
+# ---------------------------------------------------------------- recovery
+def recovery_snapshot(st: MachineState, scheme, sc, slot_active,
+                      n_banks: int, n_track: int):
+    """Section V-D4 recovery pass over the crash-time machine state.
+
+    Dispatches over the traced scheme like the op handlers: NoPB has no
+    PBEs, so its durable state is exactly ``pm_ver`` and recovery is
+    free; PB/PB_RF drain-all every surviving Dirty/Drain entry
+    (:func:`policy.surviving_entries`), merging the survivors' versions
+    into the durable-version vector.  Returns
+    ``(durable_ver (A,) i32, n_recovered f64, recovery_ns f64)``.
+    """
+    crash = sc["crash_at"]
+    A = st.pm_ver.shape[0]
+    zero = jnp.asarray(0.0, jnp.float64)
+
+    def nopb(_):
+        return st.pm_ver, zero, zero
+
+    def pb(_):
+        surviving = policy.surviving_entries(st.state, st.dd, slot_active,
+                                             crash)
+        in_range = surviving & (st.tag >= 0) & (st.tag < n_track)
+        dv = st.pm_ver.at[jnp.clip(st.tag, 0, A - 1)].max(
+            jnp.where(in_range, st.ver, 0))
+        n, cost = policy.recovery_drain_cost(sc, n_banks, st.tag, surviving)
+        return dv, n, cost
+
+    return jax.lax.switch(jnp.minimum(scheme, 1), [nopb, pb], None)

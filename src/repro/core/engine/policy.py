@@ -95,6 +95,43 @@ def drain_immediate(sc, bank, slot_ids, wslot, t_written,
     return state4, dd4, pm_busy2, jnp.asarray(1.0, jnp.float64)
 
 
+def surviving_entries(state, dd, slot_active, crash_at):
+    """Mask of PBEs that survive a power loss at ``crash_at``.
+
+    A Dirty entry always survives (the PB cells are persistent).  A
+    Drain entry survives iff its in-flight PM write is lost with the
+    power, i.e. its ack would have landed only after the crash; an ack
+    at or before the crash means the write reached PM and the entry is
+    (lazily) Empty at the crash instant.
+    """
+    return slot_active & ((state == DIRTY) |
+                          ((state == DRAIN) & (dd > crash_at)))
+
+
+def recovery_drain_cost(sc, n_banks, tag, surviving):
+    """Drain-all cost of the Section V-D4 recovery pass.
+
+    Every surviving entry is treated as Dirty and re-drained; drains
+    sharing a PM bank serialize at the bank's write occupancy and
+    overlap across banks (the same burst model as
+    :func:`drain_threshold_preset`).  Returns (n_entries, latency_ns);
+    latency is the time until the *last* re-drain is acked back at the
+    switch, zero when nothing survived.
+    """
+    B = n_banks
+    banks = jnp.where(surviving, tag % B, 0)
+    per_bank = jnp.zeros((B,), jnp.float64).at[banks].add(
+        surviving.astype(jnp.float64))
+    n = jnp.sum(surviving.astype(jnp.float64))
+    worst = jnp.max(per_bank)
+    cost = jnp.where(
+        n > 0,
+        (worst - 1.0) * sc["nvm_w_occ"] + sc["nvm_write"]
+        + 2.0 * sc["ow_sw1_pm"],
+        0.0)
+    return n, cost
+
+
 def drain_threshold_preset(sc, n_banks, slot_active, t_written,
                            state3, tag3, lru3, dd3, pm_busy1):
     """PB_RF: threshold/preset drain-down over LRU Dirty entries.

@@ -36,7 +36,9 @@ S_PI_DETOURS = 8
 S_DRAM_READS = 9
 S_VICTIM_CNT = 10    # persists that took the no-Empty victim path
 S_PBCQ_SUM = 11      # total PBC queueing wait (arrival -> service start)
-N_STATS = 12
+S_ACKED = 12         # persists whose ack reached the core before the crash
+S_DURABLE = 13       # persists whose payload survives crash + recovery
+N_STATS = 14
 
 EMPTY = int(PBEState.EMPTY)
 DIRTY = int(PBEState.DIRTY)
@@ -44,7 +46,14 @@ DRAIN = int(PBEState.DRAIN)
 
 
 class MachineState(NamedTuple):
-    """The scan carry: the entire machine at one instant."""
+    """The scan carry: the entire machine at one instant.
+
+    ``ver``/``aver``/``pm_ver`` are the durability-tracking arrays behind
+    the crash model: per-PBE held version, per-address issue counter, and
+    the newest version whose PM write-ack landed *before the crash point*
+    (a later ack means the in-flight write is lost with the power).
+    Addresses ``>= n_track`` are not tracked (A = max(n_track, 1)).
+    """
 
     clock: jnp.ndarray     # (C,)  f64  per-core clocks
     ptr: jnp.ndarray       # (C,)  i32  per-core trace cursors
@@ -52,6 +61,9 @@ class MachineState(NamedTuple):
     state: jnp.ndarray     # (P,)  i32  ST states (Empty/Dirty/Drain)
     lru: jnp.ndarray       # (P,)  f64  LRU stamps
     dd: jnp.ndarray        # (P,)  f64  in-flight drain-ack times
+    ver: jnp.ndarray       # (P,)  i32  per-entry persist version
+    aver: jnp.ndarray      # (A,)  i32  per-address issued-version counter
+    pm_ver: jnp.ndarray    # (A,)  i32  newest version durable at PM
     pm_busy: jnp.ndarray   # (B,)  f64  PM bank next-free times
     pbc_busy: jnp.ndarray  # ()    f64  PBC next-free time
     blocked: jnp.ndarray   # (C,)  bool blocked at barrier
@@ -59,7 +71,9 @@ class MachineState(NamedTuple):
     stats: jnp.ndarray     # (N_STATS,) f64
 
 
-def init_state(n_cores: int, max_pbe: int, pm_banks: int) -> MachineState:
+def init_state(n_cores: int, max_pbe: int, pm_banks: int,
+               n_track: int = 0) -> MachineState:
+    A = max(n_track, 1)
     return MachineState(
         clock=jnp.zeros((n_cores,), jnp.float64),
         ptr=jnp.zeros((n_cores,), jnp.int32),
@@ -67,6 +81,9 @@ def init_state(n_cores: int, max_pbe: int, pm_banks: int) -> MachineState:
         state=jnp.full((max_pbe,), EMPTY, jnp.int32),
         lru=jnp.zeros((max_pbe,), jnp.float64),
         dd=jnp.zeros((max_pbe,), jnp.float64),
+        ver=jnp.zeros((max_pbe,), jnp.int32),
+        aver=jnp.zeros((A,), jnp.int32),
+        pm_ver=jnp.zeros((A,), jnp.int32),
         pm_busy=jnp.zeros((pm_banks,), jnp.float64),
         pbc_busy=jnp.zeros((), jnp.float64),
         blocked=jnp.zeros((n_cores,), bool),
@@ -77,7 +94,16 @@ def init_state(n_cores: int, max_pbe: int, pm_banks: int) -> MachineState:
 
 @dataclasses.dataclass(frozen=True)
 class SimResult:
-    """Aggregate metrics of one simulated run."""
+    """Aggregate metrics of one simulated run.
+
+    The durability snapshot (``acked_persists``, ``durable_persists``,
+    ``recovery_*``, ``durable_ver`` under address tracking) describes a
+    power loss at ``crash_at_ns`` — or, when no crash is configured
+    (``inf``), a hypothetical loss right after the last op: persists all
+    acked/durable, and ``recovery_entries``/``recovery_ns`` report the
+    Section V-D4 drain-all cost of the Dirty entries still buffered at
+    the end of the run (zero for NoPB, which buffers nothing).
+    """
 
     runtime_ns: float
     persist_lat_ns: float       # mean persist latency (fence round trip)
@@ -90,6 +116,12 @@ class SimResult:
     stall_ns: float             # PBC time spent waiting for Empty entries
     pi_detours: int             # reads routed through the PI buffer
     victim_drains: int = 0      # persists that took the no-Empty victim path
+    crash_at_ns: float = float("inf")
+    acked_persists: int = 0     # acked at the core before the crash point
+    durable_persists: int = 0   # payload survives crash + recovery
+    recovery_entries: int = 0   # surviving Dirty/Drain PBEs re-drained
+    recovery_ns: float = 0.0    # modeled drain-all latency of recovery
+    durable_ver: "np.ndarray | None" = None  # (track_addrs,) i32 or None
 
     @property
     def read_hit_rate(self) -> float:
@@ -99,8 +131,17 @@ class SimResult:
     def coalesce_rate(self) -> float:
         return self.coalesces / max(self.persists, 1)
 
+    @property
+    def persisted_fraction(self) -> float:
+        """Fraction of issued persists durable after crash + recovery."""
+        return self.durable_persists / max(self.persists, 1)
 
-def result_from_stats(runtime: float, stats: np.ndarray) -> SimResult:
+
+def result_from_stats(runtime: float, stats: np.ndarray, *,
+                      crash_at_ns: float = float("inf"),
+                      recovery_entries: int = 0,
+                      recovery_ns: float = 0.0,
+                      durable_ver: "np.ndarray | None" = None) -> SimResult:
     return SimResult(
         runtime_ns=runtime,
         persist_lat_ns=float(stats[S_PERSIST_SUM] / max(stats[S_PERSIST_CNT], 1)),
@@ -113,6 +154,12 @@ def result_from_stats(runtime: float, stats: np.ndarray) -> SimResult:
         stall_ns=float(stats[S_STALL_TIME]),
         pi_detours=int(stats[S_PI_DETOURS]),
         victim_drains=int(stats[S_VICTIM_CNT]),
+        crash_at_ns=crash_at_ns,
+        acked_persists=int(stats[S_ACKED]),
+        durable_persists=int(stats[S_DURABLE]),
+        recovery_entries=int(recovery_entries),
+        recovery_ns=float(recovery_ns),
+        durable_ver=durable_ver,
     )
 
 
@@ -139,4 +186,6 @@ def scalars_from_config(cfg: PCSConfig) -> Dict[str, float]:
         ow_cpu_pm=lat.oneway_cpu_pm(cfg.n_switches),
         ow_cpu_sw1=lat.oneway_cpu_sw1() if cfg.n_switches > 0 else lat.cpu_link_ns,
         ow_sw1_pm=lat.oneway_sw1_pm(cfg.n_switches) if cfg.n_switches > 0 else 0.0,
+        # power-loss instant; INF (the engine's finite infinity) = never
+        crash_at=min(cfg.crash_at_ns, INF),
     )

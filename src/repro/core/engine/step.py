@@ -1,10 +1,20 @@
-"""Step driver: merge per-core op streams by clock and run the scan.
+"""Step driver: merge per-core op streams by issue time and run the scan.
 
-One scan step = one trace op of the globally earliest unblocked core
-(fence semantics: a core blocks on its persists and PM reads, so its
-clock only advances when its op completes).  Padded steps after stream
+One scan step = one trace op of the core whose next op *issues*
+earliest (core clock + compute gap; fence semantics: a core blocks on
+its persists and PM reads, so its clock only advances when its op
+completes).  Merging on issue time rather than bare clocks makes the
+global op order well-defined even under wildly heterogeneous gaps —
+the property the crash model and the differential conformance harness
+(tests/_crash_driver.py) rest on.  Padded steps after stream
 exhaustion are provable no-ops, which lets callers pad the scan length
 to shared buckets without changing any result.
+
+Crash semantics (Section V-D4): ``sc["crash_at"]`` is a traced scalar;
+an op whose issue time exceeds it becomes a no-op (the machine is off),
+and after the scan a recovery pass (``handlers.recovery_snapshot``)
+computes the durable-version vector and the drain-all cost over the
+surviving Dirty/Drain PBEs.
 
 ``scan_cell`` is the unjitted single-cell program; the front-ends in
 ``engine.grid`` wrap it in ``jax.jit`` (single cell) or
@@ -18,7 +28,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine.handlers import HANDLERS, StepCtx
+from repro.core.engine.handlers import HANDLERS, StepCtx, recovery_snapshot
 from repro.core.engine.state import INF, MachineState, init_state
 from repro.core.params import Op
 
@@ -33,12 +43,15 @@ def compile_count() -> int:
 
 
 def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
-              max_pbe: int, n_steps: int, pm_banks: int):
-    """Simulate one (trace, config) cell; returns (runtime, stats).
+              max_pbe: int, n_steps: int, pm_banks: int, n_track: int = 0,
+              return_state: bool = False):
+    """Simulate one (trace, config) cell.
 
-    ``scheme`` and every entry of ``sc`` are traced scalars; only array
-    shapes (core count C, ``max_pbe``, ``pm_banks``, ``n_steps``) are
-    static.
+    Returns ``(runtime, stats, durable_ver, n_recovered, recovery_ns)``,
+    plus the final :class:`MachineState` when ``return_state`` is set
+    (used by the padding-invariant tests).  ``scheme`` and every entry
+    of ``sc`` are traced scalars; only array shapes (core count C,
+    ``max_pbe``, ``pm_banks``, ``n_steps``, ``n_track``) are static.
     """
     _COMPILES[0] += 1
     C = ops.shape[0]
@@ -47,37 +60,57 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
     # Cores with a non-empty stream participate in barriers (padded cores
     # from stacked grids have zero-length streams and never arrive).
     n_live = jnp.sum((lengths > 0).astype(jnp.int32))
+    core_ids = jnp.arange(C)
 
     def step(st: MachineState, _):
         active = st.ptr < lengths
-        # blocked cores wait at a barrier and cannot be selected
-        tsel = jnp.where(active & ~st.blocked, st.clock, INF)
+        idx = jnp.minimum(st.ptr, jnp.maximum(lengths - 1, 0))
+        next_gap = gaps[core_ids, idx].astype(jnp.float64)
+        # blocked cores wait at a barrier and cannot be selected; all
+        # others compete on the *issue* time of their next op
+        tsel = jnp.where(active & ~st.blocked, st.clock + next_gap, INF)
         c = jnp.argmin(tsel)
         # padded steps after exhaustion (or a barrier mismatch) are no-ops
         valid = jnp.any(active) & (tsel[c] < INF * 0.5)
-        i = jnp.minimum(st.ptr[c], lengths[c] - 1)
-        op = jnp.where(valid, ops[c, i], int(Op.COMPUTE))
-        addr = addrs[c, i]
-        gap = jnp.where(valid, gaps[c, i].astype(jnp.float64), 0.0)
-        t = jnp.where(valid, tsel[c], st.clock[c]) + gap
+        i = idx[c]
+        t_issue = jnp.where(valid, tsel[c], st.clock[c])
+        # ops issuing after the power loss never happen (machine is off)
+        live = valid & (t_issue <= sc["crash_at"])
+        op = jnp.where(live, ops[c, i], int(Op.COMPUTE))
+        t = jnp.where(live, t_issue, st.clock[c])
 
-        ctx = StepCtx(c=c, t=t, addr=addr, scheme=scheme, sc=sc,
+        ctx = StepCtx(c=c, t=t, addr=addrs[c, i], scheme=scheme, sc=sc,
                       slot_ids=slot_ids, slot_active=slot_active,
-                      n_live=n_live, n_banks=pm_banks)
+                      n_live=n_live, n_banks=pm_banks, n_track=n_track)
         branches = [lambda s, h=h: h(ctx, s) for h in HANDLERS]
         st2 = jax.lax.switch(jnp.clip(op, 0, 5), branches, st)
 
-        is_bar = valid & (op == int(Op.BARRIER))
+        is_bar = live & (op == int(Op.BARRIER))
         last = is_bar & ((st.bcount + 1) >= n_live)
         blocked = jnp.where(last, jnp.zeros_like(st.blocked),
                             jnp.where(is_bar, st.blocked.at[c].set(True),
                                       st.blocked))
         bcount = jnp.where(last, 0,
                            jnp.where(is_bar, st.bcount + 1, st.bcount))
+        # crashed ops still consume their cursor slot (the stream drains
+        # as no-ops, so post-crash cores cannot starve live ones) and
+        # still advance the core clock to their issue time: gaps are
+        # relative, so a frozen clock would let a *later* op's issue
+        # time collapse back below the crash point and wrongly execute
         ptr = st2.ptr.at[c].add(jnp.where(valid, 1, 0))
-        return st2._replace(ptr=ptr, blocked=blocked, bcount=bcount), None
+        clock = st2.clock.at[c].set(
+            jnp.where(valid & ~live, t_issue, st2.clock[c]))
+        return st2._replace(clock=clock, ptr=ptr, blocked=blocked,
+                            bcount=bcount), None
 
-    final, _ = jax.lax.scan(step, init_state(C, max_pbe, pm_banks), None,
-                            length=n_steps)
-    runtime = jnp.max(jnp.where(final.clock < INF * 0.5, final.clock, 0.0))
-    return runtime, final.stats
+    final, _ = jax.lax.scan(step, init_state(C, max_pbe, pm_banks, n_track),
+                            None, length=n_steps)
+    # a crashed run ends at the power loss: dead cores advanced their
+    # clocks through never-executed ops, so cap at the crash instant
+    runtime = jnp.max(jnp.where(final.clock < INF * 0.5,
+                                jnp.minimum(final.clock, sc["crash_at"]),
+                                0.0))
+    durable_ver, n_recov, recov_ns = recovery_snapshot(
+        final, scheme, sc, slot_active, pm_banks, n_track)
+    out = (runtime, final.stats, durable_ver, n_recov, recov_ns)
+    return out + (final,) if return_state else out

@@ -168,6 +168,11 @@ class PCSConfig:
     pm_banks: int = 4             # independent PM device banks (the single
                                   # NVM device of Table I pipelines requests
                                   # across internal banks)
+    # Power-loss instant (ns since simulation start).  ``inf`` = no crash.
+    # Lowered to a *traced* scalar (engine.state.scalars_from_config), so
+    # a crash-point sweep is just another stacked config axis: a
+    # {workload x scheme x crash-point} grid stays one XLA program.
+    crash_at_ns: float = math.inf
     latency: LatencyProfile = dataclasses.field(default_factory=LatencyProfile)
 
     def __post_init__(self) -> None:
@@ -177,6 +182,12 @@ class PCSConfig:
             raise ValueError("n_switches must be >= 0")
         if not (0.0 < self.drain_preset <= self.drain_threshold <= 1.0):
             raise ValueError("require 0 < preset <= threshold <= 1")
+        if self.crash_at_ns < 0.0:
+            raise ValueError("crash_at_ns must be >= 0 (or inf for no crash)")
+
+    def with_crash(self, crash_at_ns: float) -> "PCSConfig":
+        """Same system, power lost at ``crash_at_ns`` (Section V-D4)."""
+        return dataclasses.replace(self, crash_at_ns=crash_at_ns)
 
     @property
     def threshold_count(self) -> int:

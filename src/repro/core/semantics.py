@@ -323,6 +323,27 @@ class PersistentBuffer:
                 events.extend(self.pm_ack(e.addr, e.version))
         return events
 
+    # ----------------------------------------------------- durable snapshot
+    def snapshot_durable(self) -> Dict[int, Tuple[int, object]]:
+        """What a crash-now + recovery would preserve, without mutating.
+
+        The durable domain is PM plus the PB's persistent cells: for
+        every address, the newest version between the PM store and any
+        live (Dirty/Drain) entry — exactly what ``crash(); recover()``
+        leaves in PM, since recovery re-drains every live entry and the
+        device rejects stale writes.  ``tests/test_semantics.py`` pins
+        this equivalence; the crash-differential harness uses it to
+        read the oracle's durable state at arbitrary crash points.
+        """
+        durable: Dict[int, Tuple[int, object]] = dict(self.pm.store)
+        for e in self.entries:
+            if e.state == PBEState.EMPTY:
+                continue
+            cur = durable.get(e.addr)
+            if cur is None or e.version > cur[0]:
+                durable[e.addr] = (e.version, e.data)
+        return durable
+
     # ------------------------------------------------------------ invariant
     def check_invariants(self) -> None:
         """The paper's three correctness criteria, checkable at any time."""

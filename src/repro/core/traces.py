@@ -489,6 +489,80 @@ def volrend_trace(n_cores: int = 8, seed: int = 6,
         p_read_mid=0.22, mid_window=256, recent_global=True)
 
 
+# ===========================================================================
+# Fuzzed conformance traces (crash-differential harness)
+# ===========================================================================
+
+# Slot spacing of fuzzed traces.  Each op occupies one global "slot" at
+# nominal time slot*FUZZ_SLOT_GAP_NS; the gap dwarfs every service
+# latency (persist ack, victim wait, drain burst are all < ~5 us), so
+# (a) the engine's issue-time merge executes ops exactly in slot order,
+# (b) every drain scheduled by slot k's op is acked before slot k+1
+#     (the oracle's prompt-ack regime), and
+# (c) a crash at fuzz_crash_ns(k) falls cleanly *between* slot k and
+#     slot k+1 — the same logical point in both layers.
+FUZZ_SLOT_GAP_NS = 1.0e6
+# A core's clock drifts past its nominal slot time by the accumulated
+# service latencies of its own ops (< ~1 us each in the uncongested
+# regime); the slot-order and crash-boundary guarantees need the total
+# drift to stay well under half a slot gap.
+_FUZZ_MAX_SLOTS = 250
+
+
+def fuzz_crash_ns(slot: int, slot_gap_ns: float = FUZZ_SLOT_GAP_NS) -> float:
+    """Power-loss instant falling between slot ``slot`` and ``slot + 1``."""
+    return (slot + 0.5) * slot_gap_ns
+
+
+def fuzz_trace(seed: int, n_cores: int = 3, n_slots: int = 60,
+               n_addrs: int = 8, p_persist: float = 0.55,
+               p_barrier: float = 0.05,
+               slot_gap_ns: float = FUZZ_SLOT_GAP_NS
+               ) -> Tuple[Trace, List[Tuple[int, int, int, int]]]:
+    """Random multi-core persist/read/barrier interleaving for the
+    crash-differential harness (beyond the 7 paper workloads).
+
+    Returns ``(trace, schedule)`` where ``schedule`` is the global op
+    order ``[(slot, core, op, addr), ...]``: the sequence the untimed
+    oracle replays, and provably the order the timed engine executes
+    (see ``FUZZ_SLOT_GAP_NS``).  Barriers occupy one slot per core
+    (consecutive, core order); persist/read slots go to a random core.
+    """
+    if n_slots > _FUZZ_MAX_SLOTS:
+        raise ValueError(f"n_slots > {_FUZZ_MAX_SLOTS} breaks the "
+                         "slot-order guarantee (clock drift)")
+    rng = np.random.default_rng(seed)
+    streams = [_CoreStream() for _ in range(n_cores)]
+    nominal = [0] * n_cores        # last issue slot per core
+    schedule: List[Tuple[int, int, int, int]] = []
+    slot = 1
+    while slot <= n_slots:
+        if n_cores > 1 and slot + n_cores - 1 <= n_slots \
+                and rng.random() < p_barrier:
+            # barrier: core c arrives at slot+c; release at the last
+            # arrival, so every core resumes from the release slot
+            for c in range(n_cores):
+                s = streams[c]
+                s.compute((slot + c - nominal[c]) * slot_gap_ns)
+                s.barrier()
+                schedule.append((slot + c, c, int(Op.BARRIER), 0))
+            release = slot + n_cores - 1
+            nominal = [release] * n_cores
+            slot += n_cores
+            continue
+        c = int(rng.integers(n_cores))
+        op = Op.PERSIST if rng.random() < p_persist else Op.PM_READ
+        addr = int(rng.integers(n_addrs))
+        streams[c].compute((slot - nominal[c]) * slot_gap_ns)
+        # bypass the LLC filter: conformance traces are switch-level op
+        # streams, every op must reach the simulated switch
+        streams[c]._emit(op, addr)
+        schedule.append((slot, c, int(op), addr))
+        nominal[c] = slot
+        slot += 1
+    return _pack(streams, f"fuzz{seed}"), schedule
+
+
 WORKLOADS: Dict[str, Callable[..., Trace]] = {
     "fft": fft_trace,
     "lu_cont": lu_cont_trace,

@@ -171,14 +171,18 @@ def ssd_block(p: dict, x: jnp.ndarray, *, d_state: int, head_dim: int,
     A = -jnp.exp(p["A_log"])
     xh = xs.reshape(b, s, h, head_dim)
 
-    if cache is None:
-        y, final = ssd_chunked(xh, dt, A, B, C, chunk=chunk)
-        new_cache = SSMCache(conv=new_conv, state=final)
-    else:
+    if cache is not None and s == 1:
         y1, new_state = ssd_decode_step(
             xh[:, 0], dt[:, 0], A, B[:, 0], C[:, 0], cache.state)
         y = y1[:, None].astype(x.dtype)
         new_cache = SSMCache(conv=new_conv, state=new_state)
+    else:
+        # training (no cache) or multi-token prefill: chunked scan,
+        # seeded from the cached state when one is threaded through
+        y, final = ssd_chunked(
+            xh, dt, A, B, C, chunk=chunk,
+            init_state=cache.state if cache is not None else None)
+        new_cache = SSMCache(conv=new_conv, state=final)
 
     y = y + p["D"][None, None, :, None].astype(jnp.float32) * xh.astype(jnp.float32)
     y = y.reshape(b, s, d_inner).astype(x.dtype)

@@ -67,17 +67,42 @@ class PCSCheckpointManager:
         self._stop = threading.Event()
         self.stats = {"persists": 0, "acks": 0, "drains": 0, "coalesces": 0,
                       "restore_forwarded": 0, "restore_from_store": 0,
-                      "stalls": 0}
+                      "stalls": 0, "lost_after_crash": 0}
+        self._crashed = False
+        self._crash_after: Optional[int] = None
         self._drainer = None
         if not sync_drain and scheme != PersistScheme.NOPB:
-            self._drainer = threading.Thread(target=self._drain_loop,
-                                             daemon=True)
-            self._drainer.start()
+            self._start_drainer()
+
+    def _start_drainer(self) -> None:
+        self._stop.clear()
+        self._drainer = threading.Thread(target=self._drain_loop,
+                                         daemon=True)
+        self._drainer.start()
 
     # ------------------------------------------------------------- persist
     def persist(self, shard: str, version: int, tree: Any) -> None:
         """Make (shard, version) durable.  Returns when the persistent
         domain holds it: store fsync under NOPB, buffer ack under PB/RF."""
+        # crash window (mirrors the engine's crash_at_ns): the power is
+        # lost right before persist #(crash_after + 1), so exactly
+        # crash_after persists are acked — a deterministic logical crash
+        # point despite the asynchronous drainer.  The flag flips under
+        # the lock; the drainer join happens outside it (the drainer
+        # takes the same lock to finish its in-flight drain).
+        fire = False
+        with self._lock:
+            if (self._crash_after is not None and not self._crashed
+                    and self.stats["persists"] >= self._crash_after):
+                self._crashed = fire = True
+            if self._crashed:
+                # machine is off: the write never reaches the switch
+                self.stats["lost_after_crash"] += 1
+                if not fire:
+                    return
+        if fire:
+            self.crash()
+            return
         payload = _serialize(tree)
         self.stats["persists"] += 1
         if self.scheme == PersistScheme.NOPB:
@@ -207,17 +232,31 @@ class PCSCheckpointManager:
         return rec[0], _deserialize(rec[1])
 
     # ------------------------------------------------------------- recovery
+    def schedule_crash(self, after_persists: int) -> None:
+        """Arm a deterministic crash window: power is lost right before
+        persist number ``after_persists + 1`` reaches the switch, i.e.
+        exactly ``after_persists`` persists get acked.  The checkpoint
+        analogue of the engine's ``crash_at_ns`` — a crash scheduled at a
+        persist index instead of a wall-clock instant."""
+        if after_persists < 0:
+            raise ValueError("after_persists must be >= 0")
+        self._crash_after = after_persists
+
     def crash(self) -> None:
         """Process crash: queue (volatile routing state) is lost; buffer
-        and store survive."""
+        and store survive.  Until :meth:`recover`, further persists are
+        dropped (the machine is off)."""
+        self._crashed = True
         self._stop.set()
-        if self._drainer is not None:
+        if self._drainer is not None and self._drainer is not \
+                threading.current_thread():
             self._drainer.join(timeout=1.0)
         self._q = queue.Queue()
 
     def recover(self) -> int:
         """Reboot: treat every surviving buffer entry as Dirty and drain
         all (Section V-D4).  Stale versions are rejected by the store.
+        Restarts the drainer, so the manager is usable again afterwards.
         Returns the number of entries re-drained."""
         n = 0
         for shard, version in self.buffer.entries():
@@ -227,6 +266,10 @@ class PCSCheckpointManager:
                 n += 1
             self.buffer.drop(shard, version)
             self._states[(shard, version)] = ShardState.EMPTY
+        self._crashed = False
+        self._crash_after = None
+        if not self.sync_drain and self.scheme != PersistScheme.NOPB:
+            self._start_drainer()
         return n
 
     def close(self) -> None:

@@ -1,0 +1,116 @@
+"""Differential crash-point conformance driver: engine <-> oracle.
+
+The fuzzer (``core.traces.fuzz_trace``) emits slot-spaced multi-core
+persist/read/barrier interleavings whose engine execution order provably
+equals the slot order, with every drain acked inside its slot (the
+prompt-ack regime).  Crashing the timed engine at ``fuzz_crash_ns(k)``
+and the untimed oracle after replaying slots ``<= k`` is therefore the
+*same logical point*, and the paper's correctness argument requires the
+two layers to agree exactly on the durable state that recovery
+(Section V-D4) reconstructs:
+
+  * no acked version is lost — every persist acked before the crash is
+    durable after recovery;
+  * no unacked version is resurrected — recovery preserves exactly the
+    newest pre-crash version per address, never a fabricated one;
+  * read forwarding never returns a value recovery would discard.
+
+``oracle_replay`` returns the oracle's view; ``assert_cell_matches``
+pins the engine's ``SimResult`` (run with ``track_addrs`` and a
+``crash_at_ns`` config) against it.
+"""
+import collections
+
+from repro.core import Op, PCSConfig, Scheme
+from repro.core.semantics import EventKind, PersistentBuffer
+
+
+def oracle_replay(schedule, crash_slot, scheme, n_pbe):
+    """Replay schedule slots ``<= crash_slot``, then crash + recover.
+
+    Acks are delivered promptly (all in-flight drains complete between
+    slots, FIFO in emission order), mirroring the fuzzed traces' timing.
+    Returns a dict with the durable per-address versions, the pre-crash
+    event counts the engine must reproduce, and the read log.
+    """
+    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=n_pbe))
+    aver = collections.defaultdict(int)   # per-address issued versions
+    pending = []
+    victim_stalls = 0
+    reads = []
+    for slot, _core, op, addr in schedule:
+        if slot > crash_slot:
+            break
+        if op == int(Op.BARRIER):
+            continue
+        if op == int(Op.PERSIST):
+            aver[addr] += 1
+            events = pb.persist(addr, (addr, aver[addr]))
+            victim_stalls += sum(
+                1 for e in events if e.kind == EventKind.STALLED)
+            pending += [(e.addr, e.version) for e in events
+                        if e.kind == EventKind.DRAIN_SENT]
+        else:
+            data, _ev = pb.read(addr)
+            reads.append((addr, data, aver[addr]))
+        while pending:
+            a, v = pending.pop(0)
+            events = pb.pm_ack(a, v)
+            pending += [(e.addr, e.version) for e in events
+                        if e.kind == EventKind.DRAIN_SENT]
+        pb.check_invariants()
+    counts = dict(
+        persists=pb.stats["persists"],
+        coalesces=pb.stats["coalesces"],
+        read_hits=pb.stats["read_hits"],
+        pm_reads=pb.stats["read_hits"] + pb.stats["read_misses"],
+        pm_writes=(pb.pm.writes_applied if scheme == Scheme.NOPB
+                   else pb.stats["drains"]),
+        victim_drains=victim_stalls,
+    )
+    snapshot = {a: rec[0] for a, rec in pb.snapshot_durable().items()}
+    pb.crash()
+    pb.recover()
+    durable = {}
+    for addr, (gver, payload) in pb.pm.store.items():
+        assert payload[0] == addr
+        durable[addr] = payload[1]          # per-address version number
+    # the non-mutating snapshot must predict recovery exactly
+    assert {a: rec[0] for a, rec in pb.pm.store.items()} == snapshot, \
+        "snapshot_durable disagrees with crash+recover"
+    return dict(durable=durable, counts=counts, reads=reads,
+                issued=dict(aver))
+
+
+def assert_cell_matches(res, oracle, n_addrs, label=""):
+    """The engine's post-recovery durable state must equal the oracle's."""
+    durable = oracle["durable"]
+    issued = oracle["issued"]
+    got = {a: int(res.durable_ver[a]) for a in range(n_addrs)}
+    want = {a: durable.get(a, 0) for a in range(n_addrs)}
+    assert got == want, (label, "durable state diverged", got, want)
+
+    counts = dict(persists=res.persists, coalesces=res.coalesces,
+                  read_hits=res.read_hits, pm_reads=res.pm_reads,
+                  pm_writes=res.pm_writes, victim_drains=res.victim_drains)
+    assert counts == oracle["counts"], (label, counts, oracle["counts"])
+
+    # prompt-ack regime: every executed persist was acked before the
+    # crash, and (the paper's claim) every acked persist is durable
+    assert res.acked_persists == res.persists, (label, "unacked persists")
+    assert res.durable_persists == res.acked_persists, (
+        label, "acked version lost")
+    # no resurrection: durability never exceeds what was issued
+    for a in range(n_addrs):
+        assert got[a] <= issued.get(a, 0), (label, "resurrected", a)
+
+    # read forwarding: every value served was the newest at read time
+    # and is one recovery preserves (never a discarded version)
+    for addr, data, newest in oracle["reads"]:
+        if newest == 0:
+            assert data is None, (label, "read invented data", addr)
+            continue
+        assert data is not None and data == (addr, newest), (
+            label, "stale read", addr, data, newest)
+        assert durable.get(addr, 0) >= data[1], (
+            label, "forwarded value discarded by recovery", addr)

@@ -11,6 +11,9 @@ from repro.launch.steps import make_train_step
 from repro.models.transformer import forward, init_params
 from repro.optim import AdamWConfig, adamw_init
 
+# per-arch jit of a full train step dominates suite wall time
+pytestmark = pytest.mark.slow
+
 B, S = 2, 24
 
 

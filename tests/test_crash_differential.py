@@ -1,0 +1,108 @@
+"""Differential crash-point conformance: timed engine vs untimed oracle.
+
+Every cell fuzzes a multi-core persist/read/barrier interleaving
+(``core.traces.fuzz_trace``), crashes the timed engine at a slot
+boundary (``crash_at_ns`` traced config scalar) and the oracle after
+replaying the same slots, and asserts the durable-state agreement the
+paper's correctness argument requires: identical per-address durable
+versions after recovery, no acked version lost, no unacked version
+resurrected, and read forwarding never serving a value recovery would
+discard (tests/_crash_driver.py).
+
+The deterministic matrix — >= 200 (trace, scheme, crash-point) cells —
+always runs, through ONE compiled simulate_grid program (crash time and
+scheme are traced, so the whole matrix is a single XLA program).  When
+``hypothesis`` is installed it additionally drives randomized cells
+(same guard pattern as tests/test_semantics_props.py); without it a
+seeded parametrized fallback covers the same space.
+
+``make test-fuzz`` raises the budgets via CRASH_FUZZ_SEEDS /
+CRASH_FUZZ_EXAMPLES.
+"""
+import os
+
+import pytest
+
+from _crash_driver import assert_cell_matches, oracle_replay
+from repro.core import PCSConfig, Scheme, fuzz_crash_ns, fuzz_trace
+from repro.core.engine import compile_count, simulate, simulate_grid
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # deterministic fallback below
+    HAVE_HYPOTHESIS = False
+
+SCHEMES = [Scheme.NOPB, Scheme.PB, Scheme.PB_RF]
+N_ADDRS = 6
+N_SLOTS = 50
+N_CORES = 3
+BUCKET = 128
+CRASH_SLOTS = (0, 7, 13, 21, 29, 37, 44, N_SLOTS)
+PBES = (2, 4, 8)         # traced, cycles across crash points
+N_SEEDS = int(os.environ.get("CRASH_FUZZ_SEEDS", "9"))
+N_EXAMPLES = int(os.environ.get("CRASH_FUZZ_EXAMPLES", "25"))
+
+
+def test_differential_matrix_one_compile():
+    """>= 200 fuzzed cells, engine side in ONE compiled grid program."""
+    seeds = list(range(N_SEEDS))
+    traces, scheds = zip(*[
+        fuzz_trace(s, n_cores=N_CORES, n_slots=N_SLOTS, n_addrs=N_ADDRS)
+        for s in seeds])
+    plan = [(scheme, k, PBES[ki % len(PBES)])
+            for scheme in SCHEMES for ki, k in enumerate(CRASH_SLOTS)]
+    configs = [PCSConfig(scheme=s, n_pbe=p).with_crash(fuzz_crash_ns(k))
+               for s, k, p in plan]
+    n_cells = len(seeds) * len(configs)
+    assert n_cells >= 200, n_cells
+
+    c0 = compile_count()
+    cells = simulate_grid(list(traces), configs, max_pbe=max(PBES),
+                          bucket=BUCKET, track_addrs=N_ADDRS)
+    assert compile_count() - c0 == 1, (
+        "the whole {trace x scheme x crash-point} matrix must be one "
+        "XLA program")
+    for i, sched in enumerate(scheds):
+        for j, (scheme, k, n_pbe) in enumerate(plan):
+            oracle = oracle_replay(sched, k, scheme, n_pbe)
+            assert_cell_matches(cells[i][j], oracle, N_ADDRS,
+                                label=(seeds[i], scheme.name, k, n_pbe))
+
+
+def _one_cell(seed, scheme, crash_slot, n_pbe, p_persist=0.55):
+    trace, sched = fuzz_trace(seed, n_cores=N_CORES, n_slots=N_SLOTS,
+                              n_addrs=N_ADDRS, p_persist=p_persist)
+    res = simulate(trace,
+                   PCSConfig(scheme=scheme, n_pbe=n_pbe).with_crash(
+                       fuzz_crash_ns(crash_slot)),
+                   max_pbe=max(PBES), bucket=BUCKET, track_addrs=N_ADDRS)
+    oracle = oracle_replay(sched, crash_slot, scheme, n_pbe)
+    assert_cell_matches(res, oracle, N_ADDRS,
+                        label=(seed, scheme.name, crash_slot, n_pbe))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        scheme=st.sampled_from(SCHEMES),
+        crash_slot=st.integers(0, N_SLOTS),
+        n_pbe=st.sampled_from(PBES),
+        p_persist=st.floats(0.1, 0.9),
+    )
+    def test_differential_fuzz(seed, scheme, crash_slot, n_pbe, p_persist):
+        _one_cell(seed, scheme, crash_slot, n_pbe, p_persist)
+
+else:
+
+    @pytest.mark.parametrize("case", range(N_EXAMPLES))
+    def test_differential_fuzz(case):
+        import random
+        rng = random.Random(0xC0FFEE + case)
+        _one_cell(seed=rng.randrange(2**31),
+                  scheme=rng.choice(SCHEMES),
+                  crash_slot=rng.randrange(N_SLOTS + 1),
+                  n_pbe=rng.choice(PBES),
+                  p_persist=rng.uniform(0.1, 0.9))

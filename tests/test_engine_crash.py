@@ -1,0 +1,158 @@
+"""Crash/recovery in the timed engine (Section V-D4).
+
+Acceptance: a {7 workloads x 3 schemes x >= 4 crash points} grid lowers
+to ONE XLA program — the crash time is just another stacked traced
+config scalar.  The timed-regime tests then pin the durability
+semantics under congestion (in-flight drains at the crash instant),
+where the prompt-ack differential suite cannot reach: acked implies
+durable, durable counts are monotone in the crash time, recovery cost
+comes from the surviving Dirty/Drain entries, and the persistent-switch
+schemes dominate the volatile baseline at every crash point.
+"""
+import numpy as np
+import pytest
+
+from conftest import TINY_BUCKET
+from repro.core import Op, PCSConfig, Scheme, Trace
+from repro.core.engine import compile_count, simulate, simulate_grid
+
+SCHEMES = (Scheme.NOPB, Scheme.PB, Scheme.PB_RF)
+
+
+def test_workload_crash_grid_single_compile(paper_grid, tiny_traces):
+    """The ISSUE acceptance grid: {7 workloads x 3 schemes x 4 crash
+    points} through simulate_grid in one compilation."""
+    names, _, base_cells, _ = paper_grid   # shared no-crash baseline
+    traces = [tiny_traces[n] for n in names]
+    t_max = max(row[1].runtime_ns for row in base_cells)
+    crash_points = [f * t_max for f in (0.05, 0.25, 0.5, 0.75)]
+    configs = [PCSConfig(scheme=s).with_crash(t)
+               for s in SCHEMES for t in crash_points]
+    c0 = compile_count()
+    cells = simulate_grid(traces, configs, bucket=TINY_BUCKET)
+    assert compile_count() - c0 == 1, (
+        "crash-point sweep must reuse one XLA program")
+    for i, name in enumerate(names):
+        for j, cfg in enumerate(configs):
+            r = cells[i][j]
+            label = (name, cfg.scheme.name, cfg.crash_at_ns)
+            # no acked version may be lost: acked => durable
+            assert r.acked_persists <= r.durable_persists, label
+            assert r.durable_persists <= r.persists, label
+            if cfg.scheme == Scheme.NOPB:
+                # volatile switch: nothing outlives the ack, recovery
+                # has nothing to drain
+                assert r.durable_persists == r.acked_persists, label
+                assert r.recovery_entries == 0, label
+                assert r.recovery_ns == 0.0, label
+            else:
+                # persistent switch: every persist committed into the
+                # switch is durable; at most the one straddling the
+                # crash instant (issued but not yet written) is lost
+                assert r.durable_persists >= r.acked_persists, label
+                assert r.recovery_ns >= 0.0, label
+            assert r.runtime_ns <= cfg.crash_at_ns + 1e-6, label
+
+
+def test_persisted_fraction_monotone_and_pb_dominates(paper_grid,
+                                                      tiny_traces):
+    """More time before the crash never loses persists, and the
+    ack-at-switch schemes are durable-ahead of NoPB at every instant."""
+    names, _, base_cells, _ = paper_grid
+    tr = tiny_traces["radiosity"]
+    t_end = base_cells[names.index("radiosity")][0].runtime_ns
+    fracs = (0.1, 0.3, 0.5, 0.7, 0.9)
+    configs = [PCSConfig(scheme=s).with_crash(f * t_end)
+               for s in SCHEMES for f in fracs]
+    cells = simulate_grid([tr], configs, bucket=TINY_BUCKET)[0]
+    by_scheme = {s: cells[i * len(fracs):(i + 1) * len(fracs)]
+                 for i, s in enumerate(SCHEMES)}
+    for s in SCHEMES:
+        durable = [r.durable_persists for r in by_scheme[s]]
+        assert durable == sorted(durable), (s.name, durable)
+    for j in range(len(fracs)):
+        assert (by_scheme[Scheme.PB][j].durable_persists
+                >= by_scheme[Scheme.NOPB][j].durable_persists), j
+    # mid-run the persistent switch must be strictly ahead (the paper's
+    # point: acks come back earlier, so more progress is durable)
+    assert (by_scheme[Scheme.PB][2].durable_persists
+            > by_scheme[Scheme.NOPB][2].durable_persists)
+
+
+def _burst_trace(n_cores=16, per_core=24, n_addrs=64, gap=0.5):
+    """Congested multi-core persist storm: the PB runs out of Empty
+    entries, so victim drains fire and drains are in flight at any
+    mid-run crash point (full-run victim_drains > 0 is asserted)."""
+    rng = np.random.default_rng(17)
+    ops = np.full((n_cores, per_core), int(Op.PERSIST), np.int32)
+    addrs = rng.integers(0, n_addrs, (n_cores, per_core)).astype(np.int32)
+    gaps = np.full((n_cores, per_core), gap, np.float32)
+    return Trace(ops=ops, addrs=addrs, gaps=gaps,
+                 lengths=np.full((n_cores,), per_core, np.int32),
+                 name="burst")
+
+
+@pytest.mark.parametrize("scheme", [Scheme.PB, Scheme.PB_RF])
+def test_congested_crash_acked_never_lost(scheme):
+    """Crash mid-drain under real congestion (victim evictions, slot
+    reuse, in-flight PM writes lost with the power): every acked persist
+    survives, and the durable-version vector accounts for exactly the
+    committed persists — none lost to slot reuse, none invented."""
+    tr = _burst_trace()
+    n_addrs = 64
+    cfg = PCSConfig(scheme=scheme, n_pbe=8, pm_banks=1)
+    full = simulate(tr, cfg, bucket=128, track_addrs=n_addrs)
+    assert full.victim_drains > 0, "trace must exercise the victim path"
+    t_end = full.runtime_ns
+    saw_recovery = False
+    for f in np.linspace(0.05, 0.95, 19):
+        r = simulate(tr, cfg.with_crash(f * t_end), bucket=128,
+                     track_addrs=n_addrs)
+        label = (scheme.name, round(float(f), 2))
+        assert r.acked_persists <= r.durable_persists, label
+        assert r.durable_persists <= r.persists, label
+        dv = np.asarray(r.durable_ver)
+        # per-address versions are dense over committed persists, every
+        # committed version stays durable (PM + surviving PBEs), and
+        # recovery never resurrects more than was issued
+        assert dv.sum() == r.durable_persists, label
+        saw_recovery |= r.recovery_entries > 0
+    assert saw_recovery, "no crash point caught in-flight/dirty entries"
+
+
+def test_crash_straddling_persist_not_double_counted():
+    """A persist issued before but written after the crash commits
+    nothing: the overwritten-slot version survives via its Drain entry
+    and the newcomer is neither acked, durable, nor versioned."""
+    tr = _burst_trace()
+    cfg = PCSConfig(scheme=Scheme.PB, n_pbe=4, pm_banks=1)
+    t_end = simulate(tr, cfg, bucket=128).runtime_ns
+    for f in np.linspace(0.1, 0.9, 9):
+        r = simulate(tr, cfg.with_crash(f * t_end), bucket=128,
+                     track_addrs=64)
+        dv = np.asarray(r.durable_ver)
+        assert dv.sum() == r.durable_persists, f
+        assert r.acked_persists <= r.durable_persists, f
+
+
+def test_crash_at_zero_and_after_end(tiny_traces):
+    tr = tiny_traces["raytrace"]
+    r0 = simulate(tr, PCSConfig(scheme=Scheme.PB_RF).with_crash(0.0),
+                  bucket=TINY_BUCKET)
+    assert r0.persists == 0 and r0.durable_persists == 0
+    assert r0.runtime_ns == 0.0 and r0.recovery_entries == 0
+    r_inf = simulate(tr, PCSConfig(scheme=Scheme.PB_RF), bucket=TINY_BUCKET)
+    assert r_inf.durable_persists == r_inf.persists == r_inf.acked_persists
+    assert r_inf.persists > 0
+
+
+def test_no_crash_results_unchanged_by_crash_fields(tiny_traces):
+    """crash_at_ns=inf is the identity: same results as before the crash
+    model existed (drift guard for the figure pipeline)."""
+    tr = tiny_traces["lu_cont"]
+    a = simulate(tr, PCSConfig(scheme=Scheme.PB_RF), bucket=TINY_BUCKET)
+    b = simulate(tr, PCSConfig(scheme=Scheme.PB_RF).with_crash(1e27),
+                 bucket=TINY_BUCKET)
+    for f in ("runtime_ns", "persists", "pm_writes", "coalesces",
+              "read_hits", "stall_ns"):
+        assert getattr(a, f) == pytest.approx(getattr(b, f), rel=1e-12), f

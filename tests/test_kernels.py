@@ -33,6 +33,7 @@ def test_tat_lookup_empty_never_matches():
                                      (1, 1, 512, 256)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("window", [None, 64])
+@pytest.mark.slow
 def test_flash_attention_sweep(b, h, s, d, dtype, window):
     q = jnp.asarray(RNG.standard_normal((b, h, s, d)), dtype)
     k = jnp.asarray(RNG.standard_normal((b, h, s, d)), dtype)
@@ -58,6 +59,7 @@ def test_flash_attention_noncausal():
     (2, 256, 3, 64, 128, 128), (1, 128, 2, 32, 64, 64),
     (2, 512, 1, 64, 128, 128), (1, 256, 4, 64, 64, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.slow
 def test_ssd_scan_sweep(b, s, h, p, n, chunk, dtype):
     x = jnp.asarray(RNG.standard_normal((b, s, h, p)), dtype)
     dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), jnp.float32)

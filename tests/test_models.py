@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.models.transformer import (LayerSpec, ModelConfig, decode_step,
                                       forward, init_params, loss_fn, prefill)
 

@@ -75,6 +75,43 @@ def test_crash_recovery_drains_survivors(tmp_path):
         assert mgr.store.read(s) is not None, f"{s} lost after recovery"
 
 
+@pytest.mark.parametrize("scheme",
+                         [PersistScheme.PB, PersistScheme.PB_RF])
+def test_scheduled_crash_window_is_deterministic(tmp_path, scheme):
+    """schedule_crash(n): exactly n persists ack, later ones are dropped
+    (power off), and recovery preserves precisely the acked prefix —
+    the checkpoint-tier mirror of the engine's crash_at_ns."""
+    mgr = mk(tmp_path, scheme, sync=False)
+    mgr.schedule_crash(3)
+    for v in range(1, 7):
+        mgr.persist(f"s{v}", v, np.full(8, v))
+    assert mgr.stats["acks"] == 3
+    assert mgr.stats["lost_after_crash"] == 3
+    n = mgr.recover()
+    assert n >= 0
+    for v in range(1, 4):          # acked before the crash: durable
+        rec = mgr.store.read(f"s{v}")
+        assert rec is not None and rec[0] == v, f"acked s{v} lost"
+    for v in range(4, 7):          # never reached the switch: gone
+        assert mgr.store.read(f"s{v}") is None, f"s{v} resurrected"
+        assert mgr.buffer.newest(f"s{v}") is None
+    # recover() restarts the drainer: the manager is usable again
+    mgr.persist("post", 9, np.ones(4))
+    mgr.drain_all()
+    assert mgr.store.read("post")[0] == 9
+    mgr.close()
+
+
+def test_scheduled_crash_zero_acks_nothing(tmp_path):
+    mgr = mk(tmp_path, PersistScheme.PB_RF, sync=False)
+    mgr.schedule_crash(0)
+    mgr.persist("w", 1, np.ones(4))
+    assert mgr.stats["acks"] == 0
+    mgr.recover()
+    assert mgr.store.read("w") is None
+    mgr.close()
+
+
 def test_replica_failure_falls_back_to_store(tmp_path):
     mgr = mk(tmp_path, PersistScheme.PB_RF, sync=False)
     mgr.persist("w", 1, np.ones(4))

@@ -133,3 +133,18 @@ def test_rf_keep_one_free_drains_early():
     for a in (0, 1, 2):   # third persist leaves <= 1 Empty slot
         pb.persist(a, "x")
     assert sum(1 for e in pb.entries if e.state == PBEState.DRAIN) >= 1
+
+
+@pytest.mark.parametrize("scheme", [Scheme.PB, Scheme.PB_RF])
+@pytest.mark.parametrize("seed", [11, 12])
+def test_snapshot_durable_predicts_recovery(scheme, seed):
+    """The non-mutating durable snapshot equals what crash+recover
+    actually leaves in PM (per-address newest durable version)."""
+    rng = random.Random(seed)
+    ops = [(rng.choice(["persist", "ack", "read"]), rng.randrange(5))
+           for _ in range(120)]
+    pb, _acked, _reads = run_schedule(scheme, 4, ops, [3, 0, 2, 1])
+    snap = {a: rec[0] for a, rec in pb.snapshot_durable().items()}
+    pb.crash()
+    pb.recover()
+    assert {a: rec[0] for a, rec in pb.pm.store.items()} == snap

@@ -85,6 +85,7 @@ def test_rf_read_hits_recent_persists():
     assert res.read_hit_rate > 0.9
 
 
+@pytest.mark.slow
 def test_sweep_matches_individual():
     tr = make_trace("radiosity", persist_budget=3000)
     cfgs = [PCSConfig(scheme=Scheme.PB, n_pbe=n) for n in (8, 16, 32)]
@@ -95,6 +96,7 @@ def test_sweep_matches_individual():
 
 
 @pytest.mark.parametrize("name", ["radiosity", "cholesky", "fft"])
+@pytest.mark.slow
 def test_workload_scheme_ordering(name):
     """Qualitative paper signatures on reduced-budget traces."""
     tr = make_trace(name, persist_budget=4000)

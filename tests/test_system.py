@@ -26,6 +26,7 @@ class Args:
         self.store_delay_ms = 1.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("scheme", ["nopb", "pb", "pb_rf"])
 def test_train_crash_resume(tmp_path, scheme):
     cfg = get_config("smollm-135m", smoke=True)
@@ -81,6 +82,7 @@ def test_restore_prefers_buffer_forwarding(tmp_path):
     mgr.close()
 
 
+@pytest.mark.slow
 def test_cli_train_runs(tmp_path):
     """The launcher CLI end-to-end (smallest smoke config)."""
     import os
