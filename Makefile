@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all test-fuzz bench-smoke bench calibrate
+.PHONY: test test-all test-fuzz bench-smoke bench calibrate ci
 
 # fast suite (<1 min): everything except the @slow big-model smokes and
 # exhaustive grids
@@ -28,3 +28,9 @@ bench:
 
 calibrate:
 	$(PYTHON) -m benchmarks._calibrate
+
+# CI lane: fast tests, then the smoke benchmarks, then the compile-count
+# regression guard (the shared grid / recovery sweep / tenant sweep must
+# each stay exactly ONE XLA program — see benchmarks/check_compiles.py)
+ci: test bench-smoke
+	$(PYTHON) -m benchmarks.check_compiles

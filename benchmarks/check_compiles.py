@@ -1,0 +1,54 @@
+"""CI compile-count regression guard over BENCH_engine.json.
+
+The engine's one-program property — a whole {trace x config x scheme x
+crash-point x tenant-count} grid lowering to a single XLA compilation —
+is a load-bearing perf invariant (DESIGN.md §3).  ``make ci`` runs this
+after ``bench-smoke``: if the shared grid, the recovery sweep or the
+tenant sweep ever compiles more than once (e.g. someone turns a traced
+scalar back into a static), the build fails loudly instead of the
+trajectory silently absorbing a multi-compile regression.
+
+    PYTHONPATH=src python -m benchmarks.check_compiles [report.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+GUARDED = ("shared_grid_compiles", "recovery_sweep_compiles",
+           "tenant_sweep_compiles")
+
+
+def check(report: dict) -> list:
+    problems = []
+    for key in GUARDED:
+        v = report.get(key)
+        if v is None:
+            problems.append(f"{key}: missing from the report (sweep "
+                            "didn't run or telemetry was dropped)")
+        elif v != 1:
+            problems.append(f"{key} = {v}: grid no longer lowers to one "
+                            "XLA program")
+    return problems
+
+
+def main(argv=None) -> int:
+    path = (argv or sys.argv[1:] or ["BENCH_engine.json"])[0]
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except OSError as e:
+        print(f"check_compiles: cannot read {path}: {e}", file=sys.stderr)
+        return 2
+    problems = check(report)
+    if problems:
+        for p in problems:
+            print(f"check_compiles: FAIL {p}", file=sys.stderr)
+        return 1
+    counts = {k: report[k] for k in GUARDED}
+    print(f"check_compiles: OK {counts}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

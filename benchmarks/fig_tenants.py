@@ -1,0 +1,117 @@
+"""Tenant sweep: shared-switch scale-out under multi-tenant contention.
+
+Independent hosts (tenants) share one persistent switch — the paper's
+data-center memory-pooling pitch.  Each tenant runs its own
+``CORES_PER_TENANT``-core copy of the workload with a fixed per-tenant
+persist budget, so offered load grows with the tenant count while the
+PB slots, the PBC FIFO and the PM banks stay fixed: persist latency
+degrades with contention and the per-tenant stats rows expose how
+fairly the shared switch spreads that pain.
+
+The whole sweep — every {tenant count x scheme}, plus a shared-hot-set
+contention variant at the highest tenant count — is ONE ``simulate_grid``
+call: the tenant count is a traced config scalar like every latency, so
+the mixed-tenant grid shares a single XLA program (the compile-count
+guard in ``make ci`` pins this).
+
+Reported per (scheme, T):
+  * mean persist latency (ns) over all tenants;
+  * fairness: max/min ratio of per-tenant mean persist latencies
+    (1.0 = perfectly fair);
+  * per-tenant PBC queueing share via the stall/queue accumulators.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import PCSConfig, Scheme, make_tenant_trace, simulate_grid
+from repro.core.engine import compile_count
+from repro.core.engine.state import S_PBCQ_SUM, S_PERSIST_CNT
+
+from benchmarks import _shared
+from benchmarks.fig_recovery import SCHEMES
+
+COUNTS = (1, 2, 4, 8)
+SMOKE_COUNTS = (1, 2, 4)
+WORKLOAD = "radiosity"
+CORES_PER_TENANT = 2
+SHARED_HOT_LINES = 18          # radiosity's whole hot set, contended
+
+# telemetry of the tenant sweep for BENCH_engine.json (set by run())
+sweep_metrics: dict = {}
+
+
+def _fairness(r) -> float:
+    """Max/min ratio of per-tenant mean persist latencies (NaN-safe)."""
+    lats = [t.persist_lat_ns for t in r.tenant_results()
+            if not math.isnan(t.persist_lat_ns)]
+    if not lats or min(lats) <= 0:
+        return float("nan")
+    return max(lats) / min(lats)
+
+
+def run() -> list:
+    counts = SMOKE_COUNTS if _shared.SMOKE else COUNTS
+    budget = max(_shared.BUDGET // 4, 100)      # per tenant
+    traces = [make_tenant_trace(WORKLOAD, t, CORES_PER_TENANT,
+                                persist_budget=budget)
+              for t in counts]
+    t_hot = counts[-1]
+    traces.append(make_tenant_trace(WORKLOAD, t_hot, CORES_PER_TENANT,
+                                    persist_budget=budget,
+                                    shared_lines=SHARED_HOT_LINES))
+    # The grid is a {trace x config} cross product; only the diagonal
+    # cells (config tenant count == trace tenant structure) are read,
+    # still one compiled program (same pattern as fig_recovery).
+    configs, keys = [], []
+    for key, scheme in SCHEMES:
+        for t in counts:
+            configs.append(PCSConfig(
+                scheme=scheme, n_tenants=t,
+                n_cores=t * CORES_PER_TENANT))
+            keys.append((key, t))
+    c0, t0 = compile_count(), time.time()
+    cells = simulate_grid(traces, configs, bucket=_shared.bucket())
+    sweep_metrics.update(
+        tenant_sweep_wall_s=round(time.time() - t0, 3),
+        tenant_sweep_compiles=compile_count() - c0,
+        tenant_sweep_cells=len(traces) * len(configs),
+    )
+    rows = []
+    for i, t_trace in enumerate(counts):
+        for (key, t_cfg), r in zip(keys, cells[i]):
+            if t_cfg != t_trace:        # off-diagonal: wrong partition
+                continue
+            if math.isnan(r.persist_lat_ns):
+                continue                # empty cell: no persists to plot
+            rows.append((f"tenants_persist_{key}_T{t_cfg}",
+                         round(r.persist_lat_ns, 1), "ns"))
+            rows.append((f"tenants_fair_{key}_T{t_cfg}",
+                         round(_fairness(r), 3), "max_min_tenant_ratio"))
+            if r.tenant_stats is not None:
+                q = r.tenant_stats[:, S_PBCQ_SUM]
+                n = r.tenant_stats[:, S_PERSIST_CNT]
+                worst = max(float(qi / ni) for qi, ni in zip(q, n)
+                            if ni > 0)
+                rows.append((f"tenants_pbcq_{key}_T{t_cfg}",
+                             round(worst, 1), "worst_tenant_pbcq_ns"))
+    # shared-hot-set contention variant: all tenants fight over one hot
+    # set instead of private address spaces (read forwarding + coalescing
+    # now cross tenants; fairness typically degrades)
+    for (key, t_cfg), r in zip(keys, cells[len(counts)]):
+        if t_cfg != t_hot or math.isnan(r.persist_lat_ns):
+            continue
+        rows.append((f"tenants_hot_persist_{key}_T{t_cfg}",
+                     round(r.persist_lat_ns, 1), "ns"))
+        rows.append((f"tenants_hot_fair_{key}_T{t_cfg}",
+                     round(_fairness(r), 3), "max_min_tenant_ratio"))
+    return rows
+
+
+def main() -> None:
+    _shared.emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -14,12 +14,14 @@ from repro.core.params import (LatencyProfile, Op, PBEState, PCSConfig,
                                Scheme)
 from repro.core.semantics import (Event, EventKind, PersistentBuffer,
                                   PersistentMemory)
-from repro.core.traces import (Trace, WORKLOADS, fuzz_crash_ns, fuzz_trace,
-                               make_trace)
+from repro.core.traces import (Trace, WORKLOADS, compose_tenants,
+                               fuzz_crash_ns, fuzz_trace, make_tenant_trace,
+                               make_trace, tenant_ids)
 
 __all__ = [
     "LatencyProfile", "Op", "PBEState", "PCSConfig", "Scheme",
     "Event", "EventKind", "PersistentBuffer", "PersistentMemory",
     "SimResult", "simulate", "simulate_grid", "simulate_sweep",
-    "Trace", "WORKLOADS", "fuzz_crash_ns", "fuzz_trace", "make_trace",
+    "Trace", "WORKLOADS", "compose_tenants", "fuzz_crash_ns", "fuzz_trace",
+    "make_tenant_trace", "make_trace", "tenant_ids",
 ]

@@ -73,22 +73,25 @@ def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None):
 
 
 @functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
-                                             "pm_banks", "n_track"))
+                                             "pm_banks", "n_track",
+                                             "n_tenants_max"))
 def _run_cell(ops, addrs, gaps, lengths, scheme, sc, *,
-              max_pbe, n_steps, pm_banks, n_track):
+              max_pbe, n_steps, pm_banks, n_track, n_tenants_max):
     # single-cell program: no batch axes, so `lax.switch` lowers to real
     # branches instead of vmap's execute-all-and-select
     return scan_cell(ops, addrs, gaps, lengths, scheme, sc,
                      max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
-                     n_track=n_track)
+                     n_track=n_track, n_tenants_max=n_tenants_max)
 
 
 @functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
-                                             "pm_banks", "n_track"))
+                                             "pm_banks", "n_track",
+                                             "n_tenants_max"))
 def _run_grid(ops, addrs, gaps, lengths, schemes, sc, *,
-              max_pbe, n_steps, pm_banks, n_track):
+              max_pbe, n_steps, pm_banks, n_track, n_tenants_max):
     cell = functools.partial(scan_cell, max_pbe=max_pbe, n_steps=n_steps,
-                             pm_banks=pm_banks, n_track=n_track)
+                             pm_banks=pm_banks, n_track=n_track,
+                             n_tenants_max=n_tenants_max)
     over_cfg = jax.vmap(cell, in_axes=(None, None, None, None, 0, 0))
     over_tr = jax.vmap(over_cfg, in_axes=(0, 0, 0, 0, None, None))
     return over_tr(ops, addrs, gaps, lengths, schemes, sc)
@@ -108,11 +111,17 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
     ``track_addrs > 0`` additionally returns, per cell, the durable
     version vector over addresses ``[0, track_addrs)`` (the differential
     harness input); it is a static array shape, so changing it recompiles.
+    A config's ``n_tenants`` is a traced scalar too — a {workload x
+    scheme x tenant-count} sweep shares the program; only the *max*
+    tenant count (per-tenant stats rows) is a static shape.
     """
     if not traces or not configs:
         return [[] for _ in traces]
     ops, addrs, gaps, lengths, n_steps = _stack_traces(traces, bucket)
     sc_np, schemes, max_pbe, pm_banks = _stack_configs(configs, max_pbe)
+    # static per-tenant stats row count; every config's rows beyond its
+    # own n_tenants stay zero, so mixed tenant counts share one program
+    n_tenants_max = max(c.n_tenants for c in configs)
     single = len(traces) == 1 and len(configs) == 1
     with enable_x64():
         if single:
@@ -125,7 +134,7 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 jnp.asarray(gaps[0]), jnp.asarray(lengths[0]),
                 jnp.asarray(schemes[0]), sc,
                 max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
-                n_track=track_addrs)
+                n_track=track_addrs, n_tenants_max=n_tenants_max)
             out = tuple(np.asarray(o)[None, None] for o in out)
         else:
             sc = {k: jnp.asarray(v, jnp.float64) for k, v in sc_np.items()}
@@ -133,7 +142,7 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(gaps),
                 jnp.asarray(lengths), jnp.asarray(schemes), sc,
                 max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
-                n_track=track_addrs)
+                n_track=track_addrs, n_tenants_max=n_tenants_max)
             out = tuple(np.asarray(o) for o in out)
     runtimes, stats, durable_ver, n_recov, recov_ns = out
     return [[result_from_stats(
@@ -142,7 +151,8 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 recovery_entries=int(n_recov[i, j]),
                 recovery_ns=float(recov_ns[i, j]),
                 durable_ver=(durable_ver[i, j][:track_addrs].copy()
-                             if track_addrs > 0 else None))
+                             if track_addrs > 0 else None),
+                n_tenants=configs[j].n_tenants)
              for j in range(len(configs))] for i in range(len(traces))]
 
 

@@ -39,7 +39,9 @@ class StepCtx(NamedTuple):
     sc: Dict[str, jnp.ndarray]  # traced latency/policy scalars
     slot_ids: jnp.ndarray   # (P,) arange over PBE slots
     slot_active: jnp.ndarray  # (P,) live-slot mask (slot_ids < n_pbe)
-    n_live: jnp.ndarray     # ()  number of cores participating in barriers
+    tenant: jnp.ndarray     # ()  i32 tenant id of the selected core
+    tids: jnp.ndarray       # (C,) i32 per-core tenant ids (traced)
+    n_live_t: jnp.ndarray   # ()  live cores in this op's tenant (barriers)
     n_banks: int            # static PM bank count
     n_track: int = 0        # static durability-tracked address count
 
@@ -55,7 +57,7 @@ def handle_compute(ctx: StepCtx, st: MachineState) -> MachineState:
 
 
 def handle_dram_read(ctx: StepCtx, st: MachineState) -> MachineState:
-    stats = st.stats.at[S_DRAM_READS].add(1.0)
+    stats = st.stats.at[ctx.tenant, S_DRAM_READS].add(1.0)
     return st._replace(clock=st.clock.at[ctx.c].set(ctx.t + ctx.sc["dram_ns"]),
                        stats=stats)
 
@@ -75,8 +77,8 @@ def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
         # NoPB: the volatile switch forwards every read to PM.
         pm_start = channels.service_start(st.pm_busy, bank, t + ow)
         resp = pm_start + sc["nvm_read"] + ow
-        stats = st.stats.at[S_READ_SUM].add(resp - t)
-        stats = stats.at[S_READ_CNT].add(1.0)
+        stats = st.stats.at[ctx.tenant, S_READ_SUM].add(resp - t)
+        stats = stats.at[ctx.tenant, S_READ_CNT].add(1.0)
         return st._replace(
             clock=st.clock.at[ctx.c].set(resp),
             pm_busy=channels.reserve(st.pm_busy, bank, pm_start,
@@ -118,10 +120,10 @@ def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
             has, channels.pbc_hold(st.pbc_busy, arr, sc["pbc_read_occ"]),
             st.pbc_busy)
         lru2 = st.lru.at[idx].set(jnp.where(has & served, t, st.lru[idx]))
-        stats = st.stats.at[S_READ_SUM].add(resp - t)
-        stats = stats.at[S_READ_CNT].add(1.0)
-        stats = stats.at[S_READ_HITS].add((has & served).astype(jnp.float64))
-        stats = stats.at[S_PI_DETOURS].add(has.astype(jnp.float64))
+        stats = st.stats.at[ctx.tenant, S_READ_SUM].add(resp - t)
+        stats = stats.at[ctx.tenant, S_READ_CNT].add(1.0)
+        stats = stats.at[ctx.tenant, S_READ_HITS].add((has & served).astype(jnp.float64))
+        stats = stats.at[ctx.tenant, S_PI_DETOURS].add(has.astype(jnp.float64))
         return st._replace(clock=st.clock.at[ctx.c].set(resp), state=state0,
                            lru=lru2, pm_busy=pm_busy2, pbc_busy=pbc_busy2,
                            stats=stats)
@@ -240,26 +242,26 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
                      + jnp.where(commit, policy_writes, 0.0))
 
     stall = jnp.where(is_coalesce, 0.0, ta - pbc_start)
-    stats = st.stats.at[S_VICTIM_CNT].add(
+    stats = st.stats.at[ctx.tenant, S_VICTIM_CNT].add(
         ((~is_coalesce) & (~any_empty)).astype(jnp.float64))
-    stats = stats.at[S_PBCQ_SUM].add(
+    stats = stats.at[ctx.tenant, S_PBCQ_SUM].add(
         jnp.maximum(st.pbc_busy - arr, 0.0))
     # Only a genuine Empty-shortage stall (ta > pbc_start) holds the PI
     # front beyond the pipelined issue interval.
     pbc_free = jnp.maximum(
         channels.pbc_hold(st.pbc_busy, arr, sc["pbc_occ_ns"]),
         jnp.where(is_coalesce | (ta <= pbc_start), 0.0, ta))
-    stats = stats.at[S_PERSIST_SUM].add(ack - t)
-    stats = stats.at[S_PERSIST_CNT].add(1.0)
-    stats = stats.at[S_COALESCES].add(is_coalesce.astype(jnp.float64))
-    stats = stats.at[S_PM_WRITES].add(pm_writes_inc)
-    stats = stats.at[S_STALL_TIME].add(stall)
+    stats = stats.at[ctx.tenant, S_PERSIST_SUM].add(ack - t)
+    stats = stats.at[ctx.tenant, S_PERSIST_CNT].add(1.0)
+    stats = stats.at[ctx.tenant, S_COALESCES].add(is_coalesce.astype(jnp.float64))
+    stats = stats.at[ctx.tenant, S_PM_WRITES].add(pm_writes_inc)
+    stats = stats.at[ctx.tenant, S_STALL_TIME].add(stall)
     # A persist committed into the persistent switch is durable
     # regardless of the drain's fate (the paper's core claim); the core
     # only *observes* the ack if it lands before the crash.  ack beats
     # the crash only if the write committed first, so acked => durable.
-    stats = stats.at[S_ACKED].add((ack <= crash).astype(jnp.float64))
-    stats = stats.at[S_DURABLE].add(commit.astype(jnp.float64))
+    stats = stats.at[ctx.tenant, S_ACKED].add((ack <= crash).astype(jnp.float64))
+    stats = stats.at[ctx.tenant, S_DURABLE].add(commit.astype(jnp.float64))
     return st._replace(clock=st.clock.at[ctx.c].set(ack), tag=tag5,
                        state=state5, lru=lru5, dd=dd5, ver=ver5,
                        aver=aver3, pm_ver=pm_ver3, pm_busy=pm_busy3,
@@ -283,11 +285,11 @@ def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
         tracked = _tracked(ctx, addr)
         a_idx = jnp.clip(addr, 0, A - 1)
         v_new = st.aver[a_idx] + 1
-        stats = st.stats.at[S_PERSIST_SUM].add(ack - t)
-        stats = stats.at[S_PERSIST_CNT].add(1.0)
-        stats = stats.at[S_PM_WRITES].add(1.0)
-        stats = stats.at[S_ACKED].add(ok.astype(jnp.float64))
-        stats = stats.at[S_DURABLE].add(ok.astype(jnp.float64))
+        stats = st.stats.at[ctx.tenant, S_PERSIST_SUM].add(ack - t)
+        stats = stats.at[ctx.tenant, S_PERSIST_CNT].add(1.0)
+        stats = stats.at[ctx.tenant, S_PM_WRITES].add(1.0)
+        stats = stats.at[ctx.tenant, S_ACKED].add(ok.astype(jnp.float64))
+        stats = stats.at[ctx.tenant, S_DURABLE].add(ok.astype(jnp.float64))
         return st._replace(
             clock=st.clock.at[ctx.c].set(ack),
             aver=st.aver.at[a_idx].add(jnp.where(tracked, 1, 0)),
@@ -317,10 +319,14 @@ def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
 
 # ----------------------------------------------------------------- barrier
 def handle_barrier(ctx: StepCtx, st: MachineState) -> MachineState:
-    # centralized barrier over all participating cores; the last arrival
-    # releases everyone at its arrival time.
-    last = (st.bcount + 1) >= ctx.n_live
-    released = jnp.where(st.blocked, ctx.t, st.clock).at[ctx.c].set(ctx.t)
+    # Centralized barrier *per tenant*: independent hosts never
+    # synchronize with each other, so only this tenant's cores arrive
+    # and the last of them releases its tenant's waiters at its arrival
+    # time.  With one tenant this is exactly the old global barrier.
+    same = ctx.tids == ctx.tenant
+    last = (st.bcount[ctx.tenant] + 1) >= ctx.n_live_t
+    released = jnp.where(st.blocked & same, ctx.t,
+                         st.clock).at[ctx.c].set(ctx.t)
     waiting = st.clock.at[ctx.c].set(INF * 0.9)
     return st._replace(clock=jnp.where(last, released, waiting))
 

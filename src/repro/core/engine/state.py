@@ -5,11 +5,17 @@ per-core clocks and trace cursors, the PB tables (TAT tags, ST states,
 LRU stamps, in-flight drain-ack times), the resource next-free times
 (PM banks, PBC) and the statistics accumulators behind Figs. 1 and 5-8.
 
-Every latency parameter, the live PBE bound, the drain thresholds *and
-the scheme id* are traced scalars (see :func:`scalars_from_config`), so
-a full {trace x config x scheme} grid lowers to a single XLA program.
-Only array shapes stay static: core count, ``max_pbe``, bank count and
-the scan length.
+Every latency parameter, the live PBE bound, the drain thresholds, the
+scheme id *and the tenant count* are traced scalars (see
+:func:`scalars_from_config`), so a full {trace x config x scheme x
+tenant-count} grid lowers to a single XLA program.  Only array shapes
+stay static: core count, ``max_pbe``, bank count, the scan length and
+the per-tenant stats row count ``n_tenants_max``.
+
+Statistics are accumulated per tenant — ``stats`` is ``(T, N_STATS)``
+with ``T = n_tenants_max`` — and the global :class:`SimResult` is the
+sum over tenants, bit-exact for single-tenant configs (unused rows stay
+exactly zero, and ``x + 0.0 == x`` in IEEE f64).
 """
 from __future__ import annotations
 
@@ -67,13 +73,14 @@ class MachineState(NamedTuple):
     pm_busy: jnp.ndarray   # (B,)  f64  PM bank next-free times
     pbc_busy: jnp.ndarray  # ()    f64  PBC next-free time
     blocked: jnp.ndarray   # (C,)  bool blocked at barrier
-    bcount: jnp.ndarray    # ()    i32  barrier arrival count
-    stats: jnp.ndarray     # (N_STATS,) f64
+    bcount: jnp.ndarray    # (T,)  i32  per-tenant barrier arrival counts
+    stats: jnp.ndarray     # (T, N_STATS) f64 per-tenant accumulators
 
 
 def init_state(n_cores: int, max_pbe: int, pm_banks: int,
-               n_track: int = 0) -> MachineState:
+               n_track: int = 0, n_tenants_max: int = 1) -> MachineState:
     A = max(n_track, 1)
+    T = max(n_tenants_max, 1)
     return MachineState(
         clock=jnp.zeros((n_cores,), jnp.float64),
         ptr=jnp.zeros((n_cores,), jnp.int32),
@@ -87,8 +94,8 @@ def init_state(n_cores: int, max_pbe: int, pm_banks: int,
         pm_busy=jnp.zeros((pm_banks,), jnp.float64),
         pbc_busy=jnp.zeros((), jnp.float64),
         blocked=jnp.zeros((n_cores,), bool),
-        bcount=jnp.zeros((), jnp.int32),
-        stats=jnp.zeros((N_STATS,), jnp.float64),
+        bcount=jnp.zeros((T,), jnp.int32),
+        stats=jnp.zeros((T, N_STATS), jnp.float64),
     )
 
 
@@ -103,6 +110,14 @@ class SimResult:
     acked/durable, and ``recovery_entries``/``recovery_ns`` report the
     Section V-D4 drain-all cost of the Dirty entries still buffered at
     the end of the run (zero for NoPB, which buffers nothing).
+
+    Multi-tenant runs additionally carry the raw per-tenant stats matrix
+    (``tenant_stats``, ``(n_tenants, N_STATS)``); the scalar fields above
+    are always the sum over tenants (bit-exact for ``n_tenants == 1``),
+    and :meth:`tenant_results` rebuilds one :class:`SimResult` per tenant
+    for fairness analysis.  Mean latencies are ``NaN`` (not ``0.0``) when
+    the corresponding count is zero — e.g. a run crashed at t=0 has no
+    persist latency, not an infinitely fast one.
     """
 
     runtime_ns: float
@@ -122,6 +137,8 @@ class SimResult:
     recovery_entries: int = 0   # surviving Dirty/Drain PBEs re-drained
     recovery_ns: float = 0.0    # modeled drain-all latency of recovery
     durable_ver: "np.ndarray | None" = None  # (track_addrs,) i32 or None
+    n_tenants: int = 1
+    tenant_stats: "np.ndarray | None" = None  # (n_tenants, N_STATS) f64
 
     @property
     def read_hit_rate(self) -> float:
@@ -136,30 +153,63 @@ class SimResult:
         """Fraction of issued persists durable after crash + recovery."""
         return self.durable_persists / max(self.persists, 1)
 
+    def tenant_results(self) -> "list[SimResult]":
+        """Per-tenant view: one SimResult built from each stats row.
+
+        ``runtime_ns`` and ``crash_at_ns`` are machine-global and shared;
+        the recovery snapshot (a property of the shared PB) is reported
+        only on the global result, so per-tenant recovery fields are 0.
+        """
+        if self.tenant_stats is None:
+            return [self]
+        return [result_from_stats(self.runtime_ns, row,
+                                  crash_at_ns=self.crash_at_ns)
+                for row in np.asarray(self.tenant_stats)]
+
+
+def _mean(total: float, count: float) -> float:
+    """NaN for empty means: a cell with no persists/reads has *no* mean
+    latency, not a 0.0 ns one (which plots as infinitely fast)."""
+    return float(total / count) if count > 0 else float("nan")
+
 
 def result_from_stats(runtime: float, stats: np.ndarray, *,
                       crash_at_ns: float = float("inf"),
                       recovery_entries: int = 0,
                       recovery_ns: float = 0.0,
-                      durable_ver: "np.ndarray | None" = None) -> SimResult:
+                      durable_ver: "np.ndarray | None" = None,
+                      n_tenants: int = 1) -> SimResult:
+    """Build a SimResult from a stats vector or per-tenant stats matrix.
+
+    ``stats`` is ``(N_STATS,)`` or ``(T, N_STATS)`` with ``T >=
+    n_tenants``; rows beyond the config's tenant count are structural
+    padding (shared static shape of a mixed-tenant grid) and provably
+    all-zero, so the global sum over rows is bit-exact for ``T == 1``.
+    """
+    stats = np.asarray(stats, np.float64)
+    if stats.ndim == 1:
+        stats = stats[None, :]
+    tot = stats.sum(axis=0)
     return SimResult(
         runtime_ns=runtime,
-        persist_lat_ns=float(stats[S_PERSIST_SUM] / max(stats[S_PERSIST_CNT], 1)),
-        read_lat_ns=float(stats[S_READ_SUM] / max(stats[S_READ_CNT], 1)),
-        persists=int(stats[S_PERSIST_CNT]),
-        pm_reads=int(stats[S_READ_CNT]),
-        read_hits=int(stats[S_READ_HITS]),
-        coalesces=int(stats[S_COALESCES]),
-        pm_writes=int(stats[S_PM_WRITES]),
-        stall_ns=float(stats[S_STALL_TIME]),
-        pi_detours=int(stats[S_PI_DETOURS]),
-        victim_drains=int(stats[S_VICTIM_CNT]),
+        persist_lat_ns=_mean(tot[S_PERSIST_SUM], tot[S_PERSIST_CNT]),
+        read_lat_ns=_mean(tot[S_READ_SUM], tot[S_READ_CNT]),
+        persists=int(tot[S_PERSIST_CNT]),
+        pm_reads=int(tot[S_READ_CNT]),
+        read_hits=int(tot[S_READ_HITS]),
+        coalesces=int(tot[S_COALESCES]),
+        pm_writes=int(tot[S_PM_WRITES]),
+        stall_ns=float(tot[S_STALL_TIME]),
+        pi_detours=int(tot[S_PI_DETOURS]),
+        victim_drains=int(tot[S_VICTIM_CNT]),
         crash_at_ns=crash_at_ns,
-        acked_persists=int(stats[S_ACKED]),
-        durable_persists=int(stats[S_DURABLE]),
+        acked_persists=int(tot[S_ACKED]),
+        durable_persists=int(tot[S_DURABLE]),
         recovery_entries=int(recovery_entries),
         recovery_ns=float(recovery_ns),
         durable_ver=durable_ver,
+        n_tenants=n_tenants,
+        tenant_stats=(stats[:n_tenants].copy() if n_tenants > 1 else None),
     )
 
 
@@ -168,6 +218,7 @@ def scalars_from_config(cfg: PCSConfig) -> Dict[str, float]:
     lat = cfg.latency
     return dict(
         n_pbe=float(cfg.n_pbe),
+        n_tenants=float(cfg.n_tenants),
         threshold_count=float(cfg.threshold_count),
         preset_count=float(cfg.preset_count),
         tag_ns=lat.pb_tag_ns_for(cfg.n_pbe),
@@ -184,6 +235,10 @@ def scalars_from_config(cfg: PCSConfig) -> Dict[str, float]:
         fwd_margin=lat.fwd_margin_ns,
         switch_pipe=lat.switch_pipe_ns,
         ow_cpu_pm=lat.oneway_cpu_pm(cfg.n_switches),
+        # n_switches == 0 is only constructible with NOPB (PCSConfig
+        # rejects a PB with no switch to live in); the fallbacks below
+        # just keep the never-selected PB branch of the vmapped
+        # lax.switch finite.
         ow_cpu_sw1=lat.oneway_cpu_sw1() if cfg.n_switches > 0 else lat.cpu_link_ns,
         ow_sw1_pm=lat.oneway_sw1_pm(cfg.n_switches) if cfg.n_switches > 0 else 0.0,
         # power-loss instant; INF (the engine's finite infinity) = never

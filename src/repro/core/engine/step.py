@@ -44,14 +44,21 @@ def compile_count() -> int:
 
 def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
               max_pbe: int, n_steps: int, pm_banks: int, n_track: int = 0,
-              return_state: bool = False):
+              n_tenants_max: int = 1, return_state: bool = False):
     """Simulate one (trace, config) cell.
 
     Returns ``(runtime, stats, durable_ver, n_recovered, recovery_ns)``,
     plus the final :class:`MachineState` when ``return_state`` is set
     (used by the padding-invariant tests).  ``scheme`` and every entry
     of ``sc`` are traced scalars; only array shapes (core count C,
-    ``max_pbe``, ``pm_banks``, ``n_steps``, ``n_track``) are static.
+    ``max_pbe``, ``pm_banks``, ``n_steps``, ``n_track``,
+    ``n_tenants_max``) are static.
+
+    Tenancy: ``sc["n_tenants"]`` (traced) partitions the *live* cores
+    into contiguous balanced groups — core ``c`` belongs to tenant
+    ``floor(c * T / n_live)`` — that share the PB slots, the PBC FIFO
+    and the PM banks but keep independent barriers and stats rows
+    (``core.traces.tenant_ids`` is the numpy twin of this mapping).
     """
     _COMPILES[0] += 1
     C = ops.shape[0]
@@ -61,6 +68,14 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
     # from stacked grids have zero-length streams and never arrive).
     n_live = jnp.sum((lengths > 0).astype(jnp.int32))
     core_ids = jnp.arange(C)
+    # Per-core tenant ids: balanced contiguous partition of the live
+    # cores; padded cores get a clipped id but never issue ops, never
+    # arrive at barriers and never touch a stats row.
+    t_int = jnp.maximum(sc["n_tenants"].astype(jnp.int32), 1)
+    tids = jnp.clip((core_ids * t_int) // jnp.maximum(n_live, 1), 0,
+                    jnp.minimum(t_int, n_tenants_max) - 1)
+    live_per_tenant = jnp.zeros((n_tenants_max,), jnp.int32).at[tids].add(
+        (lengths > 0).astype(jnp.int32))
 
     def step(st: MachineState, _):
         active = st.ptr < lengths
@@ -79,19 +94,24 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
         op = jnp.where(live, ops[c, i], int(Op.COMPUTE))
         t = jnp.where(live, t_issue, st.clock[c])
 
+        tid_c = tids[c]
+        n_live_t = live_per_tenant[tid_c]
         ctx = StepCtx(c=c, t=t, addr=addrs[c, i], scheme=scheme, sc=sc,
                       slot_ids=slot_ids, slot_active=slot_active,
-                      n_live=n_live, n_banks=pm_banks, n_track=n_track)
+                      tenant=tid_c, tids=tids, n_live_t=n_live_t,
+                      n_banks=pm_banks, n_track=n_track)
         branches = [lambda s, h=h: h(ctx, s) for h in HANDLERS]
         st2 = jax.lax.switch(jnp.clip(op, 0, 5), branches, st)
 
+        # barriers synchronize only within a tenant (independent hosts)
         is_bar = live & (op == int(Op.BARRIER))
-        last = is_bar & ((st.bcount + 1) >= n_live)
-        blocked = jnp.where(last, jnp.zeros_like(st.blocked),
+        last = is_bar & ((st.bcount[tid_c] + 1) >= n_live_t)
+        blocked = jnp.where(last & (tids == tid_c), False,
                             jnp.where(is_bar, st.blocked.at[c].set(True),
                                       st.blocked))
-        bcount = jnp.where(last, 0,
-                           jnp.where(is_bar, st.bcount + 1, st.bcount))
+        bcount = st.bcount.at[tid_c].set(
+            jnp.where(last, 0,
+                      st.bcount[tid_c] + jnp.where(is_bar, 1, 0)))
         # crashed ops still consume their cursor slot (the stream drains
         # as no-ops, so post-crash cores cannot starve live ones) and
         # still advance the core clock to their issue time: gaps are
@@ -103,8 +123,9 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
         return st2._replace(clock=clock, ptr=ptr, blocked=blocked,
                             bcount=bcount), None
 
-    final, _ = jax.lax.scan(step, init_state(C, max_pbe, pm_banks, n_track),
-                            None, length=n_steps)
+    final, _ = jax.lax.scan(
+        step, init_state(C, max_pbe, pm_banks, n_track, n_tenants_max),
+        None, length=n_steps)
     # a crashed run ends at the power loss: dead cores advanced their
     # clocks through never-executed ops, so cap at the crash instant
     runtime = jnp.max(jnp.where(final.clock < INF * 0.5,

@@ -163,6 +163,13 @@ class PCSConfig:
     n_pbe: int = 16              # persistent buffer entries (paper Table I)
     n_switches: int = 1          # CXL switches between CPU and PM
     n_cores: int = 8             # paper: 8-core OoO
+    # Independent hosts (tenants) sharing the switch's persistence domain:
+    # the trace's live cores are partitioned into ``n_tenants`` contiguous
+    # groups (tenant t owns cores {c : floor(c*T/n_live) == t}) that share
+    # the PB slots, the PBC FIFO and the PM banks.  Lowered to a *traced*
+    # scalar, so a {workload x scheme x tenant-count} grid is one XLA
+    # program; only the per-tenant stats row count is a static shape.
+    n_tenants: int = 1
     drain_threshold: float = DEFAULT_DRAIN_THRESHOLD
     drain_preset: float = DEFAULT_DRAIN_PRESET
     pm_banks: int = 4             # independent PM device banks (the single
@@ -180,6 +187,17 @@ class PCSConfig:
             raise ValueError("n_pbe must be >= 1")
         if self.n_switches < 0:
             raise ValueError("n_switches must be >= 0")
+        if self.n_switches == 0 and self.scheme != Scheme.NOPB:
+            # The persistent buffer lives inside the first switch; with no
+            # switch in the chain there is nowhere for it to exist, and
+            # lowering the drain path to 0 ns would silently simulate a
+            # free PB (the old behaviour of scalars_from_config).
+            raise ValueError(
+                f"scheme {self.scheme.name} requires n_switches >= 1: the "
+                "persistent buffer lives in the first CXL switch (use "
+                "Scheme.NOPB for the switchless direct-attach baseline)")
+        if not 1 <= self.n_tenants <= self.n_cores:
+            raise ValueError("require 1 <= n_tenants <= n_cores")
         if not (0.0 < self.drain_preset <= self.drain_threshold <= 1.0):
             raise ValueError("require 0 < preset <= threshold <= 1")
         if self.crash_at_ns < 0.0:

@@ -54,6 +54,7 @@ class PBEntry:
     data: object
     state: PBEState
     lru: int  # stamp of last use (higher = more recent)
+    tenant: int = 0  # last tenant (host) that wrote this entry
 
 
 class PersistentMemory:
@@ -104,7 +105,7 @@ class PersistentBuffer:
         self._seq = 0
         self._version_clock = 0
         # Writes stalled at the PI buffer waiting for an Empty entry.
-        self.pi_stalled: List[Tuple[int, object]] = []
+        self.pi_stalled: List[Tuple[int, object, int]] = []
         # Drains in flight: addr -> version sent (ack frees the entry).
         self.in_flight: Dict[int, int] = {}
         self.stats = {
@@ -116,6 +117,16 @@ class PersistentBuffer:
             "read_misses": 0,
             "stalls": 0,
         }
+        # Per-tenant accounting over the shared buffer: every event is
+        # attributed to the tenant whose request triggered it (a policy
+        # drain evicting another tenant's entry bills the *trigger*,
+        # mirroring the timed engine's ctx.tenant attribution).
+        self.tenant_stats: Dict[int, Dict[str, int]] = {}
+
+    def _tstats(self, tenant: int) -> Dict[str, int]:
+        if tenant not in self.tenant_stats:
+            self.tenant_stats[tenant] = {k: 0 for k in self.stats}
+        return self.tenant_stats[tenant]
 
     # ------------------------------------------------------------- helpers
     def _next_seq(self) -> int:
@@ -157,19 +168,25 @@ class PersistentBuffer:
         return min(dirty, key=lambda e: e.lru)
 
     # --------------------------------------------------------------- drain
-    def _start_drain(self, e: PBEntry, events: List[Event]) -> None:
-        """Dirty -> Drain; emit the write packet toward PM (Section V-B)."""
+    def _start_drain(self, e: PBEntry, events: List[Event],
+                     tenant: int = 0) -> None:
+        """Dirty -> Drain; emit the write packet toward PM (Section V-B).
+
+        ``tenant`` is the tenant whose request *triggered* the drain
+        (victim eviction / policy drain-down) — the one billed for it.
+        """
         assert e.state == PBEState.DIRTY
         e.state = PBEState.DRAIN
         self.in_flight[(e.addr, e.version)] = True
         self.stats["drains"] += 1
+        self._tstats(tenant)["drains"] += 1
         events.append(Event(EventKind.DRAIN_SENT, e.addr, e.version,
                             self._next_seq()))
         # The PM device receives the write; its ack is delivered later by
         # the caller via pm_ack() (possibly delayed / after a crash).
         self.pm.write(e.addr, e.version, e.data)
 
-    def _rf_drain_down(self, events: List[Event]) -> None:
+    def _rf_drain_down(self, events: List[Event], tenant: int = 0) -> None:
         """PB_RF drain policy, shared with the timed engine.
 
         The decision (threshold/preset drain-down plus the keep-one-free
@@ -189,13 +206,20 @@ class PersistentBuffer:
             victim = self._lru_dirty()
             if victim is None:
                 break
-            self._start_drain(victim, events)
+            self._start_drain(victim, events, tenant)
 
     # ------------------------------------------------------------- persist
-    def persist(self, addr: int, data: object) -> List[Event]:
-        """A persist (flush+fence) packet reaches the switch."""
+    def persist(self, addr: int, data: object,
+                tenant: int = 0) -> List[Event]:
+        """A persist (flush+fence) packet reaches the switch.
+
+        ``tenant`` tags which host issued it (multi-tenant sharing of
+        the switch); all events it triggers are billed to that tenant.
+        """
         events: List[Event] = []
+        ts = self._tstats(tenant)
         self.stats["persists"] += 1
+        ts["persists"] += 1
         self._version_clock += 1
         version = self._version_clock
 
@@ -203,6 +227,7 @@ class PersistentBuffer:
             # Volatile switch: the persist round-trips to PM.
             self.pm.write(addr, version, data)
             self.stats["acks"] += 1
+            ts["acks"] += 1
             events.append(Event(EventKind.PERSIST_ACK, addr, version,
                                 self._next_seq()))
             return events
@@ -213,9 +238,12 @@ class PersistentBuffer:
                 # Write coalescing: newer version absorbs the older one.
                 existing.version = version
                 existing.data = data
+                existing.tenant = tenant
                 self._touch(existing)
                 self.stats["coalesces"] += 1
                 self.stats["acks"] += 1
+                ts["coalesces"] += 1
+                ts["acks"] += 1
                 events.append(Event(EventKind.COALESCED, addr, version,
                                     self._next_seq()))
                 events.append(Event(EventKind.PERSIST_ACK, addr, version,
@@ -232,13 +260,15 @@ class PersistentBuffer:
         if slot is None:
             victim = self._lru_dirty()
             if victim is not None:
-                self._start_drain(victim, events)
+                self._start_drain(victim, events, tenant)
             # Whether we drained a victim or everything is already Drain,
             # the write must wait for an Empty entry (Section V-D1).
-            self.pi_stalled.append((addr, data))
+            self.pi_stalled.append((addr, data, tenant))
             self.stats["stalls"] += 1
-            self._version_clock -= 1
             self.stats["persists"] -= 1
+            ts["stalls"] += 1
+            ts["persists"] -= 1
+            self._version_clock -= 1
             events.append(Event(EventKind.STALLED, addr, version,
                                 self._next_seq()))
             return events
@@ -247,16 +277,18 @@ class PersistentBuffer:
         slot.version = version
         slot.data = data
         slot.state = PBEState.DIRTY
+        slot.tenant = tenant
         self._touch(slot)
         self.stats["acks"] += 1
+        ts["acks"] += 1
         events.append(Event(EventKind.PERSIST_ACK, addr, version,
                             self._next_seq()))
 
         if self.config.scheme == Scheme.PB:
             # Drain as soon as acked, to keep Empty entries available.
-            self._start_drain(slot, events)
+            self._start_drain(slot, events, tenant)
         else:
-            self._rf_drain_down(events)
+            self._rf_drain_down(events, tenant)
         return events
 
     # -------------------------------------------------------------- pm ack
@@ -276,13 +308,15 @@ class PersistentBuffer:
         # Retry stalled writes now that an entry may be Empty.  Acks were
         # prioritized to the PI front precisely to enable this (V-D2).
         retries, self.pi_stalled = self.pi_stalled, []
-        for (a, d) in retries:
-            events.extend(self.persist(a, d))
+        for (a, d, tn) in retries:
+            events.extend(self.persist(a, d, tn))
         return events
 
     # ---------------------------------------------------------------- read
-    def read(self, addr: int) -> Tuple[Optional[object], Event]:
+    def read(self, addr: int,
+             tenant: int = 0) -> Tuple[Optional[object], Event]:
         """A read request reaches the switch; returns (data, event)."""
+        ts = self._tstats(tenant)
         e = self._find(addr)
         if e is not None and e.state in (PBEState.DIRTY, PBEState.DRAIN):
             # PBCS routes to PI; PBC serves from the buffer (V-D3).  Under
@@ -293,9 +327,11 @@ class PersistentBuffer:
             # the timed engine's victim-selection discipline.
             self._touch(e)
             self.stats["read_hits"] += 1
+            ts["read_hits"] += 1
             return e.data, Event(EventKind.READ_FROM_PB, addr, e.version,
                                  self._next_seq())
         self.stats["read_misses"] += 1
+        ts["read_misses"] += 1
         rec = self.pm.read(addr)
         data = rec[1] if rec is not None else None
         ver = rec[0] if rec is not None else -1
@@ -316,7 +352,8 @@ class PersistentBuffer:
         for e in self.entries:
             if e.state in (PBEState.DIRTY, PBEState.DRAIN):
                 e.state = PBEState.DIRTY
-                self._start_drain(e, events)
+                # recovery drains belong to the entry's owning tenant
+                self._start_drain(e, events, e.tenant)
         # Recovery drains are immediately acked in this untimed model.
         for e in self.entries:
             if e.state == PBEState.DRAIN:

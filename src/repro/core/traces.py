@@ -138,12 +138,19 @@ class _CoreStream:
             self.compute(1.0)
 
 
-def _pack(streams: List[_CoreStream], name: str) -> Trace:
-    # Barriers must be consistent across cores or the simulation deadlocks.
-    bar_counts = {sum(1 for o in s.ops if o == int(Op.BARRIER))
-                  for s in streams}
-    if len(bar_counts) > 1:
-        raise ValueError(f"inconsistent barrier counts in {name}: {bar_counts}")
+def _pack(streams: List[_CoreStream], name: str,
+          barrier_groups: "List[range] | None" = None) -> Trace:
+    # Barriers must be consistent across the cores that share them (one
+    # group per tenant; barriers are tenant-local) or the simulation
+    # deadlocks.
+    groups = barrier_groups or [range(len(streams))]
+    for g in groups:
+        bar_counts = {sum(1 for o in streams[c].ops if o == int(Op.BARRIER))
+                      for c in g}
+        if len(bar_counts) > 1:
+            raise ValueError(
+                f"inconsistent barrier counts in {name}{list(g)}: "
+                f"{bar_counts}")
     lengths = np.array([len(s.ops) for s in streams], dtype=np.int32)
     L = int(lengths.max()) if len(streams) else 0
     C = len(streams)
@@ -490,6 +497,115 @@ def volrend_trace(n_cores: int = 8, seed: int = 6,
 
 
 # ===========================================================================
+# Multi-tenant composition (shared-switch scale-out)
+# ===========================================================================
+
+def tenant_ids(lengths, n_tenants: int) -> np.ndarray:
+    """Per-core tenant ids: the numpy twin of the engine's mapping.
+
+    The timed engine partitions the live cores into ``n_tenants``
+    contiguous balanced groups — core ``c`` belongs to tenant
+    ``floor(c * T / n_live)`` (``engine.step.scan_cell``).  Tests and
+    the oracle driver must use THIS function rather than restating the
+    formula, so the two layers cannot drift.
+    """
+    lengths = np.asarray(lengths)
+    n_live = max(int((lengths > 0).sum()), 1)
+    tid = (np.arange(len(lengths)) * int(n_tenants)) // n_live
+    return np.minimum(tid, n_tenants - 1).astype(np.int32)
+
+
+def compose_tenants(tenant_traces: List[Trace], *,
+                    addr_stride: int | None = None,
+                    shared_lines: int = 0,
+                    name: str = "") -> Trace:
+    """Stack per-tenant workload traces into one shared-switch trace.
+
+    Each input trace is one tenant (an independent host); their cores
+    are concatenated so the engine's balanced partition maps tenant
+    ``t`` exactly onto input ``t`` (every tenant must contribute the
+    same number of cores, all live).  PM addresses are relocated into
+    disjoint per-tenant windows of ``addr_stride`` lines — independent
+    address spaces — except the first ``shared_lines`` lines, which
+    stay common to every tenant (the shared-hot-set contention
+    variant).  DRAM addresses are host-private state and irrelevant to
+    the shared switch; they are left untouched.
+
+    Simulate the result with ``PCSConfig(n_tenants=len(tenant_traces),
+    n_cores=<total cores>)``.
+    """
+    if not tenant_traces:
+        raise ValueError("need at least one tenant trace")
+    cores = {t.ops.shape[0] for t in tenant_traces}
+    if len(cores) != 1:
+        raise ValueError(
+            "tenants must contribute equal core counts so the engine's "
+            f"balanced partition lands on tenant boundaries; got {cores}")
+    for t in tenant_traces:
+        if np.any(t.lengths <= 0):
+            raise ValueError(
+                f"every core must be live (non-empty stream); {t.name!r} "
+                "has an empty core, which would shift the partition")
+    T = len(tenant_traces)
+    pm_max = 0
+    for t in tenant_traces:
+        pm = (t.addrs < DRAM_BASE) & np.isin(
+            t.ops, (int(Op.PM_READ), int(Op.PERSIST)))
+        if np.any(pm):
+            pm_max = max(pm_max, int(t.addrs[pm].max()) + 1)
+    if addr_stride is None:
+        addr_stride = max(pm_max, shared_lines + 1)
+    elif addr_stride < pm_max:
+        # a narrower stride would relocate different tenants onto the
+        # same PM lines — silently breaking the promised disjointness
+        raise ValueError(
+            f"addr_stride={addr_stride} is smaller than the tenants' PM "
+            f"footprint ({pm_max} lines): per-tenant windows would overlap")
+    if not 0 <= shared_lines <= addr_stride:
+        raise ValueError("require 0 <= shared_lines <= addr_stride")
+    if shared_lines + T * (addr_stride - shared_lines) > PM_REGION_LINES:
+        raise ValueError("tenant address windows exceed the PM region; "
+                         "lower addr_stride or the tenant count")
+    C = cores.pop()
+    L = max(t.ops.shape[1] for t in tenant_traces)
+    ops = np.zeros((T * C, L), np.int32)
+    addrs = np.zeros((T * C, L), np.int32)
+    gaps = np.zeros((T * C, L), np.float32)
+    lengths = np.zeros((T * C,), np.int32)
+    for t, tr in enumerate(tenant_traces):
+        lo, l = t * C, tr.ops.shape[1]
+        ops[lo:lo + C, :l] = tr.ops
+        gaps[lo:lo + C, :l] = tr.gaps
+        lengths[lo:lo + C] = tr.lengths
+        a = tr.addrs.astype(np.int64)
+        private = ((a < DRAM_BASE) & (a >= shared_lines)
+                   & np.isin(tr.ops, (int(Op.PM_READ), int(Op.PERSIST))))
+        a = np.where(private, a + t * (addr_stride - shared_lines), a)
+        addrs[lo:lo + C, :l] = a[:, :l].astype(np.int32)
+    name = name or ("+".join(t.name for t in tenant_traces) or "tenants")
+    return Trace(ops=ops, addrs=addrs, gaps=gaps, lengths=lengths,
+                 name=f"{name}[T={T}]")
+
+
+def make_tenant_trace(workload: str, n_tenants: int,
+                      cores_per_tenant: int = 2, *,
+                      shared_lines: int = 0, seed: int = 0,
+                      persist_budget: int = DEFAULT_PERSIST_BUDGET,
+                      **kw) -> Trace:
+    """``n_tenants`` independent instances of one workload on a shared
+    switch: each tenant runs its own ``cores_per_tenant``-core copy
+    (distinct seed, so distinct streams) with ``persist_budget`` persists
+    *per tenant* — offered load scales with the tenant count, which is
+    the scale-out contention axis of the tenant sweep."""
+    parts = [make_trace(workload, n_cores=cores_per_tenant,
+                        seed=seed + 101 * t, persist_budget=persist_budget,
+                        **kw)
+             for t in range(n_tenants)]
+    return compose_tenants(parts, shared_lines=shared_lines,
+                           name=workload)
+
+
+# ===========================================================================
 # Fuzzed conformance traces (crash-differential harness)
 # ===========================================================================
 
@@ -517,7 +633,8 @@ def fuzz_crash_ns(slot: int, slot_gap_ns: float = FUZZ_SLOT_GAP_NS) -> float:
 def fuzz_trace(seed: int, n_cores: int = 3, n_slots: int = 60,
                n_addrs: int = 8, p_persist: float = 0.55,
                p_barrier: float = 0.05,
-               slot_gap_ns: float = FUZZ_SLOT_GAP_NS
+               slot_gap_ns: float = FUZZ_SLOT_GAP_NS,
+               n_tenants: int = 1
                ) -> Tuple[Trace, List[Tuple[int, int, int, int]]]:
     """Random multi-core persist/read/barrier interleaving for the
     crash-differential harness (beyond the 7 paper workloads).
@@ -525,32 +642,49 @@ def fuzz_trace(seed: int, n_cores: int = 3, n_slots: int = 60,
     Returns ``(trace, schedule)`` where ``schedule`` is the global op
     order ``[(slot, core, op, addr), ...]``: the sequence the untimed
     oracle replays, and provably the order the timed engine executes
-    (see ``FUZZ_SLOT_GAP_NS``).  Barriers occupy one slot per core
-    (consecutive, core order); persist/read slots go to a random core.
+    (see ``FUZZ_SLOT_GAP_NS``).  Barriers occupy one slot per arriving
+    core (consecutive, core order); persist/read slots go to a random
+    core.  With ``n_tenants > 1`` the cores split into contiguous
+    equal groups and a barrier event synchronizes ONE tenant's cores
+    (matching the engine's per-tenant barriers); every tenant's first
+    slots are round-robin ops so all cores are live and the engine's
+    balanced partition maps group ``t`` to tenant ``t`` exactly.
     """
     if n_slots > _FUZZ_MAX_SLOTS:
         raise ValueError(f"n_slots > {_FUZZ_MAX_SLOTS} breaks the "
                          "slot-order guarantee (clock drift)")
+    if n_cores % n_tenants != 0:
+        raise ValueError("n_cores must divide evenly into n_tenants")
+    cpt = n_cores // n_tenants     # cores per tenant
     rng = np.random.default_rng(seed)
     streams = [_CoreStream() for _ in range(n_cores)]
     nominal = [0] * n_cores        # last issue slot per core
     schedule: List[Tuple[int, int, int, int]] = []
     slot = 1
+    # liveness preamble: one op per core, so lengths > 0 everywhere and
+    # tenant_ids() is the identity partition on core groups
+    warmup = list(range(n_cores)) if n_tenants > 1 else []
     while slot <= n_slots:
-        if n_cores > 1 and slot + n_cores - 1 <= n_slots \
+        if warmup:
+            c = warmup.pop(0)
+        elif n_cores > 1 and slot + cpt - 1 <= n_slots \
                 and rng.random() < p_barrier:
-            # barrier: core c arrives at slot+c; release at the last
-            # arrival, so every core resumes from the release slot
-            for c in range(n_cores):
+            # barrier of ONE tenant: its cores arrive at consecutive
+            # slots; the last arrival releases them, so each resumes
+            # from its tenant's release slot
+            t = int(rng.integers(n_tenants))
+            for k, c in enumerate(range(t * cpt, (t + 1) * cpt)):
                 s = streams[c]
-                s.compute((slot + c - nominal[c]) * slot_gap_ns)
+                s.compute((slot + k - nominal[c]) * slot_gap_ns)
                 s.barrier()
-                schedule.append((slot + c, c, int(Op.BARRIER), 0))
-            release = slot + n_cores - 1
-            nominal = [release] * n_cores
-            slot += n_cores
+                schedule.append((slot + k, c, int(Op.BARRIER), 0))
+            release = slot + cpt - 1
+            for c in range(t * cpt, (t + 1) * cpt):
+                nominal[c] = release
+            slot += cpt
             continue
-        c = int(rng.integers(n_cores))
+        else:
+            c = int(rng.integers(n_cores))
         op = Op.PERSIST if rng.random() < p_persist else Op.PM_READ
         addr = int(rng.integers(n_addrs))
         streams[c].compute((slot - nominal[c]) * slot_gap_ns)
@@ -560,7 +694,8 @@ def fuzz_trace(seed: int, n_cores: int = 3, n_slots: int = 60,
         schedule.append((slot, c, int(op), addr))
         nominal[c] = slot
         slot += 1
-    return _pack(streams, f"fuzz{seed}"), schedule
+    groups = [range(t * cpt, (t + 1) * cpt) for t in range(n_tenants)]
+    return _pack(streams, f"fuzz{seed}", barrier_groups=groups), schedule
 
 
 WORKLOADS: Dict[str, Callable[..., Trace]] = {

@@ -25,33 +25,53 @@ from repro.core import Op, PCSConfig, Scheme
 from repro.core.semantics import EventKind, PersistentBuffer
 
 
-def oracle_replay(schedule, crash_slot, scheme, n_pbe):
+def _counts_from(stats, scheme, victim_stalls):
+    return dict(
+        persists=stats["persists"],
+        coalesces=stats["coalesces"],
+        read_hits=stats["read_hits"],
+        pm_reads=stats["read_hits"] + stats["read_misses"],
+        pm_writes=(stats["persists"] if scheme == Scheme.NOPB
+                   else stats["drains"]),
+        victim_drains=victim_stalls,
+    )
+
+
+def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
+                  n_tenants=1):
     """Replay schedule slots ``<= crash_slot``, then crash + recover.
 
     Acks are delivered promptly (all in-flight drains complete between
     slots, FIFO in emission order), mirroring the fuzzed traces' timing.
     Returns a dict with the durable per-address versions, the pre-crash
     event counts the engine must reproduce, and the read log.
+
+    ``core_tenant`` (from ``core.traces.tenant_ids``) maps each core to
+    the tenant the shared switch bills its requests to; the returned
+    ``tenant_counts`` row per tenant must match the engine's per-tenant
+    stats rows exactly.
     """
-    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=n_pbe))
+    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=n_pbe,
+                                    n_tenants=n_tenants))
     aver = collections.defaultdict(int)   # per-address issued versions
     pending = []
-    victim_stalls = 0
+    victim_stalls = collections.defaultdict(int)
     reads = []
-    for slot, _core, op, addr in schedule:
+    for slot, core, op, addr in schedule:
         if slot > crash_slot:
             break
         if op == int(Op.BARRIER):
             continue
+        tenant = int(core_tenant[core]) if core_tenant is not None else 0
         if op == int(Op.PERSIST):
             aver[addr] += 1
-            events = pb.persist(addr, (addr, aver[addr]))
-            victim_stalls += sum(
+            events = pb.persist(addr, (addr, aver[addr]), tenant=tenant)
+            victim_stalls[tenant] += sum(
                 1 for e in events if e.kind == EventKind.STALLED)
             pending += [(e.addr, e.version) for e in events
                         if e.kind == EventKind.DRAIN_SENT]
         else:
-            data, _ev = pb.read(addr)
+            data, _ev = pb.read(addr, tenant=tenant)
             reads.append((addr, data, aver[addr]))
         while pending:
             a, v = pending.pop(0)
@@ -59,15 +79,16 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe):
             pending += [(e.addr, e.version) for e in events
                         if e.kind == EventKind.DRAIN_SENT]
         pb.check_invariants()
-    counts = dict(
-        persists=pb.stats["persists"],
-        coalesces=pb.stats["coalesces"],
-        read_hits=pb.stats["read_hits"],
-        pm_reads=pb.stats["read_hits"] + pb.stats["read_misses"],
-        pm_writes=(pb.pm.writes_applied if scheme == Scheme.NOPB
-                   else pb.stats["drains"]),
-        victim_drains=victim_stalls,
-    )
+    counts = _counts_from(pb.stats, scheme, sum(victim_stalls.values()))
+    # NoPB applies exactly one PM write per persist; for the global row
+    # keep the device's own applied-writes counter as the source of truth
+    if scheme == Scheme.NOPB:
+        counts["pm_writes"] = pb.pm.writes_applied
+    zero = {k: 0 for k in pb.stats}
+    tenant_counts = [
+        _counts_from(pb.tenant_stats.get(t, zero), scheme,
+                     victim_stalls[t])
+        for t in range(n_tenants)]
     snapshot = {a: rec[0] for a, rec in pb.snapshot_durable().items()}
     pb.crash()
     pb.recover()
@@ -79,7 +100,7 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe):
     assert {a: rec[0] for a, rec in pb.pm.store.items()} == snapshot, \
         "snapshot_durable disagrees with crash+recover"
     return dict(durable=durable, counts=counts, reads=reads,
-                issued=dict(aver))
+                issued=dict(aver), tenant_counts=tenant_counts)
 
 
 def assert_cell_matches(res, oracle, n_addrs, label=""):
@@ -94,6 +115,18 @@ def assert_cell_matches(res, oracle, n_addrs, label=""):
                   read_hits=res.read_hits, pm_reads=res.pm_reads,
                   pm_writes=res.pm_writes, victim_drains=res.victim_drains)
     assert counts == oracle["counts"], (label, counts, oracle["counts"])
+
+    # per-tenant accounting over the shared switch must agree row by row
+    if res.n_tenants > 1:
+        t_rows = res.tenant_results()
+        assert len(t_rows) == len(oracle["tenant_counts"]), label
+        for t, (tr, want_t) in enumerate(
+                zip(t_rows, oracle["tenant_counts"])):
+            got_t = dict(persists=tr.persists, coalesces=tr.coalesces,
+                         read_hits=tr.read_hits, pm_reads=tr.pm_reads,
+                         pm_writes=tr.pm_writes,
+                         victim_drains=tr.victim_drains)
+            assert got_t == want_t, (label, "tenant", t, got_t, want_t)
 
     # prompt-ack regime: every executed persist was acked before the
     # crash, and (the paper's claim) every acked persist is durable

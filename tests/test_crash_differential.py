@@ -24,7 +24,8 @@ import os
 import pytest
 
 from _crash_driver import assert_cell_matches, oracle_replay
-from repro.core import PCSConfig, Scheme, fuzz_crash_ns, fuzz_trace
+from repro.core import (PCSConfig, Scheme, fuzz_crash_ns, fuzz_trace,
+                        tenant_ids)
 from repro.core.engine import compile_count, simulate, simulate_grid
 
 try:
@@ -68,6 +69,38 @@ def test_differential_matrix_one_compile():
             oracle = oracle_replay(sched, k, scheme, n_pbe)
             assert_cell_matches(cells[i][j], oracle, N_ADDRS,
                                 label=(seeds[i], scheme.name, k, n_pbe))
+
+
+def test_differential_matrix_multi_tenant_one_compile():
+    """T=2 tenants sharing the PB/PBC/PM: durable state AND per-tenant
+    accounting must match the tenant-tagged oracle at every crash point,
+    with the whole {trace x scheme x crash-point} matrix one program."""
+    n_tenants, n_cores = 2, 4
+    seeds = list(range(4))
+    traces, scheds = zip(*[
+        fuzz_trace(s, n_cores=n_cores, n_slots=N_SLOTS, n_addrs=N_ADDRS,
+                   n_tenants=n_tenants)
+        for s in seeds])
+    crash_slots = (0, 11, 23, 36, N_SLOTS)
+    plan = [(scheme, k, PBES[ki % len(PBES)])
+            for scheme in SCHEMES for ki, k in enumerate(crash_slots)]
+    configs = [PCSConfig(scheme=s, n_pbe=p, n_cores=n_cores,
+                         n_tenants=n_tenants).with_crash(fuzz_crash_ns(k))
+               for s, k, p in plan]
+    c0 = compile_count()
+    cells = simulate_grid(list(traces), configs, max_pbe=max(PBES),
+                          bucket=BUCKET, track_addrs=N_ADDRS)
+    assert compile_count() - c0 == 1, (
+        "the multi-tenant matrix must be one XLA program")
+    for i, (tr, sched) in enumerate(zip(traces, scheds)):
+        core_tenant = tenant_ids(tr.lengths, n_tenants)
+        for j, (scheme, k, n_pbe) in enumerate(plan):
+            oracle = oracle_replay(sched, k, scheme, n_pbe,
+                                   core_tenant=core_tenant,
+                                   n_tenants=n_tenants)
+            assert_cell_matches(cells[i][j], oracle, N_ADDRS,
+                                label=("T2", seeds[i], scheme.name, k,
+                                       n_pbe))
 
 
 def _one_cell(seed, scheme, crash_slot, n_pbe, p_persist=0.55):

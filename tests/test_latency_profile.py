@@ -1,0 +1,103 @@
+"""LatencyProfile path helpers and PCSConfig validation.
+
+The one-way path helpers compose the CPU->switch->...->PM chain; the
+engine lowers them into every persist/read/drain path, so their algebra
+(non-negativity, monotonicity in switch depth, and the split-path
+composition identity) is load-bearing for every figure.
+"""
+import math
+
+import pytest
+
+from repro.core import LatencyProfile, PCSConfig, Scheme
+
+DEPTHS = range(0, 9)
+PROFILES = [
+    LatencyProfile(),
+    LatencyProfile(link_ns=37.5, switch_pipe_ns=12.25, cpu_link_ns=80.0),
+    LatencyProfile(link_ns=0.0, switch_pipe_ns=0.0),   # degenerate chain
+]
+
+
+@pytest.mark.parametrize("lat", PROFILES)
+def test_path_helpers_non_negative(lat):
+    for n in DEPTHS:
+        assert lat.oneway_cpu_pm(n) >= 0.0, n
+        if n >= 1:
+            assert lat.oneway_sw1_pm(n) >= 0.0, n
+    assert lat.oneway_cpu_sw1() >= 0.0
+
+
+@pytest.mark.parametrize("lat", PROFILES[:2])
+def test_path_latency_monotone_in_switch_depth(lat):
+    """Each extra switch adds link + pipe time: strictly monotone for
+    positive segment latencies, on both the full and the drain path."""
+    full = [lat.oneway_cpu_pm(n) for n in DEPTHS if n >= 1]
+    drain = [lat.oneway_sw1_pm(n) for n in DEPTHS if n >= 1]
+    assert all(b > a for a, b in zip(full, full[1:]))
+    assert all(b > a for a, b in zip(drain, drain[1:]))
+
+
+@pytest.mark.parametrize("lat", PROFILES)
+def test_path_composition_identity(lat):
+    """CPU->sw1 plus sw1->PM must equal the end-to-end CPU->PM path for
+    every chain with at least one switch (the PB ack point splits the
+    persist path exactly there)."""
+    for n in range(1, 9):
+        whole = lat.oneway_cpu_pm(n)
+        split = lat.oneway_cpu_sw1() + lat.oneway_sw1_pm(n)
+        assert split == pytest.approx(whole, rel=1e-12, abs=1e-12), n
+
+
+# ---------------------------------------------------------------------------
+# PCSConfig validation
+# ---------------------------------------------------------------------------
+
+def test_pb_scheme_requires_a_switch():
+    """A persistent buffer with no switch for it to live in must be
+    rejected, not silently simulated with a free (0 ns) drain path."""
+    for scheme in (Scheme.PB, Scheme.PB_RF):
+        with pytest.raises(ValueError, match="n_switches"):
+            PCSConfig(scheme=scheme, n_switches=0)
+    # the volatile baseline legitimately supports direct-attached PM
+    cfg = PCSConfig(scheme=Scheme.NOPB, n_switches=0)
+    assert cfg.n_switches == 0
+
+
+def test_nopb_zero_switches_still_simulates():
+    import numpy as np
+
+    from repro.core import Op, Trace, simulate
+
+    ops = np.array([[int(Op.PERSIST), int(Op.PM_READ)] * 4], np.int32)
+    addrs = np.arange(8, dtype=np.int32)[None, :]
+    tr = Trace(ops=ops, addrs=addrs,
+               gaps=np.full((1, 8), 2000.0, np.float32),
+               lengths=np.array([8], np.int32), name="direct")
+    lat = LatencyProfile()
+    r = simulate(tr, PCSConfig(scheme=Scheme.NOPB, n_switches=0,
+                               latency=lat), bucket=64)
+    # uncongested direct-attach round trip: 2x cpu_link + device latency
+    assert r.persist_lat_ns == pytest.approx(
+        2 * lat.cpu_link_ns + lat.nvm_write_ns, abs=1.0)
+
+
+def test_tenant_count_validation():
+    with pytest.raises(ValueError, match="n_tenants"):
+        PCSConfig(n_tenants=0)
+    with pytest.raises(ValueError, match="n_tenants"):
+        PCSConfig(n_tenants=9, n_cores=8)
+    assert PCSConfig(n_tenants=8, n_cores=8).n_tenants == 8
+
+
+def test_empty_mean_is_nan_not_zero():
+    """A cell with no persists/reads has no mean latency: NaN, not a
+    0.0 that plots as infinitely fast (fig_recovery crash_at=0)."""
+    import numpy as np
+
+    from repro.core.engine.state import N_STATS, result_from_stats
+
+    r = result_from_stats(0.0, np.zeros((N_STATS,)), crash_at_ns=0.0)
+    assert math.isnan(r.persist_lat_ns)
+    assert math.isnan(r.read_lat_ns)
+    assert r.persists == 0 and r.pm_reads == 0
