@@ -1,12 +1,14 @@
 """CI compile-count regression guard over BENCH_engine.json.
 
 The engine's one-program property — a whole {trace x config x scheme x
-crash-point x tenant-count} grid lowering to a single XLA compilation —
-is a load-bearing perf invariant (DESIGN.md §3).  ``make ci`` runs this
-after ``bench-smoke``: if the shared grid, the recovery sweep or the
-tenant sweep ever compiles more than once (e.g. someone turns a traced
-scalar back into a static), the build fails loudly instead of the
-trajectory silently absorbing a multi-compile regression.
+crash-point x tenant-count x policy} grid lowering to a single XLA
+compilation — is a load-bearing perf invariant (DESIGN.md §3).
+``make ci`` runs this after ``bench-smoke``: if the shared grid, the
+recovery sweep, the tenant sweep or the mixed-policy QoS sweep ever
+compiles more than once (e.g. someone turns a traced scalar — or a
+lowered PBPolicy field — back into a static), the build fails loudly
+instead of the trajectory silently absorbing a multi-compile
+regression.
 
     PYTHONPATH=src python -m benchmarks.check_compiles [report.json]
 """
@@ -16,7 +18,7 @@ import json
 import sys
 
 GUARDED = ("shared_grid_compiles", "recovery_sweep_compiles",
-           "tenant_sweep_compiles")
+           "tenant_sweep_compiles", "qos_sweep_compiles")
 
 
 def check(report: dict) -> list:

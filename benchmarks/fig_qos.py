@@ -1,0 +1,110 @@
+"""QoS policy sweep: quota / victim / drain-scope policies vs fairness.
+
+A *noisy* tenant (write-hot radiosity at full budget) shares one
+persistent switch with three quiet tenants; without QoS the noisy
+tenant's allocations and drain-downs monopolize the shared PB, skewing
+per-tenant persist latency (the PR 3 fairness finding).  This figure
+sweeps the declarative :class:`~repro.core.params.PBPolicy` surface over
+both ack-at-switch schemes and reports the PR 3 fairness metrics per
+policy:
+
+  * mean persist latency and the max/min tenant-latency ratio;
+  * the worst tenant's mean PBC queueing wait;
+  * victim/recycle events (quota pressure made visible).
+
+The whole {scheme x policy} sweep — four policies, default included —
+is ONE ``simulate_grid`` call: every policy field lowers to a traced
+scalar or per-tenant vector, so mixing policies costs no extra XLA
+programs (the ``qos_sweep_compiles`` guard in ``make ci`` pins this).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import (AllocPolicy, DrainPolicy, PBPolicy, PCSConfig,
+                        Scheme, make_mixed_tenant_trace, simulate_grid)
+from repro.core.engine import compile_count
+from repro.core.engine.state import S_PBCQ_SUM, S_PERSIST_CNT
+
+from benchmarks import _shared
+from benchmarks.fig_tenants import _fairness
+
+N_TENANTS = 4
+CORES_PER_TENANT = 2
+SCHEMES = (("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF))
+
+# The policy axis: default, even quotas, even quotas + weighted victim
+# selection, and tenant-scoped drain-down on top (>= 3 non-default
+# policies mixed with the default, per the ISSUE 4 acceptance grid).
+POLICIES = (
+    ("default", PBPolicy()),
+    ("quota", PBPolicy(alloc=AllocPolicy(tenant_quota=(4, 4, 4, 4)))),
+    ("quota_weighted", PBPolicy(alloc=AllocPolicy(
+        victim="weighted", tenant_quota=(4, 4, 4, 4)))),
+    ("tenant_drain", PBPolicy(
+        drain=DrainPolicy(per_tenant=True),
+        alloc=AllocPolicy(victim="weighted", tenant_quota=(4, 4, 4, 4)))),
+)
+
+# telemetry of the QoS sweep for BENCH_engine.json (set by run())
+sweep_metrics: dict = {}
+
+
+def _noisy_mix(noisy: str, quiet: str, name: str):
+    budget = max(_shared.BUDGET // 4, 100)
+    specs = [(noisy, budget)] + \
+            [(quiet, max(budget // 4, 25))] * (N_TENANTS - 1)
+    return make_mixed_tenant_trace(specs, CORES_PER_TENANT, name=name)
+
+
+# two noisy-neighbour workload mixes — the sweep is a literal
+# {workload x scheme x policy} grid in one compiled program
+MIXES = (("radio", "radiosity", "radiosity"),
+         ("ray", "radiosity", "raytrace"))
+
+
+def run() -> list:
+    traces = [_noisy_mix(noisy, quiet, f"qos_{mkey}")
+              for mkey, noisy, quiet in MIXES]
+    configs, keys = [], []
+    for skey, scheme in SCHEMES:
+        for pkey, pol in POLICIES:
+            configs.append(PCSConfig(
+                scheme=scheme, n_tenants=N_TENANTS,
+                n_cores=N_TENANTS * CORES_PER_TENANT, policy=pol))
+            keys.append((skey, pkey))
+    c0, t0 = compile_count(), time.time()
+    cells = simulate_grid(traces, configs, bucket=_shared.bucket())
+    sweep_metrics.update(
+        qos_sweep_wall_s=round(time.time() - t0, 3),
+        qos_sweep_compiles=compile_count() - c0,
+        qos_sweep_cells=len(traces) * len(configs),
+    )
+    rows = []
+    for (mkey, _, _), row in zip(MIXES, cells):
+        for (skey, pkey), r in zip(keys, row):
+            if math.isnan(r.persist_lat_ns):
+                continue
+            rows.append((f"qos_persist_{mkey}_{skey}_{pkey}",
+                         round(r.persist_lat_ns, 1), "ns"))
+            rows.append((f"qos_fair_{mkey}_{skey}_{pkey}",
+                         round(_fairness(r), 3), "max_min_tenant_ratio"))
+            rows.append((f"qos_victims_{mkey}_{skey}_{pkey}",
+                         r.victim_drains, "victim_recycle_events"))
+            if r.tenant_stats is not None:
+                q = r.tenant_stats[:, S_PBCQ_SUM]
+                n = r.tenant_stats[:, S_PERSIST_CNT]
+                worst = max(float(qi / ni)
+                            for qi, ni in zip(q, n) if ni > 0)
+                rows.append((f"qos_pbcq_{mkey}_{skey}_{pkey}",
+                             round(worst, 1), "worst_tenant_pbcq_ns"))
+    return rows
+
+
+def main() -> None:
+    _shared.emit(run())
+
+
+if __name__ == "__main__":
+    main()

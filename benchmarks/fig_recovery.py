@@ -5,8 +5,14 @@ workload's NoPB runtime and record (a) the persisted fraction — how much
 of the issued work survives crash + recovery (Section V-D4) — and
 (b) the modeled recovery latency of the drain-all pass over the
 surviving Dirty/Drain PBEs.  The whole sweep — every workload x scheme x
-crash point — is ONE ``simulate_grid`` call: the crash instant is a
-traced config scalar like every latency.
+crash point, plus a multi-tenant group — is ONE ``simulate_grid`` call:
+the crash instant is a traced config scalar like every latency.
+
+The multi-tenant group adds the per-tenant recovery attribution
+(ROADMAP crash/recovery fairness): for a T=2 shared switch, each
+tenant's durable fraction and its share of the surviving re-drained
+PBEs (``SimResult.tenant_results()`` / ``tenant_recovery``) — recovery
+cost was previously reported only globally.
 
 The ack-at-switch schemes dominate the volatile baseline here: at any
 crash instant more persists have completed (acks come back from the
@@ -16,7 +22,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import PCSConfig, Scheme, simulate_grid
+from repro.core import PCSConfig, Scheme, make_tenant_trace, simulate_grid
 from repro.core.engine import compile_count
 
 from benchmarks import _shared
@@ -38,6 +44,11 @@ SCHEMES = (("nopb", Scheme.NOPB), ("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF))
 sweep_metrics: dict = {}
 
 
+TENANT_WORKLOAD = "radiosity"
+TENANTS = 2
+TENANT_CORES = 2
+
+
 def run() -> list:
     names = SMOKE_NAMES if _shared.SMOKE else NAMES
     traces = [trace(n) for n in names]
@@ -53,6 +64,24 @@ def run() -> list:
                 configs.append(
                     PCSConfig(scheme=scheme).with_crash(f * ends[name]))
                 keys.append((name, key, f))
+    # Multi-tenant group (per-tenant recovery attribution): a T=2
+    # shared-switch trace crashed at the same fractions of ITS OWN NoPB
+    # runtime (anchored outside the counted sweep so the sweep stays one
+    # compiled program), for the ack-at-switch schemes.
+    t_budget = max(_shared.BUDGET // 4, 100)
+    t_trace = make_tenant_trace(TENANT_WORKLOAD, TENANTS, TENANT_CORES,
+                                persist_budget=t_budget)
+    t_end = simulate_grid(
+        [t_trace], [PCSConfig(scheme=Scheme.NOPB, n_tenants=TENANTS,
+                              n_cores=TENANTS * TENANT_CORES)],
+        bucket=_shared.bucket())[0][0].runtime_ns
+    traces.append(t_trace)
+    for key, scheme in SCHEMES[1:]:        # pb, pb_rf
+        for f in FRACS:
+            configs.append(PCSConfig(
+                scheme=scheme, n_tenants=TENANTS,
+                n_cores=TENANTS * TENANT_CORES).with_crash(f * t_end))
+            keys.append(("tenants", key, f))
     c0, t0 = compile_count(), time.time()
     cells = simulate_grid(traces, configs, bucket=_shared.bucket())
     sweep_metrics.update(
@@ -75,6 +104,20 @@ def run() -> list:
                          round(frac, 4), "durable_fraction_of_run"))
             rows.append((f"recovery_lat_{key}_{name}_f{int(100 * f)}",
                          round(r.recovery_ns, 1), "recovery_ns"))
+    # per-tenant recovery attribution (the multi-tenant trace is last)
+    for (anchor, key, f), r in zip(keys, cells[len(names)]):
+        if anchor != "tenants":
+            continue
+        for t, tr_t in enumerate(r.tenant_results()):
+            # durable fraction of the tenant's whole offered run (same
+            # convention as the global rows: budget is per tenant)
+            rows.append((
+                f"recovery_tenant_{key}_T{TENANTS}_f{int(100 * f)}_t{t}",
+                round(tr_t.durable_persists / max(t_budget, 1), 4),
+                "tenant_durable_fraction_of_run"))
+            rows.append((
+                f"recovery_tenant_surv_{key}_T{TENANTS}_f{int(100 * f)}_t{t}",
+                tr_t.recovery_entries, "tenant_surviving_pbes"))
     return rows
 
 

@@ -10,18 +10,21 @@ Coupled layers (DESIGN.md §2):
 """
 from repro.core.engine import (SimResult, simulate, simulate_grid,
                                simulate_sweep)
-from repro.core.params import (LatencyProfile, Op, PBEState, PCSConfig,
-                               Scheme)
+from repro.core.params import (AllocPolicy, DrainPolicy, LatencyProfile,
+                               Op, PBEState, PBPolicy, PCSConfig, Scheme)
 from repro.core.semantics import (Event, EventKind, PersistentBuffer,
                                   PersistentMemory)
 from repro.core.traces import (Trace, WORKLOADS, compose_tenants,
-                               fuzz_crash_ns, fuzz_trace, make_tenant_trace,
+                               fuzz_crash_ns, fuzz_trace,
+                               make_mixed_tenant_trace, make_tenant_trace,
                                make_trace, tenant_ids)
 
 __all__ = [
-    "LatencyProfile", "Op", "PBEState", "PCSConfig", "Scheme",
+    "AllocPolicy", "DrainPolicy", "LatencyProfile", "Op", "PBEState",
+    "PBPolicy", "PCSConfig", "Scheme",
     "Event", "EventKind", "PersistentBuffer", "PersistentMemory",
     "SimResult", "simulate", "simulate_grid", "simulate_sweep",
     "Trace", "WORKLOADS", "compose_tenants", "fuzz_crash_ns", "fuzz_trace",
-    "make_tenant_trace", "make_trace", "tenant_ids",
+    "make_mixed_tenant_trace", "make_tenant_trace", "make_trace",
+    "tenant_ids",
 ]

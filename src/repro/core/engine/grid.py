@@ -59,14 +59,18 @@ def _stack_traces(traces: Sequence[Trace], bucket: int):
     return ops, addrs, gaps, lengths, n_steps
 
 
-def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None):
+def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None,
+                   n_tenants_max: int):
     max_pbe = max_pbe or max(c.n_pbe for c in configs)
     if any(c.n_pbe > max_pbe for c in configs):
         raise ValueError("n_pbe exceeds max_pbe")
     banks = {c.pm_banks for c in configs}
     if len(banks) != 1:
         raise ValueError("grid configs must share pm_banks (array shape)")
-    rows = [scalars_from_config(c) for c in configs]
+    # policy lowering pads its per-tenant vectors to the grid-wide
+    # n_tenants_max, so mixed tenant counts / policies stack into one
+    # (K,) or (K, T) array per scalar and share the program
+    rows = [scalars_from_config(c, n_tenants_max) for c in configs]
     sc = {k: np.asarray([r[k] for r in rows], np.float64) for k in rows[0]}
     schemes = np.asarray([int(c.scheme) for c in configs], np.int32)
     return sc, schemes, max_pbe, banks.pop()
@@ -118,10 +122,11 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
     if not traces or not configs:
         return [[] for _ in traces]
     ops, addrs, gaps, lengths, n_steps = _stack_traces(traces, bucket)
-    sc_np, schemes, max_pbe, pm_banks = _stack_configs(configs, max_pbe)
     # static per-tenant stats row count; every config's rows beyond its
     # own n_tenants stay zero, so mixed tenant counts share one program
     n_tenants_max = max(c.n_tenants for c in configs)
+    sc_np, schemes, max_pbe, pm_banks = _stack_configs(configs, max_pbe,
+                                                       n_tenants_max)
     single = len(traces) == 1 and len(configs) == 1
     with enable_x64():
         if single:
@@ -144,7 +149,7 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
                 n_track=track_addrs, n_tenants_max=n_tenants_max)
             out = tuple(np.asarray(o) for o in out)
-    runtimes, stats, durable_ver, n_recov, recov_ns = out
+    runtimes, stats, durable_ver, n_recov, recov_ns, recov_t = out
     return [[result_from_stats(
                 float(runtimes[i, j]), stats[i, j],
                 crash_at_ns=configs[j].crash_at_ns,
@@ -152,7 +157,8 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 recovery_ns=float(recov_ns[i, j]),
                 durable_ver=(durable_ver[i, j][:track_addrs].copy()
                              if track_addrs > 0 else None),
-                n_tenants=configs[j].n_tenants)
+                n_tenants=configs[j].n_tenants,
+                tenant_recovery=recov_t[i, j])
              for j in range(len(configs))] for i in range(len(traces))]
 
 

@@ -160,9 +160,14 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     # (write order, Section IV-A): the new version gets its own entry.
     # The switch->PM path is FIFO per bank, so drains of the same line
     # arrive at PM in version order without waiting for the previous ack.
+    # Allocation is policy-driven (AllocPolicy lowering): per-tenant
+    # occupancy feeds the quota gate and the weighted victim selection.
+    occ = policy.tenant_occupancy(state1, ctx.slot_active, st.owner,
+                                  st.stats.shape[0])
     (any_empty, empty_idx, any_dirty, victim_idx,
-     earliest_idx) = policy.select_slot(state1, ctx.slot_active, st.lru,
-                                        st.dd)
+     earliest_idx) = policy.select_slot(sc, state1, ctx.slot_active,
+                                        st.lru, st.dd, st.owner,
+                                        ctx.tenant, occ)
 
     # victim drain (only used when no Empty entry exists)
     victim_bank = channels.bank_of(st.tag[victim_idx], ctx.n_banks)
@@ -201,10 +206,13 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     lru3 = st.lru.at[wslot].set(t_written)
     dd3 = dd2
     ver3 = st.ver.at[wslot].set(v_new)
+    # the writer takes ownership (a cross-tenant coalesce included,
+    # mirroring the oracle's PBEntry.tenant update)
+    owner3 = st.owner.at[wslot].set(ctx.tenant.astype(jnp.int32))
 
     state4, dd4, pm_busy2, policy_writes = drain_policy(
         bank=bank, wslot=wslot, t_written=t_written, state3=state3,
-        tag3=tag3, lru3=lru3, dd3=dd3, pm_busy1=pm_busy1)
+        tag3=tag3, lru3=lru3, dd3=dd3, pm_busy1=pm_busy1, owner3=owner3)
 
     # drains the policy just scheduled (Dirty -> Drain) whose PM ack
     # beats the crash make their versions durable at the device
@@ -235,6 +243,7 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     dd5 = jnp.where(commit, dd4,
                     jnp.where(vic_emit & vslot, victim_dd, st.dd))
     ver5 = jnp.where(commit, ver3, st.ver)
+    owner5 = jnp.where(commit, owner3, st.owner)
     aver3 = jnp.where(commit, aver2, st.aver)
     pm_ver3 = jnp.where(commit, pm_ver2, pm_ver1)
     pm_busy3 = jnp.where(commit, pm_busy2, pm_busy1)
@@ -264,8 +273,8 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     stats = stats.at[ctx.tenant, S_DURABLE].add(commit.astype(jnp.float64))
     return st._replace(clock=st.clock.at[ctx.c].set(ack), tag=tag5,
                        state=state5, lru=lru5, dd=dd5, ver=ver5,
-                       aver=aver3, pm_ver=pm_ver3, pm_busy=pm_busy3,
-                       pbc_busy=pbc_free, stats=stats)
+                       owner=owner5, aver=aver3, pm_ver=pm_ver3,
+                       pm_busy=pm_busy3, pbc_busy=pbc_free, stats=stats)
 
 
 def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
@@ -312,7 +321,7 @@ def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
             drain_policy=lambda **kw: policy.drain_threshold_preset(
                 sc, ctx.n_banks, ctx.slot_active, kw["t_written"],
                 kw["state3"], kw["tag3"], kw["lru3"], kw["dd3"],
-                kw["pm_busy1"]))
+                kw["pm_busy1"], owner=kw["owner3"], tenant=ctx.tenant))
 
     return jax.lax.switch(ctx.scheme, [nopb, pb, pb_rf], st)
 
@@ -345,14 +354,18 @@ def recovery_snapshot(st: MachineState, scheme, sc, slot_active,
     free; PB/PB_RF drain-all every surviving Dirty/Drain entry
     (:func:`policy.surviving_entries`), merging the survivors' versions
     into the durable-version vector.  Returns
-    ``(durable_ver (A,) i32, n_recovered f64, recovery_ns f64)``.
+    ``(durable_ver (A,) i32, n_recovered f64, recovery_ns f64,
+    recovered_per_tenant (T,) f64)`` — the last attributes each
+    surviving entry to its owning tenant (recovery fairness, ROADMAP).
     """
     crash = sc["crash_at"]
     A = st.pm_ver.shape[0]
+    T = st.stats.shape[0]
     zero = jnp.asarray(0.0, jnp.float64)
+    zero_t = jnp.zeros((T,), jnp.float64)
 
     def nopb(_):
-        return st.pm_ver, zero, zero
+        return st.pm_ver, zero, zero, zero_t
 
     def pb(_):
         surviving = policy.surviving_entries(st.state, st.dd, slot_active,
@@ -361,6 +374,8 @@ def recovery_snapshot(st: MachineState, scheme, sc, slot_active,
         dv = st.pm_ver.at[jnp.clip(st.tag, 0, A - 1)].max(
             jnp.where(in_range, st.ver, 0))
         n, cost = policy.recovery_drain_cost(sc, n_banks, st.tag, surviving)
-        return dv, n, cost
+        per_t = zero_t.at[jnp.clip(st.owner, 0, T - 1)].add(
+            surviving.astype(jnp.float64))
+        return dv, n, cost, per_t
 
     return jax.lax.switch(jnp.minimum(scheme, 1), [nopb, pb], None)

@@ -62,20 +62,50 @@ def pb_lookup(tag, state, slot_active, addr):
     return has, idx
 
 
-def select_slot(state, slot_active, lru, dd):
-    """Allocation / victim selection over the PBE array.
+def tenant_occupancy(state, slot_active, owner, n_tenants_max: int):
+    """Per-tenant live-PBE counts: ``occ[t]`` = non-Empty entries owned
+    by tenant ``t`` (the quota / weighted-victim accounting base)."""
+    live = (slot_active & (state != EMPTY)).astype(jnp.float64)
+    return jnp.zeros((n_tenants_max,), jnp.float64).at[
+        jnp.clip(owner, 0, n_tenants_max - 1)].add(live)
+
+
+def select_slot(sc, state, slot_active, lru, dd, owner, tenant, occ):
+    """Allocation / victim selection over the PBE array (AllocPolicy).
 
     Preference order of the persist handler: an Empty slot (LRU-oldest),
     else the LRU Dirty entry (victim drain), else the Drain entry whose
-    PM ack lands earliest (pure wait).
+    PM ack lands earliest (pure wait) — refined by the traced
+    :class:`~repro.core.params.AllocPolicy` lowering:
+
+      * **quota** — a tenant at/over its quota (``occ[tenant] >=
+        sc["quota"][tenant]``) may not take an Empty slot; its victim /
+        wait candidates are restricted to its *own* entries, so it
+        recycles its own footprint instead of growing it;
+      * **weighted victim** — when no Empty slot exists and
+        ``sc["victim_weighted"]`` is set, the victim search prefers
+        Dirty entries of tenants at/over their share
+        (``occ >= sc["share"]``), falling back to the global LRU Dirty.
+
+    With the default policy (quota INF, weighted 0) every mask reduces
+    to the pre-policy form, keeping results bit-identical.
     """
-    empty_mask = slot_active & (state == EMPTY)
+    T = occ.shape[0]
+    over_quota = occ[tenant] >= sc["quota"][tenant]
+    own = owner == tenant
+    empty_mask = slot_active & (state == EMPTY) & ~over_quota
     any_empty = jnp.any(empty_mask)
     empty_idx = jnp.argmin(jnp.where(empty_mask, lru, INF))
-    dirty_mask = slot_active & (state == DIRTY)
+    dirty_all = slot_active & (state == DIRTY)
+    over_share = occ >= sc["share"]                       # (T,) bool
+    hot = dirty_all & over_share[jnp.clip(owner, 0, T - 1)]
+    use_hot = (sc["victim_weighted"] > 0.0) & jnp.any(hot)
+    dirty_mask = jnp.where(over_quota, dirty_all & own,
+                           jnp.where(use_hot, hot, dirty_all))
     any_dirty = jnp.any(dirty_mask)
     victim_idx = jnp.argmin(jnp.where(dirty_mask, lru, INF))
-    drain_mask = slot_active & (state == DRAIN)
+    drain_all = slot_active & (state == DRAIN)
+    drain_mask = jnp.where(over_quota, drain_all & own, drain_all)
     earliest_idx = jnp.argmin(jnp.where(drain_mask, dd, INF))
     return any_empty, empty_idx, any_dirty, victim_idx, earliest_idx
 
@@ -133,26 +163,42 @@ def recovery_drain_cost(sc, n_banks, tag, surviving):
 
 
 def drain_threshold_preset(sc, n_banks, slot_active, t_written,
-                           state3, tag3, lru3, dd3, pm_busy1):
+                           state3, tag3, lru3, dd3, pm_busy1, *,
+                           owner, tenant):
     """PB_RF: threshold/preset drain-down over LRU Dirty entries.
 
     Traced twin of :func:`rf_drain_count` plus the per-bank burst
     serialization: drains sharing a PM bank are issued back-to-back at
     the bank's write occupancy, overlapping across banks.
+
+    Under a tenant-scoped :class:`~repro.core.params.DrainPolicy`
+    (``sc["drain_scope"]`` set) the drain-down sees only the issuing
+    tenant's Dirty entries and compares against *its* lowered counts
+    (``sc["t_threshold"]/["t_preset"]``, anchored on its quota or fair
+    share) — a noisy tenant's drain-down can no longer evict a quiet
+    tenant's Dirty entries.  The keep-one-free low-water heuristic keeps
+    watching the *global* Empty pool (it protects the shared PI front)
+    but likewise drains only in-scope entries.
     Returns (state4, dd4, pm_busy2, policy_writes).
     """
     B = n_banks
-    dirty_cnt = jnp.sum((state3 == DIRTY) & slot_active)
+    scoped = sc["drain_scope"] > 0.0
+    in_scope = jnp.where(scoped, owner == tenant, True)
+    dirty_mask = (state3 == DIRTY) & slot_active & in_scope
+    dirty_cnt = jnp.sum(dirty_mask)
     empty_cnt = jnp.sum((state3 == EMPTY) & slot_active)
-    do_drain = dirty_cnt >= sc["threshold_count"]
-    k_thresh = jnp.where(do_drain, dirty_cnt - sc["preset_count"], 0.0)
-    k_low = jnp.where(empty_cnt <= float(RF_EMPTY_SLACK),
-                      jnp.minimum(float(RF_LOW_WATER_DRAINS), dirty_cnt),
+    thr = jnp.where(scoped, sc["t_threshold"][tenant],
+                    sc["threshold_count"])
+    pre = jnp.where(scoped, sc["t_preset"][tenant], sc["preset_count"])
+    do_drain = dirty_cnt >= thr
+    k_thresh = jnp.where(do_drain, dirty_cnt - pre, 0.0)
+    k_low = jnp.where(empty_cnt <= sc["empty_slack"],
+                      jnp.minimum(sc["low_water"], dirty_cnt),
                       0.0)
     k = jnp.maximum(k_thresh, k_low)
-    key = jnp.where((state3 == DIRTY) & slot_active, lru3, INF)
+    key = jnp.where(dirty_mask, lru3, INF)
     rank = jnp.argsort(jnp.argsort(key)).astype(jnp.float64)
-    to_drain = (rank < k) & (state3 == DIRTY) & slot_active
+    to_drain = (rank < k) & dirty_mask
     banks = tag3 % B
     # rank among drained entries sharing a bank (serializes the burst per
     # PM bank, overlapping across banks)

@@ -25,7 +25,7 @@ from typing import Dict, NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.params import PBEState, PCSConfig
+from repro.core.params import PBEState, PCSConfig, tenant_drain_counts
 
 INF = 1e30
 
@@ -68,6 +68,10 @@ class MachineState(NamedTuple):
     lru: jnp.ndarray       # (P,)  f64  LRU stamps
     dd: jnp.ndarray        # (P,)  f64  in-flight drain-ack times
     ver: jnp.ndarray       # (P,)  i32  per-entry persist version
+    owner: jnp.ndarray     # (P,)  i32  tenant that last wrote each entry
+                           #            (quota occupancy, weighted victim
+                           #            selection, tenant-scoped drains,
+                           #            per-tenant recovery attribution)
     aver: jnp.ndarray      # (A,)  i32  per-address issued-version counter
     pm_ver: jnp.ndarray    # (A,)  i32  newest version durable at PM
     pm_busy: jnp.ndarray   # (B,)  f64  PM bank next-free times
@@ -89,6 +93,7 @@ def init_state(n_cores: int, max_pbe: int, pm_banks: int,
         lru=jnp.zeros((max_pbe,), jnp.float64),
         dd=jnp.zeros((max_pbe,), jnp.float64),
         ver=jnp.zeros((max_pbe,), jnp.int32),
+        owner=jnp.zeros((max_pbe,), jnp.int32),
         aver=jnp.zeros((A,), jnp.int32),
         pm_ver=jnp.zeros((A,), jnp.int32),
         pm_busy=jnp.zeros((pm_banks,), jnp.float64),
@@ -139,6 +144,10 @@ class SimResult:
     durable_ver: "np.ndarray | None" = None  # (track_addrs,) i32 or None
     n_tenants: int = 1
     tenant_stats: "np.ndarray | None" = None  # (n_tenants, N_STATS) f64
+    # Surviving Dirty/Drain PBEs per owning tenant at the crash instant
+    # (row sum == recovery_entries); recovery latency stays global (the
+    # drain-all pass is one shared burst over the whole PB).
+    tenant_recovery: "np.ndarray | None" = None  # (n_tenants,) i64 or None
 
     @property
     def read_hit_rate(self) -> float:
@@ -156,15 +165,21 @@ class SimResult:
     def tenant_results(self) -> "list[SimResult]":
         """Per-tenant view: one SimResult built from each stats row.
 
-        ``runtime_ns`` and ``crash_at_ns`` are machine-global and shared;
-        the recovery snapshot (a property of the shared PB) is reported
-        only on the global result, so per-tenant recovery fields are 0.
+        ``runtime_ns`` and ``crash_at_ns`` are machine-global and shared.
+        ``recovery_entries`` is attributed to the tenant *owning* each
+        surviving PBE (``tenant_recovery``); the drain-all recovery
+        latency stays global (one shared burst over the whole PB), so
+        per-tenant ``recovery_ns`` is 0.  Each row's durable fraction is
+        ``persisted_fraction`` as usual (per-tenant S_DURABLE counts).
         """
         if self.tenant_stats is None:
             return [self]
-        return [result_from_stats(self.runtime_ns, row,
-                                  crash_at_ns=self.crash_at_ns)
-                for row in np.asarray(self.tenant_stats)]
+        recov = self.tenant_recovery
+        return [result_from_stats(
+                    self.runtime_ns, row, crash_at_ns=self.crash_at_ns,
+                    recovery_entries=(int(recov[t]) if recov is not None
+                                      else 0))
+                for t, row in enumerate(np.asarray(self.tenant_stats))]
 
 
 def _mean(total: float, count: float) -> float:
@@ -178,7 +193,9 @@ def result_from_stats(runtime: float, stats: np.ndarray, *,
                       recovery_entries: int = 0,
                       recovery_ns: float = 0.0,
                       durable_ver: "np.ndarray | None" = None,
-                      n_tenants: int = 1) -> SimResult:
+                      n_tenants: int = 1,
+                      tenant_recovery: "np.ndarray | None" = None
+                      ) -> SimResult:
     """Build a SimResult from a stats vector or per-tenant stats matrix.
 
     ``stats`` is ``(N_STATS,)`` or ``(T, N_STATS)`` with ``T >=
@@ -210,17 +227,51 @@ def result_from_stats(runtime: float, stats: np.ndarray, *,
         durable_ver=durable_ver,
         n_tenants=n_tenants,
         tenant_stats=(stats[:n_tenants].copy() if n_tenants > 1 else None),
+        tenant_recovery=(
+            np.asarray(tenant_recovery, np.int64)[:n_tenants].copy()
+            if n_tenants > 1 and tenant_recovery is not None else None),
     )
 
 
-def scalars_from_config(cfg: PCSConfig) -> Dict[str, float]:
-    """Lower one config to the dict of traced latency/policy scalars."""
+def scalars_from_config(cfg: PCSConfig,
+                        n_tenants_max: int | None = None) -> Dict[str, "float | np.ndarray"]:
+    """Lower one config to the dict of traced latency/policy scalars.
+
+    The :class:`~repro.core.params.PBPolicy` on the config lowers here
+    exactly like ``crash_at_ns`` / ``n_tenants`` do — to traced scalars
+    (victim mode, drain scope, keep-one-free knobs) and per-tenant
+    traced *vectors* of static length ``n_tenants_max`` (quotas, shares,
+    tenant-scoped drain counts) — so a mixed {workload x scheme x
+    policy} grid stays one XLA program.  Rows past the config's own
+    tenant count are padding: quota/share are INF (never over) and the
+    drain counts fall back to the global values (never selected).
+    """
     lat = cfg.latency
+    pol = cfg.policy
+    T = max(n_tenants_max or cfg.n_tenants, 1)
+    quota = np.full((T,), INF, np.float64)
+    share = np.full((T,), INF, np.float64)
+    t_thr = np.full((T,), float(cfg.threshold_count), np.float64)
+    t_pre = np.full((T,), float(cfg.preset_count), np.float64)
+    for t, (thr, pre) in enumerate(
+            tenant_drain_counts(pol, cfg.n_pbe, cfg.n_tenants)):
+        quota[t] = min(pol.alloc.quota_of(t), INF)
+        share[t] = min(pol.alloc.share_of(t, cfg.n_pbe, cfg.n_tenants), INF)
+        t_thr[t], t_pre[t] = float(thr), float(pre)
     return dict(
         n_pbe=float(cfg.n_pbe),
         n_tenants=float(cfg.n_tenants),
         threshold_count=float(cfg.threshold_count),
         preset_count=float(cfg.preset_count),
+        # declarative PBPolicy lowering (scalars + per-tenant vectors)
+        quota=quota,
+        share=share,
+        t_threshold=t_thr,
+        t_preset=t_pre,
+        drain_scope=1.0 if pol.drain.per_tenant else 0.0,
+        victim_weighted=1.0 if pol.alloc.victim == "weighted" else 0.0,
+        low_water=float(pol.drain.low_water_drains),
+        empty_slack=float(pol.drain.empty_slack),
         tag_ns=lat.pb_tag_ns_for(cfg.n_pbe),
         data_ns=lat.pb_data_ns_for(cfg.n_pbe),
         pbc_proc_ns=lat.pbc_proc_ns,

@@ -47,8 +47,9 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
               n_tenants_max: int = 1, return_state: bool = False):
     """Simulate one (trace, config) cell.
 
-    Returns ``(runtime, stats, durable_ver, n_recovered, recovery_ns)``,
-    plus the final :class:`MachineState` when ``return_state`` is set
+    Returns ``(runtime, stats, durable_ver, n_recovered, recovery_ns,
+    recovered_per_tenant)``, plus the final :class:`MachineState` when
+    ``return_state`` is set
     (used by the padding-invariant tests).  ``scheme`` and every entry
     of ``sc`` are traced scalars; only array shapes (core count C,
     ``max_pbe``, ``pm_banks``, ``n_steps``, ``n_track``,
@@ -131,7 +132,7 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
     runtime = jnp.max(jnp.where(final.clock < INF * 0.5,
                                 jnp.minimum(final.clock, sc["crash_at"]),
                                 0.0))
-    durable_ver, n_recov, recov_ns = recovery_snapshot(
+    durable_ver, n_recov, recov_ns, recov_t = recovery_snapshot(
         final, scheme, sc, slot_active, pm_banks, n_track)
-    out = (runtime, final.stats, durable_ver, n_recov, recov_ns)
+    out = (runtime, final.stats, durable_ver, n_recov, recov_ns, recov_t)
     return out + (final,) if return_state else out

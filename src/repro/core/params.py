@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
+from typing import List, Optional, Tuple
 
 
 class Scheme(enum.IntEnum):
@@ -41,13 +42,18 @@ DEFAULT_DRAIN_PRESET = 0.6     # drain down to this fill fraction
 SCHEME_NAMES = {s: s.name.lower() for s in Scheme}
 
 
-def threshold_count(n_pbe: int,
+def threshold_count(n_pbe: "int | float",
                     threshold: float = DEFAULT_DRAIN_THRESHOLD) -> int:
-    """Entry count at which the PB_RF drain-down engages."""
+    """Entry count at which the PB_RF drain-down engages.
+
+    ``n_pbe`` may be fractional: a tenant-scoped policy anchors the
+    fraction on the tenant's quota or its fair share ``n_pbe / T``.
+    """
     return max(1, int(math.ceil(threshold * n_pbe)))
 
 
-def preset_count(n_pbe: int, preset: float = DEFAULT_DRAIN_PRESET) -> int:
+def preset_count(n_pbe: "int | float",
+                 preset: float = DEFAULT_DRAIN_PRESET) -> int:
     """Entry count the PB_RF drain-down drains down to."""
     return max(0, int(math.floor(preset * n_pbe)))
 
@@ -60,18 +66,152 @@ RF_EMPTY_SLACK = 1
 RF_LOW_WATER_DRAINS = 2
 
 
-def rf_drain_count(dirty: int, empty: int, threshold: int, preset: int) -> int:
+def rf_drain_count(dirty: int, empty: int, threshold: int, preset: int,
+                   low_water: int = RF_LOW_WATER_DRAINS,
+                   empty_slack: int = RF_EMPTY_SLACK) -> int:
     """How many LRU Dirty entries the PB_RF policy drains right now.
 
     Pure-scalar twin of ``engine.policy.drain_threshold_preset``'s ``k``
     (same sub-expressions, Python ints instead of traced f64).  The
     untimed oracle calls this directly; the engine-vs-oracle
     cross-validation test (tests/test_engine_oracle.py) is the drift
-    guard between the two forms.
+    guard between the two forms.  Under a tenant-scoped
+    :class:`DrainPolicy` the caller passes the *tenant's* Dirty count
+    and the *global* Empty count (the keep-one-free heuristic protects
+    the shared PI front, but may only drain the tenant's own entries).
     """
     k_thresh = dirty - preset if dirty >= threshold else 0
-    k_low = min(RF_LOW_WATER_DRAINS, dirty) if empty <= RF_EMPTY_SLACK else 0
+    k_low = min(low_water, dirty) if empty <= empty_slack else 0
     return max(k_thresh, k_low)
+
+
+# ---------------------------------------------------------------------------
+# Declarative persistence-policy API (QoS / drain policy, ROADMAP fairness)
+# ---------------------------------------------------------------------------
+# ``PBPolicy`` replaces the two global floats that used to live on
+# ``PCSConfig`` plus the constants baked into this module: every knob of
+# the PB's drain-down and allocation behaviour is a field of a frozen
+# dataclass, and every field lowers to a traced scalar or a per-tenant
+# traced vector (``engine.state.scalars_from_config``) exactly like
+# ``crash_at_ns`` and ``n_tenants`` do — so a {workload x scheme x
+# policy} sweep stays ONE XLA program.  The untimed oracle
+# (``core.semantics``) and the checkpoint tier (``persistence.manager``)
+# consume the *same* policy objects through their pure-scalar helpers.
+
+@dataclasses.dataclass(frozen=True)
+class DrainPolicy:
+    """PB_RF drain-down policy (paper Section V-D1) as data.
+
+    ``threshold`` / ``preset`` are fill fractions; ``per_tenant=True``
+    scopes the drain-down to the issuing tenant: its Dirty count is
+    compared against *its own* threshold (anchored on its quota, or its
+    fair share ``n_pbe / T`` when no quota is set) and only *its own*
+    LRU Dirty entries are drained — a noisy tenant's drain-down can no
+    longer evict a quiet tenant's Dirty entries.  ``low_water_drains`` /
+    ``empty_slack`` are the keep-one-free heuristic knobs that used to
+    be module constants (``RF_LOW_WATER_DRAINS`` / ``RF_EMPTY_SLACK``).
+    """
+
+    threshold: float = DEFAULT_DRAIN_THRESHOLD
+    preset: float = DEFAULT_DRAIN_PRESET
+    per_tenant: bool = False
+    low_water_drains: int = RF_LOW_WATER_DRAINS
+    empty_slack: int = RF_EMPTY_SLACK
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.preset <= self.threshold <= 1.0):
+            raise ValueError("require 0 < preset <= threshold <= 1")
+        if self.low_water_drains < 0 or self.empty_slack < 0:
+            raise ValueError("low_water_drains / empty_slack must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocPolicy:
+    """PBE allocation / victim-selection policy.
+
+    ``tenant_quota`` caps each tenant's live (Dirty+Drain) PBE
+    occupancy: a tenant at its quota may not take an Empty slot — it
+    must victim-drain (and reuse) one of its *own* LRU Dirty entries,
+    or wait for its own earliest in-flight drain.  Write coalescing is
+    exempt (it reuses an existing entry; a cross-tenant coalesce
+    takeover can therefore push a tenant transiently over quota — the
+    next allocation self-corrects).  ``victim="weighted"`` makes the
+    shared no-Empty victim path prefer the LRU Dirty entry of a tenant
+    at/over its share (its quota, or ``n_pbe / T`` without quotas),
+    falling back to the global LRU Dirty entry.
+    """
+
+    victim: str = "lru"                              # "lru" | "weighted"
+    tenant_quota: Optional[Tuple[int, ...]] = None   # live-PBE cap / tenant
+
+    def __post_init__(self) -> None:
+        if self.victim not in ("lru", "weighted"):
+            raise ValueError(f"unknown victim policy {self.victim!r}; "
+                             "have 'lru' | 'weighted'")
+        if self.tenant_quota is not None:
+            q = tuple(int(x) for x in self.tenant_quota)
+            if not q or any(x < 1 for x in q):
+                raise ValueError("tenant_quota entries must be >= 1")
+            object.__setattr__(self, "tenant_quota", q)
+
+    def quota_of(self, tenant: int) -> float:
+        """Occupancy cap for ``tenant`` (``inf`` = unlimited)."""
+        if self.tenant_quota is None:
+            return math.inf
+        return float(self.tenant_quota[tenant])
+
+    def share_of(self, tenant: int, n_pbe: int, n_tenants: int) -> float:
+        """Over-share boundary of the weighted victim policy."""
+        if self.tenant_quota is not None:
+            return float(self.tenant_quota[tenant])
+        return n_pbe / max(n_tenants, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PBPolicy:
+    """The full persistence policy: drain-down x allocation.
+
+    Composes with :class:`PCSConfig` (``PCSConfig(policy=...)``); the
+    legacy ``drain_threshold`` / ``drain_preset`` floats forward into a
+    default ``PBPolicy`` (compat shim, see DESIGN.md "Policy API").
+    """
+
+    drain: DrainPolicy = dataclasses.field(default_factory=DrainPolicy)
+    alloc: AllocPolicy = dataclasses.field(default_factory=AllocPolicy)
+
+    def validate_for(self, n_pbe: int, n_tenants: int) -> None:
+        """Config-dependent validation, called by PCSConfig.__post_init__."""
+        q = self.alloc.tenant_quota
+        if q is not None:
+            if len(q) != n_tenants:
+                raise ValueError(
+                    f"tenant_quota has {len(q)} entries for "
+                    f"n_tenants={n_tenants}; need exactly one per tenant")
+            if sum(q) > n_pbe:
+                raise ValueError(
+                    f"tenant quotas sum to {sum(q)} > n_pbe={n_pbe}: the "
+                    "shared buffer cannot honour them")
+
+
+def tenant_drain_counts(policy: PBPolicy, n_pbe: int,
+                        n_tenants: int) -> List[Tuple[int, int]]:
+    """Per-tenant (threshold_count, preset_count) of a tenant-scoped drain.
+
+    Tenant ``t``'s drain-down anchors on its quota when one is set, else
+    on its fair share ``n_pbe / T``.  This is the single home of the
+    per-tenant count rule: the engine lowering
+    (``engine.state.scalars_from_config``) and the untimed oracle
+    (``semantics.PersistentBuffer``) both call it, so the traced and
+    scalar forms cannot drift.
+    """
+    out = []
+    for t in range(n_tenants):
+        base = policy.alloc.quota_of(t)
+        if not math.isfinite(base):
+            base = n_pbe / max(n_tenants, 1)
+        out.append((threshold_count(base, policy.drain.threshold),
+                    preset_count(base, policy.drain.preset)))
+    return out
 
 
 class PBEState(enum.IntEnum):
@@ -170,6 +310,13 @@ class PCSConfig:
     # scalar, so a {workload x scheme x tenant-count} grid is one XLA
     # program; only the per-tenant stats row count is a static shape.
     n_tenants: int = 1
+    # Declarative persistence policy (drain-down x allocation).  ``None``
+    # builds a default ``PBPolicy`` from the two legacy floats below —
+    # the compatibility shim for pre-policy callers; passing ``policy=``
+    # wins and the floats are synced from it (one source of truth).
+    # Every policy field lowers to a traced scalar / per-tenant vector,
+    # so a {workload x scheme x policy} sweep is one XLA program.
+    policy: Optional[PBPolicy] = None
     drain_threshold: float = DEFAULT_DRAIN_THRESHOLD
     drain_preset: float = DEFAULT_DRAIN_PRESET
     pm_banks: int = 4             # independent PM device banks (the single
@@ -200,6 +347,20 @@ class PCSConfig:
             raise ValueError("require 1 <= n_tenants <= n_cores")
         if not (0.0 < self.drain_preset <= self.drain_threshold <= 1.0):
             raise ValueError("require 0 < preset <= threshold <= 1")
+        if self.policy is None:
+            # compat shim: the legacy float knobs forward into a default
+            # PBPolicy (DESIGN.md "Policy API"); bit-identical lowering
+            object.__setattr__(self, "policy", PBPolicy(
+                drain=DrainPolicy(threshold=self.drain_threshold,
+                                  preset=self.drain_preset)))
+        else:
+            # policy wins: sync the legacy floats so threshold_count /
+            # preset_count and telemetry read one source of truth
+            object.__setattr__(self, "drain_threshold",
+                               self.policy.drain.threshold)
+            object.__setattr__(self, "drain_preset",
+                               self.policy.drain.preset)
+        self.policy.validate_for(self.n_pbe, self.n_tenants)
         if self.crash_at_ns < 0.0:
             raise ValueError("crash_at_ns must be >= 0 (or inf for no crash)")
 

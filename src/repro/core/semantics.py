@@ -26,7 +26,7 @@ import enum
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.params import (PBEState, PCSConfig, Scheme,
-                               rf_drain_count)
+                               rf_drain_count, tenant_drain_counts)
 
 
 class EventKind(enum.Enum):
@@ -99,13 +99,23 @@ class PersistentBuffer:
 
     def __init__(self, config: PCSConfig, pm: Optional[PersistentMemory] = None):
         self.config = config
+        # the declarative QoS policy (PCSConfig normalizes the legacy
+        # float knobs into a default PBPolicy, so this is always set);
+        # the oracle consumes the *same* object the engine lowers
+        self.policy = config.policy
+        self._tenant_counts = (
+            tenant_drain_counts(self.policy, config.n_pbe, config.n_tenants)
+            if self.policy.drain.per_tenant else None)
         self.pm = pm if pm is not None else PersistentMemory()
         self.entries: List[PBEntry] = []
         self._lru_clock = 0
         self._seq = 0
         self._version_clock = 0
-        # Writes stalled at the PI buffer waiting for an Empty entry.
-        self.pi_stalled: List[Tuple[int, object, int]] = []
+        # Writes stalled at the PI buffer waiting for an Empty entry:
+        # (addr, data, tenant, claim_below) — `claim_below` (non-None
+        # for quota-parked packets) gates the claim on the tenant's own
+        # footprint shrinking below its park-time occupancy.
+        self.pi_stalled: List[Tuple[int, object, int, Optional[int]]] = []
         # Drains in flight: addr -> version sent (ack frees the entry).
         self.in_flight: Dict[int, int] = {}
         self.stats = {
@@ -161,11 +171,38 @@ class PersistentBuffer:
             return e
         return None
 
-    def _lru_dirty(self) -> Optional[PBEntry]:
-        dirty = [e for e in self.entries if e.state == PBEState.DIRTY]
+    def _lru_dirty(self, owner: Optional[int] = None) -> Optional[PBEntry]:
+        dirty = [e for e in self.entries if e.state == PBEState.DIRTY
+                 and (owner is None or e.tenant == owner)]
         if not dirty:
             return None
         return min(dirty, key=lambda e: e.lru)
+
+    def _occupancy(self, tenant: int) -> int:
+        """Live (Dirty+Drain) entries owned by ``tenant`` — the quota /
+        share accounting base (engine twin: ``policy.tenant_occupancy``)."""
+        return sum(1 for e in self.entries
+                   if e.state != PBEState.EMPTY and e.tenant == tenant)
+
+    def _pick_victim(self, tenant: int) -> Optional[PBEntry]:
+        """No-Empty victim under the AllocPolicy (engine twin:
+        ``engine.policy.select_slot``'s dirty mask).
+
+        ``victim="weighted"`` prefers the LRU Dirty entry of a tenant
+        at/over its share; falls back to the global LRU Dirty entry.
+        """
+        pol = self.policy.alloc
+        if pol.victim == "weighted":
+            occ: Dict[int, int] = {}
+            for e in self.entries:
+                if e.state != PBEState.EMPTY:
+                    occ[e.tenant] = occ.get(e.tenant, 0) + 1
+            hot = [e for e in self.entries if e.state == PBEState.DIRTY
+                   and occ.get(e.tenant, 0) >= pol.share_of(
+                       e.tenant, self.config.n_pbe, self.config.n_tenants)]
+            if hot:
+                return min(hot, key=lambda e: e.lru)
+        return self._lru_dirty()
 
     # --------------------------------------------------------------- drain
     def _start_drain(self, e: PBEntry, events: List[Event],
@@ -197,24 +234,81 @@ class PersistentBuffer:
         """
         if self.config.scheme != Scheme.PB_RF:
             return
-        dirty = self._count(PBEState.DIRTY)
+        pol = self.policy.drain
         empty = self.config.n_pbe - sum(
             1 for e in self.entries if e.state != PBEState.EMPTY)
-        k = rf_drain_count(dirty, empty, self.config.threshold_count,
-                           self.config.preset_count)
+        if pol.per_tenant:
+            # tenant-scoped drain-down: the trigger's Dirty count against
+            # *its* counts (quota / fair-share anchored), draining only
+            # its own LRU Dirty entries — a noisy tenant can no longer
+            # evict a quiet tenant's Dirty entries.  The keep-one-free
+            # heuristic still watches the shared Empty pool.
+            scope = tenant
+            dirty = sum(1 for e in self.entries
+                        if e.state == PBEState.DIRTY and e.tenant == tenant)
+            thr, pre = self._tenant_counts[tenant]
+        else:
+            scope = None
+            dirty = self._count(PBEState.DIRTY)
+            thr, pre = (self.config.threshold_count,
+                        self.config.preset_count)
+        k = rf_drain_count(dirty, empty, thr, pre,
+                           pol.low_water_drains, pol.empty_slack)
         for _ in range(k):
-            victim = self._lru_dirty()
+            victim = self._lru_dirty(owner=scope)
             if victim is None:
                 break
             self._start_drain(victim, events, tenant)
 
+    def _stall(self, addr: int, data: object, tenant: int, version: int,
+               events: List[Event], retry: bool,
+               claim_below: Optional[int]) -> List[Event]:
+        """Park the write at the PI buffer until an entry frees (V-D1).
+
+        A *retry* (a previously stalled packet replayed by
+        :meth:`pm_ack`) is re-parked without re-billing: the engine
+        counts one victim/stall event per original packet no matter how
+        long it waits, so only the packet's first stall emits STALLED
+        and bumps the stall counters.  ``claim_below`` (non-None for
+        quota-parked packets) is the tenant's occupancy at park time:
+        the packet may only claim a slot once its tenant's footprint
+        shrank below it — i.e. once one of its *own* entries freed — so
+        the recycle restores exactly the park-time occupancy, like the
+        engine's over-quota victim path (see :meth:`persist`).
+        """
+        ts = self._tstats(tenant)
+        self.pi_stalled.append((addr, data, tenant, claim_below))
+        self.stats["persists"] -= 1
+        ts["persists"] -= 1
+        self._version_clock -= 1
+        if not retry:
+            self.stats["stalls"] += 1
+            ts["stalls"] += 1
+            events.append(Event(EventKind.STALLED, addr, version,
+                                self._next_seq()))
+        return events
+
     # ------------------------------------------------------------- persist
     def persist(self, addr: int, data: object,
-                tenant: int = 0) -> List[Event]:
+                tenant: int = 0, *, _retry: bool = False,
+                _claim_below: Optional[int] = None) -> List[Event]:
         """A persist (flush+fence) packet reaches the switch.
 
         ``tenant`` tags which host issued it (multi-tenant sharing of
         the switch); all events it triggers are billed to that tenant.
+        ``_retry`` marks the replay of a stalled packet (internal, from
+        :meth:`pm_ack`): it re-attempts allocation but neither starts
+        another victim drain nor re-counts the stall.  ``_claim_below``
+        marks the replay of a quota-parked packet: it *recycles* the
+        slot one of its own entries (typically its victim drain) freed,
+        claiming only once its tenant's occupancy drops below the
+        park-time value and bypassing the quota gate for that claim —
+        occupancy is restored to the park-time level, exactly the timed
+        engine's over-quota victim path (which writes into its victim's
+        slot at the drain-ack time).  Without the exemption a tenant
+        pushed *over* quota by a cross-tenant coalesce takeover could
+        park a packet forever; without the own-entry gate the claim
+        could transiently grow the footprint past the quota.
         """
         events: List[Event] = []
         ts = self._tstats(tenant)
@@ -248,9 +342,37 @@ class PersistentBuffer:
                                     self._next_seq()))
                 events.append(Event(EventKind.PERSIST_ACK, addr, version,
                                     self._next_seq()))
+                # The drain-down policy is evaluated on every persist,
+                # coalesces included (the engine's drain_threshold_preset
+                # runs unconditionally).  Under the global policy a
+                # coalesce never changes the Dirty count so this is
+                # unreachable work, but a cross-tenant coalesce takeover
+                # *does* move the owning tenant's Dirty count across its
+                # scoped threshold.
+                self._rf_drain_down(events, tenant)
                 return events
             # PB scheme never observes Dirty (drain-immediately), but the
             # state machine stays safe if it does: fall through to stall.
+
+        # Per-tenant PBE quota (AllocPolicy): a tenant at/over its cap
+        # may not grow its footprint with an Empty slot — it recycles it
+        # instead: drain its own LRU Dirty entry (none if all already in
+        # flight) and wait at the PI buffer for one of its own entries
+        # to free; the claim then restores the park-time occupancy (see
+        # the docstring).  Coalescing above is exempt (reuses an entry).
+        occ = self._occupancy(tenant)
+        if _claim_below is not None:
+            if occ >= _claim_below:
+                # no own entry freed yet: keep waiting (silent re-park)
+                return self._stall(addr, data, tenant, version, events,
+                                   _retry, claim_below=_claim_below)
+        elif occ >= self.policy.alloc.quota_of(tenant):
+            if not _retry:
+                victim = self._lru_dirty(owner=tenant)
+                if victim is not None:
+                    self._start_drain(victim, events, tenant)
+            return self._stall(addr, data, tenant, version, events,
+                               _retry, claim_below=occ)
 
         # An in-flight (Drain) older version does NOT block the new persist:
         # the new version gets its own entry; the switch->PM path is FIFO,
@@ -258,20 +380,14 @@ class PersistentBuffer:
         # write order without blocking the ack).
         slot = self._alloc_slot()
         if slot is None:
-            victim = self._lru_dirty()
-            if victim is not None:
-                self._start_drain(victim, events, tenant)
+            if not _retry:
+                victim = self._pick_victim(tenant)
+                if victim is not None:
+                    self._start_drain(victim, events, tenant)
             # Whether we drained a victim or everything is already Drain,
             # the write must wait for an Empty entry (Section V-D1).
-            self.pi_stalled.append((addr, data, tenant))
-            self.stats["stalls"] += 1
-            self.stats["persists"] -= 1
-            ts["stalls"] += 1
-            ts["persists"] -= 1
-            self._version_clock -= 1
-            events.append(Event(EventKind.STALLED, addr, version,
-                                self._next_seq()))
-            return events
+            return self._stall(addr, data, tenant, version, events,
+                               _retry, claim_below=_claim_below)
 
         slot.addr = addr
         slot.version = version
@@ -307,9 +423,13 @@ class PersistentBuffer:
                 break
         # Retry stalled writes now that an entry may be Empty.  Acks were
         # prioritized to the PI front precisely to enable this (V-D2).
+        # Replays are marked _retry: a packet still blocked (no Empty /
+        # still over quota) re-parks silently — one stall event and at
+        # most one victim drain per original packet, like the engine.
         retries, self.pi_stalled = self.pi_stalled, []
-        for (a, d, tn) in retries:
-            events.extend(self.persist(a, d, tn))
+        for (a, d, tn, cb) in retries:
+            events.extend(self.persist(a, d, tn, _retry=True,
+                                       _claim_below=cb))
         return events
 
     # ---------------------------------------------------------------- read

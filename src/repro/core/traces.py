@@ -587,6 +587,31 @@ def compose_tenants(tenant_traces: List[Trace], *,
                  name=f"{name}[T={T}]")
 
 
+def make_mixed_tenant_trace(specs: "List[Tuple[str, int]]",
+                            cores_per_tenant: int = 2, *,
+                            shared_lines: int = 0, seed: int = 0,
+                            name: str = "", **kw) -> Trace:
+    """Heterogeneous tenants on one shared switch — the quota-pressure
+    composition behind the QoS policy sweeps.
+
+    ``specs`` is one ``(workload, persist_budget)`` pair per tenant, so
+    a *noisy* tenant (large budget, write-hot workload) can sit next to
+    quiet ones: without per-tenant PBE quotas the noisy tenant's
+    allocations and drain-downs monopolize the shared PB, which is
+    exactly the skew ``benchmarks/fig_qos.py`` sweeps policies against.
+    Each tenant gets a distinct seed (distinct streams) and the usual
+    disjoint PM address window (``shared_lines`` keeps a common hot
+    window, see :func:`compose_tenants`).
+    """
+    if not specs:
+        raise ValueError("need at least one (workload, budget) spec")
+    parts = [make_trace(w, n_cores=cores_per_tenant, seed=seed + 101 * t,
+                        persist_budget=budget, **kw)
+             for t, (w, budget) in enumerate(specs)]
+    name = name or "+".join(f"{w}@{b}" for w, b in specs)
+    return compose_tenants(parts, shared_lines=shared_lines, name=name)
+
+
 def make_tenant_trace(workload: str, n_tenants: int,
                       cores_per_tenant: int = 2, *,
                       shared_lines: int = 0, seed: int = 0,

@@ -32,7 +32,8 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.params import (DEFAULT_DRAIN_PRESET,
-                               DEFAULT_DRAIN_THRESHOLD, SCHEME_NAMES, Scheme)
+                               DEFAULT_DRAIN_THRESHOLD, DrainPolicy,
+                               PBPolicy, SCHEME_NAMES, Scheme)
 from repro.persistence.store import DurableStore, HostBufferTier, _deserialize, _serialize
 
 # The checkpoint tier speaks the same scheme vocabulary as the timed
@@ -51,14 +52,25 @@ class ShardState(enum.Enum):
 class PCSCheckpointManager:
     def __init__(self, buffer: HostBufferTier, store: DurableStore, *,
                  scheme: PersistScheme = PersistScheme.PB_RF,
+                 policy: Optional[PBPolicy] = None,
                  drain_threshold: float = DEFAULT_DRAIN_THRESHOLD,
                  drain_preset: float = DEFAULT_DRAIN_PRESET,
                  sync_drain: bool = False):
         self.buffer = buffer
         self.store = store
         self.scheme = scheme
-        self.drain_threshold = drain_threshold
-        self.drain_preset = drain_preset
+        # The checkpoint tier consumes the same declarative PBPolicy as
+        # the engine and the oracle; the legacy float knobs forward into
+        # a default policy (same shim as PCSConfig).  The drain fractions
+        # apply to buffer *bytes* instead of PBE counts; the tenant-quota
+        # / victim fields are inert here until the tier grows a tenant
+        # axis (single-host checkpoint streams today).
+        if policy is None:
+            policy = PBPolicy(drain=DrainPolicy(threshold=drain_threshold,
+                                                preset=drain_preset))
+        self.policy = policy
+        self.drain_threshold = policy.drain.threshold
+        self.drain_preset = policy.drain.preset
         self.sync_drain = sync_drain
         self._states: Dict[Tuple[str, int], ShardState] = {}
         self._lru: Dict[Tuple[str, int], float] = {}
@@ -75,8 +87,26 @@ class PCSCheckpointManager:
             self._start_drainer()
 
     def _start_drainer(self) -> None:
-        self._stop.clear()
+        """Spawn the background drain loop — refusing to double-spawn.
+
+        One *active* drain loop per queue: if the tracked drainer is
+        alive and has not been told to stop, this is a no-op.  A
+        previous drainer that is alive but already stopping (a slow
+        ``DurableStore`` write outliving ``crash()``'s 1 s join) is not
+        a conflict: each thread loops on its own private stop event,
+        captured at spawn, so the stale thread exits as soon as its
+        in-flight write returns and can never consume from the new
+        queue — while the fresh thread gets a fresh event.
+        """
+        if (self._drainer is not None and self._drainer.is_alive()
+                and not self._stop.is_set()):
+            return
+        self._stop = threading.Event()
+        # the queue is bound at spawn too: a stale thread keeps polling
+        # the *old* (abandoned) queue, never its successor's
         self._drainer = threading.Thread(target=self._drain_loop,
+                                         args=(self._stop, self._q),
+                                         name="pcs-ckpt-drainer",
                                          daemon=True)
         self._drainer.start()
 
@@ -200,14 +230,18 @@ class PCSCheckpointManager:
             self._states[(shard, version)] = ShardState.EMPTY
             self.buffer.drop(shard, version)
 
-    def _drain_loop(self) -> None:
-        while not self._stop.is_set():
+    def _drain_loop(self, stop: threading.Event, q: "queue.Queue") -> None:
+        # `stop` and `q` are this thread's private bindings (see
+        # _start_drainer): the event stays set once set and the queue
+        # reference never changes, so a stale loop can neither wake up
+        # again nor consume / task_done on a successor's queue.
+        while not stop.is_set():
             try:
-                shard, version = self._q.get(timeout=0.05)
+                shard, version = q.get(timeout=0.05)
             except queue.Empty:
                 continue
             self._drain_one(shard, version)
-            self._q.task_done()
+            q.task_done()
 
     def drain_all(self, wait: bool = True) -> None:
         with self._lock:

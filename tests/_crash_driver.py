@@ -38,7 +38,7 @@ def _counts_from(stats, scheme, victim_stalls):
 
 
 def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
-                  n_tenants=1):
+                  n_tenants=1, policy=None):
     """Replay schedule slots ``<= crash_slot``, then crash + recover.
 
     Acks are delivered promptly (all in-flight drains complete between
@@ -49,10 +49,12 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
     ``core_tenant`` (from ``core.traces.tenant_ids``) maps each core to
     the tenant the shared switch bills its requests to; the returned
     ``tenant_counts`` row per tenant must match the engine's per-tenant
-    stats rows exactly.
+    stats rows exactly.  ``policy`` (a ``PBPolicy``) drives the oracle's
+    quota / victim / drain-scope decisions — the engine cell must be run
+    with the *same* policy on its config.
     """
     pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=n_pbe,
-                                    n_tenants=n_tenants))
+                                    n_tenants=n_tenants, policy=policy))
     aver = collections.defaultdict(int)   # per-address issued versions
     pending = []
     victim_stalls = collections.defaultdict(int)
@@ -90,6 +92,12 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
                      victim_stalls[t])
         for t in range(n_tenants)]
     snapshot = {a: rec[0] for a, rec in pb.snapshot_durable().items()}
+    # surviving (non-Empty) PBEs at the crash instant, per owning tenant:
+    # the engine's recovery_entries / tenant_recovery must match exactly
+    tenant_surviving = [0] * n_tenants
+    for e in pb.entries:
+        if e.state.name != "EMPTY":
+            tenant_surviving[e.tenant] += 1
     pb.crash()
     pb.recover()
     durable = {}
@@ -100,7 +108,8 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
     assert {a: rec[0] for a, rec in pb.pm.store.items()} == snapshot, \
         "snapshot_durable disagrees with crash+recover"
     return dict(durable=durable, counts=counts, reads=reads,
-                issued=dict(aver), tenant_counts=tenant_counts)
+                issued=dict(aver), tenant_counts=tenant_counts,
+                tenant_surviving=tenant_surviving)
 
 
 def assert_cell_matches(res, oracle, n_addrs, label=""):
@@ -116,6 +125,12 @@ def assert_cell_matches(res, oracle, n_addrs, label=""):
                   pm_writes=res.pm_writes, victim_drains=res.victim_drains)
     assert counts == oracle["counts"], (label, counts, oracle["counts"])
 
+    # the Section V-D4 recovery pass re-drains exactly the oracle's
+    # surviving (non-Empty) entries
+    assert res.recovery_entries == sum(oracle["tenant_surviving"]), (
+        label, "recovery entries", res.recovery_entries,
+        oracle["tenant_surviving"])
+
     # per-tenant accounting over the shared switch must agree row by row
     if res.n_tenants > 1:
         t_rows = res.tenant_results()
@@ -127,6 +142,11 @@ def assert_cell_matches(res, oracle, n_addrs, label=""):
                          pm_writes=tr.pm_writes,
                          victim_drains=tr.victim_drains)
             assert got_t == want_t, (label, "tenant", t, got_t, want_t)
+        # per-tenant recovery attribution (surviving-entry owners)
+        got_surv = [tr.recovery_entries for tr in t_rows]
+        assert got_surv == oracle["tenant_surviving"], (
+            label, "tenant recovery", got_surv,
+            oracle["tenant_surviving"])
 
     # prompt-ack regime: every executed persist was acked before the
     # crash, and (the paper's claim) every acked persist is durable

@@ -24,8 +24,8 @@ import os
 import pytest
 
 from _crash_driver import assert_cell_matches, oracle_replay
-from repro.core import (PCSConfig, Scheme, fuzz_crash_ns, fuzz_trace,
-                        tenant_ids)
+from repro.core import (AllocPolicy, DrainPolicy, PBPolicy, PCSConfig,
+                        Scheme, fuzz_crash_ns, fuzz_trace, tenant_ids)
 from repro.core.engine import compile_count, simulate, simulate_grid
 
 try:
@@ -101,6 +101,56 @@ def test_differential_matrix_multi_tenant_one_compile():
             assert_cell_matches(cells[i][j], oracle, N_ADDRS,
                                 label=("T2", seeds[i], scheme.name, k,
                                        n_pbe))
+
+
+def test_differential_matrix_quota_policies_one_compile():
+    """Non-default QoS policies (per-tenant quotas, weighted victim
+    selection, tenant-scoped drain-down) mixed with the default in ONE
+    compiled grid: the engine must agree with the policy-aware oracle on
+    the durable state, the per-tenant accounting AND the per-tenant
+    surviving-entry attribution at every crash point."""
+    n_tenants, n_cores = 2, 4
+    seeds = list(range(4))
+    traces, scheds = zip(*[
+        fuzz_trace(s, n_cores=n_cores, n_slots=N_SLOTS, n_addrs=N_ADDRS,
+                   n_tenants=n_tenants, p_persist=0.7)
+        for s in seeds])
+    # one policy per PBE capacity (quotas must sum <= n_pbe), mixed with
+    # the default policy at the same capacity
+    policies = {
+        2: PBPolicy(alloc=AllocPolicy(tenant_quota=(1, 1))),
+        4: PBPolicy(alloc=AllocPolicy(victim="weighted",
+                                      tenant_quota=(1, 3))),
+        8: PBPolicy(drain=DrainPolicy(per_tenant=True),
+                    alloc=AllocPolicy(tenant_quota=(2, 5))),
+    }
+    crash_slots = (0, 11, 23, 36, N_SLOTS)
+    plan = []
+    for scheme in SCHEMES:
+        for ki, k in enumerate(crash_slots):
+            n_pbe = PBES[ki % len(PBES)]
+            plan.append((scheme, k, n_pbe, policies[n_pbe]))
+            plan.append((scheme, k, n_pbe, None))        # default, mixed
+    configs = [PCSConfig(scheme=s, n_pbe=p, n_cores=n_cores,
+                         n_tenants=n_tenants,
+                         policy=pol).with_crash(fuzz_crash_ns(k))
+               for s, k, p, pol in plan]
+    c0 = compile_count()
+    cells = simulate_grid(list(traces), configs, max_pbe=max(PBES),
+                          bucket=BUCKET, track_addrs=N_ADDRS)
+    assert compile_count() - c0 == 1, (
+        "the mixed {trace x scheme x crash-point x policy} matrix must "
+        "be one XLA program")
+    for i, (tr, sched) in enumerate(zip(traces, scheds)):
+        core_tenant = tenant_ids(tr.lengths, n_tenants)
+        for j, (scheme, k, n_pbe, pol) in enumerate(plan):
+            oracle = oracle_replay(sched, k, scheme, n_pbe,
+                                   core_tenant=core_tenant,
+                                   n_tenants=n_tenants, policy=pol)
+            assert_cell_matches(
+                cells[i][j], oracle, N_ADDRS,
+                label=("QOS", seeds[i], scheme.name, k, n_pbe,
+                       "default" if pol is None else str(pol.alloc)))
 
 
 def _one_cell(seed, scheme, crash_slot, n_pbe, p_persist=0.55):

@@ -136,6 +136,40 @@ def test_capacity_stall_then_drain(tmp_path):
     mgr.close()
 
 
+@pytest.mark.slow
+def test_one_drainer_per_queue_after_slow_crash_recover(tmp_path):
+    """Drainer lifecycle (ROADMAP / PR 3 review): a slow DurableStore
+    write outlives crash()'s 1 s join, so the old drain loop is still
+    alive when recover() restarts the drainer.  The old thread must exit
+    on its own (private stop event) without ever consuming from the new
+    queue, and _start_drainer must refuse to double-spawn while the
+    active drainer lives."""
+    mgr = mk(tmp_path, PersistScheme.PB, sync=False, delay=1.5)
+    mgr.persist("a", 1, np.ones(8))
+    time.sleep(0.3)                 # drainer is now inside the slow write
+    old = mgr._drainer
+    mgr.crash()                     # join(1.0) times out; old still alive
+    assert old.is_alive(), "precondition: the slow write must outlive crash"
+    mgr.recover()
+    new = mgr._drainer
+    assert new is not old and new.is_alive()
+    # double-start refuses while the active drainer lives
+    mgr._start_drainer()
+    assert mgr._drainer is new, "_start_drainer must not double-spawn"
+    # the stale thread exits once its in-flight write returns — it never
+    # loops on the successor's queue (its queue binding is the abandoned
+    # pre-crash queue, its stop event stays set)
+    old.join(timeout=8.0)
+    assert not old.is_alive(), "stopped drainer must exit, not keep looping"
+    assert mgr._drainer is new and new.is_alive()
+    # and the manager still works end to end
+    mgr.persist("b", 2, np.zeros(4))
+    mgr.drain_all(wait=True)
+    assert mgr.store.read("b")[0] == 2
+    assert mgr.store.read("a") is not None, "survivor lost in recovery"
+    mgr.close()
+
+
 def test_concurrent_persists(tmp_path):
     mgr = mk(tmp_path, PersistScheme.PB_RF, sync=False)
     errs = []
