@@ -29,8 +29,11 @@ bench:
 calibrate:
 	$(PYTHON) -m benchmarks._calibrate
 
-# CI lane: fast tests, then the smoke benchmarks, then the compile-count
-# regression guard (the shared grid / recovery sweep / tenant sweep must
-# each stay exactly ONE XLA program — see benchmarks/check_compiles.py)
+# CI lane: fast tests (including the depth differential's fast chain
+# matrix; the >=500-cell depth-4 matrix runs behind the `slow` marker in
+# `test-all`), then the smoke benchmarks, then the compile-count
+# regression guard (the shared grid / recovery sweep / tenant sweep /
+# QoS sweep / chain depth sweep must each stay exactly ONE XLA program
+# — see benchmarks/check_compiles.py)
 ci: test bench-smoke
 	$(PYTHON) -m benchmarks.check_compiles

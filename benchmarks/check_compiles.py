@@ -1,12 +1,13 @@
 """CI compile-count regression guard over BENCH_engine.json.
 
 The engine's one-program property — a whole {trace x config x scheme x
-crash-point x tenant-count x policy} grid lowering to a single XLA
-compilation — is a load-bearing perf invariant (DESIGN.md §3).
-``make ci`` runs this after ``bench-smoke``: if the shared grid, the
-recovery sweep, the tenant sweep or the mixed-policy QoS sweep ever
-compiles more than once (e.g. someone turns a traced scalar — or a
-lowered PBPolicy field — back into a static), the build fails loudly
+crash-point x tenant-count x policy x switch-depth} grid lowering to a
+single XLA compilation — is a load-bearing perf invariant (DESIGN.md
+§3).  ``make ci`` runs this after ``bench-smoke``: if the shared grid,
+the recovery sweep, the tenant sweep, the mixed-policy QoS sweep or
+the switch-chain depth sweep ever compiles more than once (e.g.
+someone turns a traced scalar — the chain depth, a per-hop capacity or
+a lowered PBPolicy field — back into a static), the build fails loudly
 instead of the trajectory silently absorbing a multi-compile
 regression.
 
@@ -18,7 +19,8 @@ import json
 import sys
 
 GUARDED = ("shared_grid_compiles", "recovery_sweep_compiles",
-           "tenant_sweep_compiles", "qos_sweep_compiles")
+           "tenant_sweep_compiles", "qos_sweep_compiles",
+           "chain_sweep_compiles")
 
 
 def check(report: dict) -> list:

@@ -1,27 +1,44 @@
-"""Fig 1: persist latency vs number of CXL switches to PM.
+"""Fig 1 (headline): persist latency and recovery vs CXL switch depth.
 
 Paper claim: persist latency grows steeply with chain depth for a
 volatile switch (~2.5x at one switch vs local PM) and is largely flat
-when persists complete at the first persistent switch.
+when persists complete at the first persistent switch — a win that
+*grows* with depth now that every switch in the chain carries its own
+PB (pooling topologies): the ack point stays at hop 1 no matter how
+deep the pool fabric gets.
 
 Latency (not throughput) measurement: a low-intensity FFT-like
 persist/read mix (1:1, one core, 2 us of compute between operations) so
 device queueing does not mask the path composition — the paper's Fig 1
 is likewise a latency figure, normalized to local PM.
 
-The whole depth sweep — NoPB at every depth plus PB at every depth with
-a switch — is one mixed-scheme ``simulate_grid`` call: switch depth
-enters through the traced one-way latencies and the scheme is a traced
-scalar, so the figure costs a single XLA compilation.
+Series shapes: **NoPB appears at every depth (0 included — direct
+attach)**; the PB schemes only at depth >= 1, since the persistent
+buffer lives in the first switch.  The whole sweep — the latency grid
+plus a crashed replica of every PB cell for the per-hop recovered-entry
+attribution — is ONE mixed-scheme ``simulate_grid`` call: switch depth,
+per-hop capacities and the crash instant are all traced, so the figure
+costs a single XLA compilation (``chain_sweep_compiles`` is guarded by
+``benchmarks/check_compiles.py``).
 """
 from __future__ import annotations
+
+import math
+import time
 
 import numpy as np
 
 from repro.core import Op, PCSConfig, Scheme, Trace, simulate_grid
+from repro.core.engine import compile_count
 
 from benchmarks import _shared
 from benchmarks._shared import emit
+
+DEPTHS = (0, 1, 2, 3, 4)
+PB_SCHEMES = (("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF))
+
+# telemetry of the one-program depth sweep for BENCH_engine.json
+sweep_metrics: dict = {}
 
 
 def _probe_trace(n_ops: int = 2000, gap: float = 2000.0) -> Trace:
@@ -37,22 +54,73 @@ def _probe_trace(n_ops: int = 2000, gap: float = 2000.0) -> Trace:
                  lengths=np.array([len(ops)], np.int32), name="fig1_probe")
 
 
-def run(depths=(0, 1, 2, 3)) -> list:
-    tr = _probe_trace(n_ops=200 if _shared.SMOKE else 2000)
+def plan(depths=DEPTHS):
+    """(label, config) rows of the depth sweep: NoPB at EVERY depth,
+    PB schemes only where a switch exists to host the buffer, plus a
+    mid-run-crash replica of each PB cell for the per-hop recovered-
+    entry attribution.  The crash anchor is the probe's nominal op
+    span (gap-dominated, so it needs no prior simulation — the sweep
+    stays one program)."""
     labels, configs = [], []
     for n_sw in depths:
-        labels.append(("nopb", n_sw))
+        labels.append(("nopb", n_sw, False))
         configs.append(PCSConfig(scheme=Scheme.NOPB, n_switches=n_sw))
-        if n_sw > 0:
-            labels.append(("pb", n_sw))
-            configs.append(PCSConfig(scheme=Scheme.PB, n_switches=n_sw))
+        if n_sw < 1:
+            continue                      # no switch, nowhere for a PB
+        for key, scheme in PB_SCHEMES:
+            labels.append((key, n_sw, False))
+            configs.append(PCSConfig(scheme=scheme, n_switches=n_sw))
+    return labels, configs
+
+
+def run(depths=None) -> list:
+    # smoke caps the chain at depth 3: the deep-hop row count is a
+    # static shape, and the depth-4 program alone dominates the smoke
+    # lane's compile budget (full runs sweep the headline 1..4)
+    if depths is None:
+        depths = DEPTHS[:-1] if _shared.SMOKE else DEPTHS
+    n_ops = 200 if _shared.SMOKE else 2000
+    gap = 2000.0
+    tr = _probe_trace(n_ops=n_ops, gap=gap)
+    labels, configs = plan(depths)
+    # crashed replicas: power loss mid-run (half the nominal op span)
+    crash_at = 0.5 * (2 * n_ops) * gap
+    for key, scheme in PB_SCHEMES:
+        for n_sw in depths:
+            if n_sw < 1:
+                continue
+            labels.append((key, n_sw, True))
+            configs.append(PCSConfig(scheme=scheme, n_switches=n_sw)
+                           .with_crash(crash_at))
+    c0, t0 = compile_count(), time.time()
     cells = simulate_grid([tr], configs, bucket=_shared.bucket())[0]
-    base = next(r.persist_lat_ns for (k, n), r in zip(labels, cells)
-                if k == "nopb" and n == depths[0])
+    sweep_metrics.update(
+        chain_sweep_wall_s=round(time.time() - t0, 3),
+        chain_sweep_compiles=compile_count() - c0,
+        chain_sweep_cells=len(configs),
+    )
+    base = next(r.persist_lat_ns for (k, n, c), r in zip(labels, cells)
+                if k == "nopb" and n == min(depths) and not c)
     rows = []
-    for (key, n_sw), r in zip(labels, cells):
-        rows.append((f"fig1_{key}_n{n_sw}", round(r.persist_lat_ns, 1),
-                     f"norm={r.persist_lat_ns / base:.2f}x"))
+    for (key, n_sw, crashed), r in zip(labels, cells):
+        if not crashed:
+            rows.append((f"fig1_{key}_n{n_sw}",
+                         round(r.persist_lat_ns, 1),
+                         f"norm={r.persist_lat_ns / base:.2f}x"))
+            # per-hop mean forward latency (chain telemetry); hops with
+            # zero traffic have NaN means — skipped, not plotted as 0
+            for h in r.hop_results():
+                if math.isnan(h["fwd_lat_ns"]):
+                    continue
+                rows.append((f"fig1_fwd_{key}_n{n_sw}_h{h['hop']}",
+                             round(h["fwd_lat_ns"], 1),
+                             f"commits={h['commits']}"))
+        else:
+            # recovered-entry attribution: which hop of the chain holds
+            # the surviving entries a mid-run crash leaves behind
+            for h in r.hop_results():
+                rows.append((f"fig1_recov_{key}_n{n_sw}_h{h['hop']}",
+                             h["recovered"], "surviving_pbes"))
     return rows
 
 

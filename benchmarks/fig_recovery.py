@@ -20,6 +20,7 @@ first switch), and all of them are durable.
 """
 from __future__ import annotations
 
+import math
 import time
 
 from repro.core import PCSConfig, Scheme, make_tenant_trace, simulate_grid
@@ -48,6 +49,9 @@ TENANT_WORKLOAD = "radiosity"
 TENANTS = 2
 TENANT_CORES = 2
 
+# switch-chain group: per-hop recovered-entry attribution at this depth
+CHAIN_DEPTH = 2
+
 
 def run() -> list:
     names = SMOKE_NAMES if _shared.SMOKE else NAMES
@@ -64,6 +68,16 @@ def run() -> list:
                 configs.append(
                     PCSConfig(scheme=scheme).with_crash(f * ends[name]))
                 keys.append((name, key, f))
+    # Switch-chain group (pooling topologies): the first workload under
+    # a depth-CHAIN_DEPTH chain, crashed at the same fractions — the
+    # per-hop recovered-entry attribution of the union drain-all.
+    # Depth is traced, so the group rides the same one-program sweep.
+    for key, scheme in SCHEMES[1:]:        # pb, pb_rf
+        for f in FRACS:
+            configs.append(PCSConfig(
+                scheme=scheme,
+                n_switches=CHAIN_DEPTH).with_crash(f * ends[names[0]]))
+            keys.append((f"{names[0]}:chain", key, f))
     # Multi-tenant group (per-tenant recovery attribution): a T=2
     # shared-switch trace crashed at the same fractions of ITS OWN NoPB
     # runtime (anchored outside the counted sweep so the sweep stays one
@@ -104,6 +118,22 @@ def run() -> list:
                          round(frac, 4), "durable_fraction_of_run"))
             rows.append((f"recovery_lat_{key}_{name}_f{int(100 * f)}",
                          round(r.recovery_ns, 1), "recovery_ns"))
+    # per-hop recovery attribution of the chain group (first workload's
+    # trace row); hops with zero traffic have NaN mean forward latency
+    # — skipped, never emitted as a 0.0 ns hop
+    for (anchor, key, f), r in zip(keys, cells[0]):
+        if anchor != f"{names[0]}:chain":
+            continue
+        for h in r.hop_results():
+            rows.append((
+                f"recovery_chain_{key}_d{CHAIN_DEPTH}"
+                f"_f{int(100 * f)}_h{h['hop']}",
+                h["recovered"], "surviving_pbes"))
+            if not math.isnan(h["fwd_lat_ns"]):
+                rows.append((
+                    f"recovery_chain_fwd_{key}_d{CHAIN_DEPTH}"
+                    f"_f{int(100 * f)}_h{h['hop']}",
+                    round(h["fwd_lat_ns"], 1), "mean_fwd_ns"))
     # per-tenant recovery attribution (the multi-tenant trace is last)
     for (anchor, key, f), r in zip(keys, cells[len(names)]):
         if anchor != "tenants":

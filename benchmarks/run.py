@@ -83,6 +83,8 @@ def main() -> None:
         "figures_reused": reused,
         # telemetry of the shared {workload x scheme} one-program grid
         **{f"shared_{k}": v for k, v in _shared.grid_metrics.items()},
+        # telemetry of the {scheme x switch-depth x crash} chain sweep
+        **fig1_switch_depth.sweep_metrics,
         # telemetry of the {workload x scheme x crash-point} sweep
         **fig_recovery.sweep_metrics,
         # telemetry of the {tenant-count x scheme} shared-switch sweep

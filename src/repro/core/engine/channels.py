@@ -12,7 +12,10 @@ writes (the paper's Fig. 6b mechanism) falls out of this scalar.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+_INF = 1e30  # engine.state.INF (kept local: state imports no channels)
 
 
 def bank_of(addr, n_banks: int):
@@ -38,3 +41,26 @@ def pbc_start(pbc_busy, arrival, proc_ns):
 def pbc_hold(pbc_busy, arrival, occ_ns):
     """Advance the PBC next-free time past one packet's issue interval."""
     return jnp.maximum(pbc_busy, arrival) + occ_ns
+
+
+def fifo_service(busy, arrivals, active, occ_ns):
+    """Batch FIFO service of a deep-hop PBC / inter-switch channel.
+
+    ``arrivals`` (Q,) are packet arrival times in channel order (batch
+    order == wire order); ``active`` masks live packets.  Service start
+    of packet q is ``max(arrival_q, start_{q-1} + occ)`` with the
+    channel busy until ``busy`` — the standard FIFO recurrence, solved
+    in closed form with a cumulative max:
+
+        start_q = occ*rank_q + max(busy, max_{i<=q}(arr_i - occ*rank_i))
+
+    Returns ``(starts (Q,), busy_after ())``; inactive packets get INF
+    starts and do not advance the channel.
+    """
+    rank = jnp.cumsum(active.astype(jnp.float64)) - 1.0
+    adj = jnp.where(active, arrivals - occ_ns * rank, -_INF)
+    run = jax.lax.cummax(adj)
+    starts = jnp.where(active,
+                       occ_ns * rank + jnp.maximum(run, busy), _INF)
+    busy_after = jnp.max(jnp.where(active, starts + occ_ns, busy))
+    return starts, jnp.maximum(busy_after, busy)

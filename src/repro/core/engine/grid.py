@@ -61,41 +61,52 @@ def _stack_traces(traces: Sequence[Trace], bucket: int):
 
 def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None,
                    n_tenants_max: int):
-    max_pbe = max_pbe or max(c.n_pbe for c in configs)
-    if any(c.n_pbe > max_pbe for c in configs):
+    # the static PBE bound must cover every hop of every chain (deep
+    # rows share the slot axis with hop 1)
+    max_pbe = max_pbe or max(c.max_hop_pbe for c in configs)
+    if any(c.max_hop_pbe > max_pbe for c in configs):
         raise ValueError("n_pbe exceeds max_pbe")
     banks = {c.pm_banks for c in configs}
     if len(banks) != 1:
         raise ValueError("grid configs must share pm_banks (array shape)")
+    # deep-hop rows are a static shape; only PB-bearing configs need
+    # them (a deep NOPB chain is pure wire), and a depth-<=1-only grid
+    # lowers to the chain-free program (n_deep == 0)
+    n_deep = max((len(c.hop_pbes) - 1 for c in configs), default=0)
+    n_deep = max(n_deep, 0)
     # policy lowering pads its per-tenant vectors to the grid-wide
     # n_tenants_max, so mixed tenant counts / policies stack into one
     # (K,) or (K, T) array per scalar and share the program
-    rows = [scalars_from_config(c, n_tenants_max) for c in configs]
+    rows = [scalars_from_config(c, n_tenants_max, n_deep) for c in configs]
     sc = {k: np.asarray([r[k] for r in rows], np.float64) for k in rows[0]}
     schemes = np.asarray([int(c.scheme) for c in configs], np.int32)
-    return sc, schemes, max_pbe, banks.pop()
+    return sc, schemes, max_pbe, banks.pop(), n_deep
 
 
 @functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
                                              "pm_banks", "n_track",
-                                             "n_tenants_max"))
+                                             "n_tenants_max", "n_deep_max"))
 def _run_cell(ops, addrs, gaps, lengths, scheme, sc, *,
-              max_pbe, n_steps, pm_banks, n_track, n_tenants_max):
+              max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
+              n_deep_max):
     # single-cell program: no batch axes, so `lax.switch` lowers to real
     # branches instead of vmap's execute-all-and-select
     return scan_cell(ops, addrs, gaps, lengths, scheme, sc,
                      max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
-                     n_track=n_track, n_tenants_max=n_tenants_max)
+                     n_track=n_track, n_tenants_max=n_tenants_max,
+                     n_deep_max=n_deep_max)
 
 
 @functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
                                              "pm_banks", "n_track",
-                                             "n_tenants_max"))
+                                             "n_tenants_max", "n_deep_max"))
 def _run_grid(ops, addrs, gaps, lengths, schemes, sc, *,
-              max_pbe, n_steps, pm_banks, n_track, n_tenants_max):
+              max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
+              n_deep_max):
     cell = functools.partial(scan_cell, max_pbe=max_pbe, n_steps=n_steps,
                              pm_banks=pm_banks, n_track=n_track,
-                             n_tenants_max=n_tenants_max)
+                             n_tenants_max=n_tenants_max,
+                             n_deep_max=n_deep_max)
     over_cfg = jax.vmap(cell, in_axes=(None, None, None, None, 0, 0))
     over_tr = jax.vmap(over_cfg, in_axes=(0, 0, 0, 0, None, None))
     return over_tr(ops, addrs, gaps, lengths, schemes, sc)
@@ -125,8 +136,8 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
     # static per-tenant stats row count; every config's rows beyond its
     # own n_tenants stay zero, so mixed tenant counts share one program
     n_tenants_max = max(c.n_tenants for c in configs)
-    sc_np, schemes, max_pbe, pm_banks = _stack_configs(configs, max_pbe,
-                                                       n_tenants_max)
+    sc_np, schemes, max_pbe, pm_banks, n_deep = _stack_configs(
+        configs, max_pbe, n_tenants_max)
     single = len(traces) == 1 and len(configs) == 1
     with enable_x64():
         if single:
@@ -139,7 +150,8 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 jnp.asarray(gaps[0]), jnp.asarray(lengths[0]),
                 jnp.asarray(schemes[0]), sc,
                 max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
-                n_track=track_addrs, n_tenants_max=n_tenants_max)
+                n_track=track_addrs, n_tenants_max=n_tenants_max,
+                n_deep_max=n_deep)
             out = tuple(np.asarray(o)[None, None] for o in out)
         else:
             sc = {k: jnp.asarray(v, jnp.float64) for k, v in sc_np.items()}
@@ -147,9 +159,11 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(gaps),
                 jnp.asarray(lengths), jnp.asarray(schemes), sc,
                 max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
-                n_track=track_addrs, n_tenants_max=n_tenants_max)
+                n_track=track_addrs, n_tenants_max=n_tenants_max,
+                n_deep_max=n_deep)
             out = tuple(np.asarray(o) for o in out)
-    runtimes, stats, durable_ver, n_recov, recov_ns, recov_t = out
+    (runtimes, stats, durable_ver, n_recov, recov_ns, recov_t,
+     hop_stats, recov_h) = out
     return [[result_from_stats(
                 float(runtimes[i, j]), stats[i, j],
                 crash_at_ns=configs[j].crash_at_ns,
@@ -158,7 +172,10 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 durable_ver=(durable_ver[i, j][:track_addrs].copy()
                              if track_addrs > 0 else None),
                 n_tenants=configs[j].n_tenants,
-                tenant_recovery=recov_t[i, j])
+                tenant_recovery=recov_t[i, j],
+                n_hops=len(configs[j].hop_pbes),
+                hop_stats=hop_stats[i, j],
+                hop_recovery=recov_h[i, j])
              for j in range(len(configs))] for i in range(len(traces))]
 
 
@@ -166,7 +183,7 @@ def simulate(trace: Trace, config: PCSConfig,
              max_pbe: int | None = None, *,
              bucket: int = _BUCKET, track_addrs: int = 0) -> SimResult:
     """Simulate one (trace, config) pair and return aggregate metrics."""
-    max_pbe = max_pbe or config.n_pbe
+    max_pbe = max_pbe or config.max_hop_pbe
     return simulate_grid([trace], [config], max_pbe=max_pbe,
                          bucket=bucket, track_addrs=track_addrs)[0][0]
 

@@ -20,13 +20,15 @@ from typing import Dict, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import channels, policy
-from repro.core.engine.state import (DIRTY, DRAIN, EMPTY, INF, MachineState,
-                                     S_ACKED, S_COALESCES, S_DRAM_READS,
-                                     S_DURABLE, S_PBCQ_SUM, S_PERSIST_CNT,
-                                     S_PERSIST_SUM, S_PI_DETOURS, S_PM_WRITES,
-                                     S_READ_CNT, S_READ_HITS, S_READ_SUM,
-                                     S_STALL_TIME, S_VICTIM_CNT)
+from repro.core.engine import chain, channels, policy
+from repro.core.engine.state import (DIRTY, DRAIN, EMPTY, INF, H_COALESCES,
+                                     H_FWD_CNT, H_FWD_SUM, H_READ_HITS,
+                                     MachineState, S_ACKED, S_COALESCES,
+                                     S_DRAM_READS, S_DURABLE, S_PBCQ_SUM,
+                                     S_PERSIST_CNT, S_PERSIST_SUM,
+                                     S_PI_DETOURS, S_PM_WRITES, S_READ_CNT,
+                                     S_READ_HITS, S_READ_SUM, S_STALL_TIME,
+                                     S_VICTIM_CNT)
 
 
 class StepCtx(NamedTuple):
@@ -109,24 +111,46 @@ def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
             pbc_start + sc["switch_pipe"] + sc["ow_sw1_pm"])
         resp_fwd = pm_start_fwd + sc["nvm_read"] + ow
 
+        # Read-forwarding checks below hop 1 (switch chain): when hop 1
+        # has no live entry, the packet travels toward PM passing every
+        # deeper switch's PBCS — the shallowest hop holding a visible
+        # live entry serves it.  (A *stale* hop-1 Drain entry keeps its
+        # legacy forward-to-PM path: the deep refinement is skipped.)
+        D = st.dtag.shape[0]
+        if D > 0:
+            dhit0, resp_deep, dlru2, hrow = chain.deep_read(sc, st, addr, t)
+            deep_hit = (sc["n_switches"] >= 2.0) & dhit0 & ~has
+        else:
+            deep_hit = jnp.asarray(False)
+            resp_deep, dlru2, hrow = resp_dir, st.dlru, 0
+
         resp = jnp.where(has, jnp.where(served, resp_pb, resp_fwd),
-                         resp_dir)
+                         jnp.where(deep_hit, resp_deep, resp_dir))
         pm_busy2 = st.pm_busy.at[bank].set(jnp.where(
             has,
             jnp.where(served, st.pm_busy[bank],
                       pm_start_fwd + sc["nvm_r_occ"]),
-            pm_start_dir + sc["nvm_r_occ"]))
+            jnp.where(deep_hit, st.pm_busy[bank],
+                      pm_start_dir + sc["nvm_r_occ"])))
         pbc_busy2 = jnp.where(
             has, channels.pbc_hold(st.pbc_busy, arr, sc["pbc_read_occ"]),
             st.pbc_busy)
         lru2 = st.lru.at[idx].set(jnp.where(has & served, t, st.lru[idx]))
+        dlru3 = jnp.where(deep_hit, dlru2, st.dlru)
+        hop_stats = st.hop_stats.at[0, H_READ_HITS].add(
+            (has & served).astype(jnp.float64))
+        if D > 0:
+            hop_stats = hop_stats.at[hrow + 1, H_READ_HITS].add(
+                deep_hit.astype(jnp.float64))
         stats = st.stats.at[ctx.tenant, S_READ_SUM].add(resp - t)
         stats = stats.at[ctx.tenant, S_READ_CNT].add(1.0)
-        stats = stats.at[ctx.tenant, S_READ_HITS].add((has & served).astype(jnp.float64))
+        stats = stats.at[ctx.tenant, S_READ_HITS].add(
+            ((has & served) | deep_hit).astype(jnp.float64))
         stats = stats.at[ctx.tenant, S_PI_DETOURS].add(has.astype(jnp.float64))
         return st._replace(clock=st.clock.at[ctx.c].set(resp), state=state0,
-                           lru=lru2, pm_busy=pm_busy2, pbc_busy=pbc_busy2,
-                           stats=stats)
+                           lru=lru2, dlru=dlru3, pm_busy=pm_busy2,
+                           pbc_busy=pbc_busy2, stats=stats,
+                           hop_stats=hop_stats)
 
     return jax.lax.switch(jnp.minimum(ctx.scheme, 1), [direct, via_pb], st)
 
@@ -184,10 +208,36 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     pm_ver1 = st.pm_ver.at[jnp.clip(vic_tag, 0, A - 1)].max(
         jnp.where(vic_ok, st.ver[victim_idx], 0))
 
+    # ---- switch chain, victim leg (per-switch persistent buffers) -----
+    # With >= 2 switches in the chain, a hop-1 drain is acked by hop 2's
+    # persistent cells, not by PM: the victim packet travels the chain
+    # FIRST (it leaves the PBC at pbc_start, ahead of the entry write),
+    # so the slot frees at its true downstream ack.  D == 0 (no deep row
+    # allocated anywhere in the grid) skips the chain at trace time.
+    D = st.dtag.shape[0]
+    vic_emit = needs_victim & (pbc_start <= crash)
+    if D > 0:
+        is_chain = sc["n_switches"] >= 2.0
+        one_i = lambda v: jnp.asarray([v], jnp.int32)        # noqa: E731
+        vic_batch = chain.Batch(
+            active=vic_emit[None],
+            addr=vic_tag[None], ver=st.ver[victim_idx][None],
+            owner=st.owner[victim_idx][None], emit=pbc_start[None],
+            ohop=one_i(0), oslot=victim_idx[None].astype(jnp.int32))
+        (dd_v, rows_v, hpbc_v, hstats_v, pmb_v, pmv_v,
+         pmw_v) = chain.forward_chain(
+            sc, ctx.scheme, chain.rows_of(st), st.hpbc, st.hop_stats,
+            vic_batch, st.dd, st.pm_busy, st.pm_ver,
+            n_banks=ctx.n_banks, n_track=ctx.n_track)
+        vic_ack = jnp.where(vic_emit, dd_v[victim_idx], victim_dd)
+        vic_wait = jnp.where(is_chain, vic_ack, victim_dd)
+    else:
+        vic_wait = victim_dd
+
     slot = jnp.where(any_empty, empty_idx,
                      jnp.where(any_dirty, victim_idx, earliest_idx))
     ta = jnp.where(any_empty, pbc_start,
-                   jnp.where(any_dirty, victim_dd,
+                   jnp.where(any_dirty, vic_wait,
                              jnp.maximum(pbc_start, st.dd[earliest_idx])))
     pm_busy1 = st.pm_busy.at[victim_bank].set(jnp.where(
         needs_victim, victim_pm_start + sc["nvm_w_occ"],
@@ -234,7 +284,6 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     # clocks (PBC/PM/core) stay as computed: the packet occupied them
     # until the power died, and the core is dead afterwards anyway.
     commit = t_written <= crash
-    vic_emit = needs_victim & (pbc_start <= crash)
     vslot = ctx.slot_ids == victim_idx
     state5 = jnp.where(commit, state4,
                        jnp.where(vic_emit & vslot, DRAIN, st.state))
@@ -249,6 +298,48 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     pm_busy3 = jnp.where(commit, pm_busy2, pm_busy1)
     pm_writes_inc = (vic_emit.astype(jnp.float64)
                      + jnp.where(commit, policy_writes, 0.0))
+
+    # ---- switch chain, policy-drain leg --------------------------------
+    # The drains the policy just scheduled travel to hop 2 as one batch
+    # (they leave the PBC together at t_written, after the victim leg);
+    # under the chain the PM-path dd/pm values computed above are
+    # per-field replaced by the cascade's downstream acks and landings.
+    if D > 0:
+        P = st.tag.shape[0]
+        # the batch leaves the PBC in LRU order of the drained entries
+        # (the wire order the oracle's drain-down replays)
+        pol_active = drained_now & commit
+        pol_order = jnp.argsort(
+            jnp.where(pol_active, lru3, INF)).astype(jnp.int32)
+        pol_batch = chain.Batch(
+            active=pol_active[pol_order],
+            addr=tag3[pol_order], ver=ver3[pol_order],
+            owner=owner3[pol_order],
+            emit=jnp.zeros((P,), jnp.float64) + t_written,
+            ohop=jnp.zeros((P,), jnp.int32),
+            oslot=pol_order)
+        (dd_c, rows_c, hpbc_c, hstats_c, pmb_c, pmv_c,
+         pmw_c) = chain.forward_chain(
+            sc, ctx.scheme, rows_v, hpbc_v, hstats_v, pol_batch,
+            jnp.where(commit, dd4, dd_v), pmb_v, pmv_v,
+            n_banks=ctx.n_banks, n_track=ctx.n_track)
+        dd5 = jnp.where(is_chain, dd_c, dd5)
+        pm_ver3 = jnp.where(is_chain, pmv_c, pm_ver3)
+        pm_busy3 = jnp.where(is_chain, pmb_c, pm_busy3)
+        pm_writes_inc = jnp.where(is_chain, pmw_v + pmw_c, pm_writes_inc)
+        chain_cols = {k: jnp.where(is_chain, rows_c[k], getattr(st, k))
+                      for k in rows_c}
+        chain_cols["hpbc"] = jnp.where(is_chain, hpbc_c, st.hpbc)
+        hop_stats = jnp.where(is_chain, hstats_c, st.hop_stats)
+    else:
+        chain_cols = {}
+        hop_stats = st.hop_stats
+    # hop-1 telemetry row (chain row 0; maintained at every depth >= 1)
+    hop_stats = hop_stats.at[0, H_FWD_CNT].add(commit.astype(jnp.float64))
+    hop_stats = hop_stats.at[0, H_FWD_SUM].add(
+        jnp.where(commit, t_written - arr, 0.0))
+    hop_stats = hop_stats.at[0, H_COALESCES].add(
+        (is_coalesce & commit).astype(jnp.float64))
 
     stall = jnp.where(is_coalesce, 0.0, ta - pbc_start)
     stats = st.stats.at[ctx.tenant, S_VICTIM_CNT].add(
@@ -274,7 +365,8 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     return st._replace(clock=st.clock.at[ctx.c].set(ack), tag=tag5,
                        state=state5, lru=lru5, dd=dd5, ver=ver5,
                        owner=owner5, aver=aver3, pm_ver=pm_ver3,
-                       pm_busy=pm_busy3, pbc_busy=pbc_free, stats=stats)
+                       pm_busy=pm_busy3, pbc_busy=pbc_free, stats=stats,
+                       hop_stats=hop_stats, **chain_cols)
 
 
 def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
@@ -351,21 +443,26 @@ def recovery_snapshot(st: MachineState, scheme, sc, slot_active,
 
     Dispatches over the traced scheme like the op handlers: NoPB has no
     PBEs, so its durable state is exactly ``pm_ver`` and recovery is
-    free; PB/PB_RF drain-all every surviving Dirty/Drain entry
-    (:func:`policy.surviving_entries`), merging the survivors' versions
-    into the durable-version vector.  Returns
+    free; PB/PB_RF drain-all the *union* of surviving Dirty/Drain
+    entries across every hop of the switch chain — a crash freezes each
+    hop independently, and durability per address is the newest version
+    held at any surviving hop (or PM).  Returns
     ``(durable_ver (A,) i32, n_recovered f64, recovery_ns f64,
-    recovered_per_tenant (T,) f64)`` — the last attributes each
-    surviving entry to its owning tenant (recovery fairness, ROADMAP).
+    recovered_per_tenant (T,) f64, recovered_per_hop (D+1,) f64)`` —
+    the last two attribute each surviving entry to its owning tenant
+    (recovery fairness, ROADMAP) and to the hop holding it (the chain
+    depth figure).
     """
     crash = sc["crash_at"]
     A = st.pm_ver.shape[0]
     T = st.stats.shape[0]
+    D = st.dtag.shape[0]
     zero = jnp.asarray(0.0, jnp.float64)
     zero_t = jnp.zeros((T,), jnp.float64)
+    zero_h = jnp.zeros((D + 1,), jnp.float64)
 
     def nopb(_):
-        return st.pm_ver, zero, zero, zero_t
+        return st.pm_ver, zero, zero, zero_t, zero_h
 
     def pb(_):
         surviving = policy.surviving_entries(st.state, st.dd, slot_active,
@@ -373,9 +470,36 @@ def recovery_snapshot(st: MachineState, scheme, sc, slot_active,
         in_range = surviving & (st.tag >= 0) & (st.tag < n_track)
         dv = st.pm_ver.at[jnp.clip(st.tag, 0, A - 1)].max(
             jnp.where(in_range, st.ver, 0))
-        n, cost = policy.recovery_drain_cost(sc, n_banks, st.tag, surviving)
         per_t = zero_t.at[jnp.clip(st.owner, 0, T - 1)].add(
             surviving.astype(jnp.float64))
-        return dv, n, cost, per_t
+        B = n_banks
+        banks = jnp.where(surviving, st.tag % B, 0)
+        per_bank = jnp.zeros((B,), jnp.float64).at[banks].add(
+            surviving.astype(jnp.float64))
+        n = jnp.sum(surviving.astype(jnp.float64))
+        per_hop = zero_h.at[0].set(n)
+        slot_ids = jnp.arange(st.tag.shape[0])
+        for j in range(D):
+            row_live = (float(j) + 2.0) <= sc["n_switches"]
+            sa = slot_ids < sc["deep_pbe"][j].astype(jnp.int32)
+            # same survival rule per hop: Dirty cells persist; a Drain
+            # entry survives iff its downstream ack is lost with the
+            # power (placements are commit-gated, so wt <= crash always
+            # holds — kept as written defence)
+            surv_j = (row_live & sa & (st.dwt[j] <= crash)
+                      & ((st.dstate[j] == DIRTY)
+                         | ((st.dstate[j] == DRAIN) & (st.ddd[j] > crash))))
+            in_r = surv_j & (st.dtag[j] >= 0) & (st.dtag[j] < n_track)
+            dv = dv.at[jnp.clip(st.dtag[j], 0, A - 1)].max(
+                jnp.where(in_r, st.dver[j], 0))
+            per_t = per_t.at[jnp.clip(st.downer[j], 0, T - 1)].add(
+                surv_j.astype(jnp.float64))
+            bj = jnp.where(surv_j, st.dtag[j] % B, 0)
+            per_bank = per_bank.at[bj].add(surv_j.astype(jnp.float64))
+            nj = jnp.sum(surv_j.astype(jnp.float64))
+            per_hop = per_hop.at[j + 1].set(nj)
+        n_total = jnp.sum(per_hop)
+        cost = policy.recovery_burst_cost(sc, per_bank, n_total)
+        return dv, n_total, cost, per_t, per_hop
 
     return jax.lax.switch(jnp.minimum(scheme, 1), [nopb, pb], None)

@@ -138,28 +138,24 @@ def surviving_entries(state, dd, slot_active, crash_at):
                           ((state == DRAIN) & (dd > crash_at)))
 
 
-def recovery_drain_cost(sc, n_banks, tag, surviving):
-    """Drain-all cost of the Section V-D4 recovery pass.
+def recovery_burst_cost(sc, per_bank, n):
+    """Drain-all burst latency over aggregated per-bank survivor counts.
 
-    Every surviving entry is treated as Dirty and re-drained; drains
-    sharing a PM bank serialize at the bank's write occupancy and
-    overlap across banks (the same burst model as
-    :func:`drain_threshold_preset`).  Returns (n_entries, latency_ns);
-    latency is the time until the *last* re-drain is acked back at the
+    Drains sharing a PM bank serialize at the bank's write occupancy
+    and overlap across banks (the same burst model as
+    :func:`drain_threshold_preset`); under a switch chain the counts
+    aggregate the *union* of surviving entries across every hop, all
+    re-drained in one recovery burst over the hop-1 drain path (the
+    conservative longest path — deeper hops are strictly closer to PM).
+    Latency is the time until the last re-drain is acked back at the
     switch, zero when nothing survived.
     """
-    B = n_banks
-    banks = jnp.where(surviving, tag % B, 0)
-    per_bank = jnp.zeros((B,), jnp.float64).at[banks].add(
-        surviving.astype(jnp.float64))
-    n = jnp.sum(surviving.astype(jnp.float64))
     worst = jnp.max(per_bank)
-    cost = jnp.where(
+    return jnp.where(
         n > 0,
         (worst - 1.0) * sc["nvm_w_occ"] + sc["nvm_write"]
         + 2.0 * sc["ow_sw1_pm"],
         0.0)
-    return n, cost
 
 
 def drain_threshold_preset(sc, n_banks, slot_active, t_written,

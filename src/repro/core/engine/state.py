@@ -6,11 +6,15 @@ LRU stamps, in-flight drain-ack times), the resource next-free times
 (PM banks, PBC) and the statistics accumulators behind Figs. 1 and 5-8.
 
 Every latency parameter, the live PBE bound, the drain thresholds, the
-scheme id *and the tenant count* are traced scalars (see
+scheme id, the tenant count *and the switch-chain depth with its
+per-hop capacities* are traced scalars/vectors (see
 :func:`scalars_from_config`), so a full {trace x config x scheme x
-tenant-count} grid lowers to a single XLA program.  Only array shapes
-stay static: core count, ``max_pbe``, bank count, the scan length and
-the per-tenant stats row count ``n_tenants_max``.
+tenant-count x depth} grid lowers to a single XLA program.  Only array
+shapes stay static: core count, ``max_pbe``, bank count, the scan
+length, the per-tenant stats row count ``n_tenants_max`` and the
+deep-hop row count ``n_deep_max`` (grid max depth minus one; 0 skips
+the chain code entirely, keeping depth-1 programs byte-identical to
+the pre-chain engine).
 
 Statistics are accumulated per tenant — ``stats`` is ``(T, N_STATS)``
 with ``T = n_tenants_max`` — and the global :class:`SimResult` is the
@@ -25,7 +29,8 @@ from typing import Dict, NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.params import PBEState, PCSConfig, tenant_drain_counts
+from repro.core.params import (PBEState, PCSConfig, hop_drain_counts,
+                               tenant_drain_counts)
 
 INF = 1e30
 
@@ -45,6 +50,15 @@ S_PBCQ_SUM = 11      # total PBC queueing wait (arrival -> service start)
 S_ACKED = 12         # persists whose ack reached the core before the crash
 S_DURABLE = 13       # persists whose payload survives crash + recovery
 N_STATS = 14
+
+# per-switch (hop) statistics row layout — ``MachineState.hop_stats`` is
+# ``(Hmax, N_HOP_STATS)`` with row h = switch h+1 of the chain
+H_FWD_SUM = 0        # total commit latency of packets written into this hop
+H_FWD_CNT = 1        # packets committed into this hop's PB (alloc+coalesce)
+H_COALESCES = 2      # arrivals absorbed into an existing Dirty entry
+H_BYPASS = 3         # arrivals that found the hop full and travelled deeper
+H_READ_HITS = 4      # reads served from this hop's PB (read forwarding)
+N_HOP_STATS = 5
 
 EMPTY = int(PBEState.EMPTY)
 DIRTY = int(PBEState.DIRTY)
@@ -79,12 +93,29 @@ class MachineState(NamedTuple):
     blocked: jnp.ndarray   # (C,)  bool blocked at barrier
     bcount: jnp.ndarray    # (T,)  i32  per-tenant barrier arrival counts
     stats: jnp.ndarray     # (T, N_STATS) f64 per-tenant accumulators
+    # ---- deep-hop PB columns (the switch-level axis, D = n_deep_max) ----
+    # Switch j+2 of the chain owns row j of each array; the flat columns
+    # above stay the first (tenant-facing) switch, so depth-1 configs run
+    # byte-identical code (D == 0 skips the chain entirely at trace time).
+    dtag: jnp.ndarray      # (D, P) i32  deep-hop TAT tags
+    dstate: jnp.ndarray    # (D, P) i32  deep-hop ST states
+    dlru: jnp.ndarray      # (D, P) f64  deep-hop LRU stamps
+    ddd: jnp.ndarray       # (D, P) f64  deep-hop in-flight forward-ack times
+    dver: jnp.ndarray      # (D, P) i32  deep-hop held persist versions
+    downer: jnp.ndarray    # (D, P) i32  owning tenant (recovery attribution)
+    dwt: jnp.ndarray       # (D, P) f64  commit time into this hop's cells
+                           #             (crash gate + read visibility)
+    hpbc: jnp.ndarray      # (D,)   f64  deep-hop PBC / inter-switch channel
+                           #             next-free times
+    hop_stats: jnp.ndarray  # (Hmax, N_HOP_STATS) f64 per-switch telemetry
 
 
 def init_state(n_cores: int, max_pbe: int, pm_banks: int,
-               n_track: int = 0, n_tenants_max: int = 1) -> MachineState:
+               n_track: int = 0, n_tenants_max: int = 1,
+               n_deep_max: int = 0) -> MachineState:
     A = max(n_track, 1)
     T = max(n_tenants_max, 1)
+    D = max(n_deep_max, 0)
     return MachineState(
         clock=jnp.zeros((n_cores,), jnp.float64),
         ptr=jnp.zeros((n_cores,), jnp.int32),
@@ -101,6 +132,15 @@ def init_state(n_cores: int, max_pbe: int, pm_banks: int,
         blocked=jnp.zeros((n_cores,), bool),
         bcount=jnp.zeros((T,), jnp.int32),
         stats=jnp.zeros((T, N_STATS), jnp.float64),
+        dtag=jnp.full((D, max_pbe), -1, jnp.int32),
+        dstate=jnp.full((D, max_pbe), EMPTY, jnp.int32),
+        dlru=jnp.zeros((D, max_pbe), jnp.float64),
+        ddd=jnp.zeros((D, max_pbe), jnp.float64),
+        dver=jnp.zeros((D, max_pbe), jnp.int32),
+        downer=jnp.zeros((D, max_pbe), jnp.int32),
+        dwt=jnp.zeros((D, max_pbe), jnp.float64),
+        hpbc=jnp.zeros((D,), jnp.float64),
+        hop_stats=jnp.zeros((D + 1, N_HOP_STATS), jnp.float64),
     )
 
 
@@ -148,6 +188,15 @@ class SimResult:
     # (row sum == recovery_entries); recovery latency stays global (the
     # drain-all pass is one shared burst over the whole PB).
     tenant_recovery: "np.ndarray | None" = None  # (n_tenants,) i64 or None
+    # ---- switch-chain telemetry (pooling topologies) -------------------
+    # ``hop_stats`` row h = switch h+1 (N_HOP_STATS columns: commit
+    # latency sum/count, coalesces, bypasses, read hits); ``hop_recovery``
+    # = surviving PBEs per switch at the crash instant (sum over hops ==
+    # recovery_entries).  ``None`` for NoPB / depth-0 runs, which have no
+    # persistent hops.
+    n_hops: int = 0
+    hop_stats: "np.ndarray | None" = None     # (n_hops, N_HOP_STATS) f64
+    hop_recovery: "np.ndarray | None" = None  # (n_hops,) i64 or None
 
     @property
     def read_hit_rate(self) -> float:
@@ -161,6 +210,26 @@ class SimResult:
     def persisted_fraction(self) -> float:
         """Fraction of issued persists durable after crash + recovery."""
         return self.durable_persists / max(self.persists, 1)
+
+    def hop_results(self) -> "list[dict]":
+        """Per-switch view of the chain: one dict per hop.
+
+        ``fwd_lat_ns`` (mean commit latency into the hop) follows the
+        PR 3 NaN convention: a hop that saw zero traffic has *no* mean
+        latency, not a 0.0 ns one — figure scripts must skip NaN rows.
+        """
+        if self.hop_stats is None:
+            return []
+        recov = self.hop_recovery
+        return [dict(
+                    hop=h + 1,
+                    fwd_lat_ns=_mean(row[H_FWD_SUM], row[H_FWD_CNT]),
+                    commits=int(row[H_FWD_CNT]),
+                    coalesces=int(row[H_COALESCES]),
+                    bypasses=int(row[H_BYPASS]),
+                    read_hits=int(row[H_READ_HITS]),
+                    recovered=(int(recov[h]) if recov is not None else 0))
+                for h, row in enumerate(np.asarray(self.hop_stats))]
 
     def tenant_results(self) -> "list[SimResult]":
         """Per-tenant view: one SimResult built from each stats row.
@@ -194,7 +263,10 @@ def result_from_stats(runtime: float, stats: np.ndarray, *,
                       recovery_ns: float = 0.0,
                       durable_ver: "np.ndarray | None" = None,
                       n_tenants: int = 1,
-                      tenant_recovery: "np.ndarray | None" = None
+                      tenant_recovery: "np.ndarray | None" = None,
+                      n_hops: int = 0,
+                      hop_stats: "np.ndarray | None" = None,
+                      hop_recovery: "np.ndarray | None" = None
                       ) -> SimResult:
     """Build a SimResult from a stats vector or per-tenant stats matrix.
 
@@ -230,11 +302,17 @@ def result_from_stats(runtime: float, stats: np.ndarray, *,
         tenant_recovery=(
             np.asarray(tenant_recovery, np.int64)[:n_tenants].copy()
             if n_tenants > 1 and tenant_recovery is not None else None),
+        n_hops=n_hops,
+        hop_stats=(np.asarray(hop_stats, np.float64)[:n_hops].copy()
+                   if n_hops > 0 and hop_stats is not None else None),
+        hop_recovery=(np.asarray(hop_recovery, np.int64)[:n_hops].copy()
+                      if n_hops > 0 and hop_recovery is not None else None),
     )
 
 
 def scalars_from_config(cfg: PCSConfig,
-                        n_tenants_max: int | None = None) -> Dict[str, "float | np.ndarray"]:
+                        n_tenants_max: int | None = None,
+                        n_deep_max: int = 0) -> Dict[str, "float | np.ndarray"]:
     """Lower one config to the dict of traced latency/policy scalars.
 
     The :class:`~repro.core.params.PBPolicy` on the config lowers here
@@ -249,6 +327,26 @@ def scalars_from_config(cfg: PCSConfig,
     lat = cfg.latency
     pol = cfg.policy
     T = max(n_tenants_max or cfg.n_tenants, 1)
+    # per-hop chain lowering: row j describes switch j+2 (deep hops only;
+    # hop 1 keeps the legacy scalars).  Rows past the config's own depth
+    # lower to size 0 — structurally inactive in a mixed-depth grid.
+    D1 = max(n_deep_max, 1)
+    hop_pbes = cfg.hop_pbes
+    deep_pbe = np.zeros((D1,), np.float64)
+    deep_thr = np.ones((D1,), np.float64)
+    deep_pre = np.zeros((D1,), np.float64)
+    # per-hop CACTI-scaled tag/data lookup latencies: a small deep hop
+    # must not be billed at hop 1's capacity-scaled cost (rows past the
+    # config's depth keep a finite filler; they are never selected)
+    deep_tag = np.full((D1,), lat.pb_tag_ns, np.float64)
+    deep_data = np.full((D1,), lat.pb_data_ns, np.float64)
+    for j, (n_h, (thr_h, pre_h)) in enumerate(
+            zip(hop_pbes[1:], hop_drain_counts(pol, hop_pbes)[1:])):
+        if j < D1:
+            deep_pbe[j] = float(n_h)
+            deep_thr[j], deep_pre[j] = float(thr_h), float(pre_h)
+            deep_tag[j] = lat.pb_tag_ns_for(n_h)
+            deep_data[j] = lat.pb_data_ns_for(n_h)
     quota = np.full((T,), INF, np.float64)
     share = np.full((T,), INF, np.float64)
     t_thr = np.full((T,), float(cfg.threshold_count), np.float64)
@@ -286,12 +384,22 @@ def scalars_from_config(cfg: PCSConfig,
         fwd_margin=lat.fwd_margin_ns,
         switch_pipe=lat.switch_pipe_ns,
         ow_cpu_pm=lat.oneway_cpu_pm(cfg.n_switches),
-        # n_switches == 0 is only constructible with NOPB (PCSConfig
-        # rejects a PB with no switch to live in); the fallbacks below
-        # just keep the never-selected PB branch of the vmapped
-        # lax.switch finite.
-        ow_cpu_sw1=lat.oneway_cpu_sw1() if cfg.n_switches > 0 else lat.cpu_link_ns,
-        ow_sw1_pm=lat.oneway_sw1_pm(cfg.n_switches) if cfg.n_switches > 0 else 0.0,
+        # the path helpers are total in the depth (0 included), so no
+        # special-casing: at depth 0 (NOPB direct attach — PCSConfig
+        # rejects a PB with no switch to live in) the "first hop" is the
+        # CPU link and the drain path is 0, keeping the never-selected
+        # PB branch of the vmapped lax.switch finite.
+        ow_cpu_sw1=lat.oneway_cpu_sw1(cfg.n_switches),
+        ow_sw1_pm=lat.oneway_sw1_pm(cfg.n_switches),
+        # ---- switch-chain lowering (per-switch persistent buffers) ----
+        n_switches=float(cfg.n_switches),
+        hop_ns=lat.hop_ns(),
+        link_ns=lat.link_ns,
+        deep_pbe=deep_pbe,        # (D1,) switch j+2's PBE capacity
+        deep_thr=deep_thr,        # (D1,) switch j+2's drain threshold count
+        deep_pre=deep_pre,        # (D1,) switch j+2's drain preset count
+        deep_tag=deep_tag,        # (D1,) switch j+2's tag lookup latency
+        deep_data=deep_data,      # (D1,) switch j+2's data access latency
         # power-loss instant; INF (the engine's finite infinity) = never
         crash_at=min(cfg.crash_at_ns, INF),
     )

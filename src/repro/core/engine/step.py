@@ -44,16 +44,20 @@ def compile_count() -> int:
 
 def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
               max_pbe: int, n_steps: int, pm_banks: int, n_track: int = 0,
-              n_tenants_max: int = 1, return_state: bool = False):
+              n_tenants_max: int = 1, n_deep_max: int = 0,
+              return_state: bool = False):
     """Simulate one (trace, config) cell.
 
     Returns ``(runtime, stats, durable_ver, n_recovered, recovery_ns,
-    recovered_per_tenant)``, plus the final :class:`MachineState` when
-    ``return_state`` is set
+    recovered_per_tenant, hop_stats, recovered_per_hop)``, plus the
+    final :class:`MachineState` when ``return_state`` is set
     (used by the padding-invariant tests).  ``scheme`` and every entry
     of ``sc`` are traced scalars; only array shapes (core count C,
     ``max_pbe``, ``pm_banks``, ``n_steps``, ``n_track``,
-    ``n_tenants_max``) are static.
+    ``n_tenants_max``, ``n_deep_max``) are static.  ``n_deep_max`` is
+    the deep-hop row count of the switch chain (grid max depth minus
+    one); 0 skips the chain code entirely at trace time, so depth-1
+    grids stay byte-identical to the pre-chain engine.
 
     Tenancy: ``sc["n_tenants"]`` (traced) partitions the *live* cores
     into contiguous balanced groups — core ``c`` belongs to tenant
@@ -125,14 +129,16 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
                             bcount=bcount), None
 
     final, _ = jax.lax.scan(
-        step, init_state(C, max_pbe, pm_banks, n_track, n_tenants_max),
+        step, init_state(C, max_pbe, pm_banks, n_track, n_tenants_max,
+                         n_deep_max),
         None, length=n_steps)
     # a crashed run ends at the power loss: dead cores advanced their
     # clocks through never-executed ops, so cap at the crash instant
     runtime = jnp.max(jnp.where(final.clock < INF * 0.5,
                                 jnp.minimum(final.clock, sc["crash_at"]),
                                 0.0))
-    durable_ver, n_recov, recov_ns, recov_t = recovery_snapshot(
+    durable_ver, n_recov, recov_ns, recov_t, recov_h = recovery_snapshot(
         final, scheme, sc, slot_active, pm_banks, n_track)
-    out = (runtime, final.stats, durable_ver, n_recov, recov_ns, recov_t)
+    out = (runtime, final.stats, durable_ver, n_recov, recov_ns, recov_t,
+           final.hop_stats, recov_h)
     return out + (final,) if return_state else out

@@ -193,6 +193,23 @@ class PBPolicy:
                     "shared buffer cannot honour them")
 
 
+def hop_drain_counts(policy: PBPolicy,
+                     hop_pbes: Tuple[int, ...]) -> List[Tuple[int, int]]:
+    """Per-hop (threshold_count, preset_count) of a chained PB_RF drain.
+
+    Hop ``h``'s drain-down anchors on *its own* PBE capacity with the
+    policy's global fill fractions.  Single home of the per-hop count
+    rule: the engine lowering (``engine.state.scalars_from_config``) and
+    the untimed oracle (``semantics.PersistentBuffer``) both call it, so
+    the traced and scalar forms cannot drift.  Deep hops (h >= 2) run
+    the pure threshold/preset rule — the keep-one-free low-water
+    heuristic stays at hop 1, where it protects the tenant-facing PI
+    front.
+    """
+    return [(threshold_count(n, policy.drain.threshold),
+             preset_count(n, policy.drain.preset)) for n in hop_pbes]
+
+
 def tenant_drain_counts(policy: PBPolicy, n_pbe: int,
                         n_tenants: int) -> List[Tuple[int, int]]:
     """Per-tenant (threshold_count, preset_count) of a tenant-scoped drain.
@@ -280,19 +297,43 @@ class LatencyProfile:
         return self.pb_data_ns * math.sqrt(max(n_pbe, 1) / 16.0)
 
     # -- path helpers (chain of `n_sw` switches between CPU and PM) --------
+    # All three are total functions of the depth, well-defined at n_sw == 0
+    # (direct-attached PM): the first "hop" degenerates to the CPU link and
+    # the drain path to nothing, so the composition identity
+    # ``oneway_cpu_pm(n) == oneway_cpu_sw1(n) + oneway_sw1_pm(n)`` holds for
+    # EVERY n >= 0 (tests/test_latency_profile.py pins it) and the engine
+    # lowering needs no depth special-casing.
     def oneway_cpu_pm(self, n_sw: int) -> float:
         """CPU -> PM through a chain of n_sw switches (n_sw may be 0)."""
         if n_sw == 0:
             return self.cpu_link_ns
         return (n_sw + 1) * self.link_ns + n_sw * self.switch_pipe_ns
 
-    def oneway_cpu_sw1(self) -> float:
-        """CPU -> through the first switch (where the PB lives)."""
+    def oneway_cpu_sw1(self, n_sw: int = 1) -> float:
+        """CPU -> through the first switch (where the PB lives).
+
+        At depth 0 there is no switch: the "first hop" is the direct CPU
+        link to the PM controller, and :meth:`oneway_sw1_pm` is 0.
+        """
+        if n_sw == 0:
+            return self.cpu_link_ns
         return self.link_ns + self.switch_pipe_ns
 
     def oneway_sw1_pm(self, n_sw: int) -> float:
-        """First switch -> PM (the drain path)."""
+        """First switch -> PM (the single-PB drain path); 0 at depth 0."""
+        if n_sw == 0:
+            return 0.0
         return n_sw * self.link_ns + (n_sw - 1) * self.switch_pipe_ns
+
+    def hop_ns(self) -> float:
+        """One inter-switch segment, one way (switch h -> switch h+1).
+
+        The chained-PB forward path: a drain from hop h's PB travels one
+        link plus one switch-pipeline traversal to reach hop h+1's PBC.
+        ``oneway_sw1_pm(n) == (n-1) * hop_ns() + link_ns`` for n >= 1 —
+        the chain decomposition of the drain path.
+        """
+        return self.link_ns + self.switch_pipe_ns
 
 
 @dataclasses.dataclass(frozen=True)
@@ -302,6 +343,15 @@ class PCSConfig:
     scheme: Scheme = Scheme.PB
     n_pbe: int = 16              # persistent buffer entries (paper Table I)
     n_switches: int = 1          # CXL switches between CPU and PM
+    # Per-switch PBE capacities of the chained pooling topology: entry h
+    # is the PB size of switch h+1 (hop 1 = the tenant-facing ack point,
+    # deeper hops = the pooling chain).  ``None`` = ``n_pbe`` at every
+    # hop.  When set, ``n_pbe`` is synced from entry 0 (one source of
+    # truth, like the policy <-> legacy-float shim).  Lowered to a
+    # *traced* per-hop vector, so a mixed-depth / mixed-capacity chain
+    # sweep stays one XLA program; only the grid-wide max hop count and
+    # max capacity are static shapes.
+    pbe_per_hop: Optional[Tuple[int, ...]] = None
     n_cores: int = 8             # paper: 8-core OoO
     # Independent hosts (tenants) sharing the switch's persistence domain:
     # the trace's live cores are partitioned into ``n_tenants`` contiguous
@@ -343,6 +393,21 @@ class PCSConfig:
                 f"scheme {self.scheme.name} requires n_switches >= 1: the "
                 "persistent buffer lives in the first CXL switch (use "
                 "Scheme.NOPB for the switchless direct-attach baseline)")
+        if self.pbe_per_hop is not None:
+            if self.scheme == Scheme.NOPB:
+                raise ValueError(
+                    "pbe_per_hop is meaningless under NOPB: a volatile "
+                    "switch chain has no persistent buffers")
+            q = tuple(int(x) for x in self.pbe_per_hop)
+            if len(q) != self.n_switches:
+                raise ValueError(
+                    f"pbe_per_hop has {len(q)} entries for "
+                    f"n_switches={self.n_switches}; need one per switch")
+            if any(x < 1 for x in q):
+                raise ValueError("pbe_per_hop entries must be >= 1")
+            object.__setattr__(self, "pbe_per_hop", q)
+            # hop 1's capacity is the legacy n_pbe (one source of truth)
+            object.__setattr__(self, "n_pbe", q[0])
         if not 1 <= self.n_tenants <= self.n_cores:
             raise ValueError("require 1 <= n_tenants <= n_cores")
         if not (0.0 < self.drain_preset <= self.drain_threshold <= 1.0):
@@ -367,6 +432,20 @@ class PCSConfig:
     def with_crash(self, crash_at_ns: float) -> "PCSConfig":
         """Same system, power lost at ``crash_at_ns`` (Section V-D4)."""
         return dataclasses.replace(self, crash_at_ns=crash_at_ns)
+
+    @property
+    def hop_pbes(self) -> Tuple[int, ...]:
+        """PBE capacity per switch of the chain (empty for NOPB/depth 0)."""
+        if self.scheme == Scheme.NOPB or self.n_switches == 0:
+            return ()
+        if self.pbe_per_hop is not None:
+            return self.pbe_per_hop
+        return (self.n_pbe,) * self.n_switches
+
+    @property
+    def max_hop_pbe(self) -> int:
+        """Largest PB array anywhere in the chain (static shape bound)."""
+        return max(self.hop_pbes, default=self.n_pbe)
 
     @property
     def threshold_count(self) -> int:

@@ -25,7 +25,7 @@ import dataclasses
 import enum
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.params import (PBEState, PCSConfig, Scheme,
+from repro.core.params import (PBEState, PCSConfig, Scheme, hop_drain_counts,
                                rf_drain_count, tenant_drain_counts)
 
 
@@ -108,6 +108,24 @@ class PersistentBuffer:
             if self.policy.drain.per_tenant else None)
         self.pm = pm if pm is not None else PersistentMemory()
         self.entries: List[PBEntry] = []
+        # Switch chain (pooling topologies): ``entries`` is hop 1, the
+        # tenant-facing ack point; every deeper switch owns one list in
+        # ``hops`` (switch s = ``hops[s - 2]``), with its own capacity
+        # and threshold/preset drain counts — the untimed twin of the
+        # engine's deep-hop columns.  A hop-1 drain forwards its payload
+        # into hop 2 synchronously (:meth:`_forward_batch`); the
+        # DRAIN_SENT/pm_ack event protocol is unchanged and models the
+        # downstream ack that frees the hop-1 entry.
+        self._hop_pbes = config.hop_pbes
+        self.n_hops = len(self._hop_pbes)
+        self.hops: List[List[PBEntry]] = [
+            [] for _ in self._hop_pbes[1:]]
+        self._hop_drain = (hop_drain_counts(self.policy, self._hop_pbes)
+                          if self.n_hops else [])
+        # per-switch telemetry rows (engine twin: MachineState.hop_stats)
+        self.hop_counts: List[Dict[str, int]] = [
+            {"commits": 0, "coalesces": 0, "bypasses": 0, "read_hits": 0}
+            for _ in self._hop_pbes]
         self._lru_clock = 0
         self._seq = 0
         self._version_clock = 0
@@ -121,7 +139,8 @@ class PersistentBuffer:
         self.stats = {
             "persists": 0,
             "acks": 0,
-            "drains": 0,
+            "drains": 0,       # hop-1 drain emissions (DRAIN_SENT events)
+            "pm_writes": 0,    # write packets that reached the PM device
             "coalesces": 0,
             "read_hits": 0,
             "read_misses": 0,
@@ -206,11 +225,18 @@ class PersistentBuffer:
 
     # --------------------------------------------------------------- drain
     def _start_drain(self, e: PBEntry, events: List[Event],
-                     tenant: int = 0) -> None:
-        """Dirty -> Drain; emit the write packet toward PM (Section V-B).
+                     tenant: int = 0, *, forward: bool = True) -> tuple:
+        """Dirty -> Drain; emit the write packet downstream (Section V-B).
 
         ``tenant`` is the tenant whose request *triggered* the drain
         (victim eviction / policy drain-down) — the one billed for it.
+        With a single switch (or ``forward=False``, the recovery
+        drain-all) the payload goes straight to PM; in a chain the
+        caller forwards the returned packet into hop 2 via
+        :meth:`_forward_batch` — batched with the other drains of the
+        same trigger, mirroring the engine's cascade batches.  Either
+        way the entry is freed by the downstream ack the driver delivers
+        through :meth:`pm_ack`.
         """
         assert e.state == PBEState.DIRTY
         e.state = PBEState.DRAIN
@@ -219,9 +245,85 @@ class PersistentBuffer:
         self._tstats(tenant)["drains"] += 1
         events.append(Event(EventKind.DRAIN_SENT, e.addr, e.version,
                             self._next_seq()))
-        # The PM device receives the write; its ack is delivered later by
-        # the caller via pm_ack() (possibly delayed / after a crash).
-        self.pm.write(e.addr, e.version, e.data)
+        if self.config.n_switches <= 1 or not forward:
+            # The PM device receives the write; its ack is delivered
+            # later by the caller via pm_ack() (possibly delayed).
+            self.pm.write(e.addr, e.version, e.data)
+            self.stats["pm_writes"] += 1
+            self._tstats(tenant)["pm_writes"] += 1
+        return (e.addr, e.version, e.data, e.tenant)
+
+    def _forward_batch(self, packets: List[tuple], s: int,
+                       tenant: int) -> None:
+        """Commit a drain batch into switch ``s``'s PB, then run its drain.
+
+        The untimed twin of ``engine.chain._place``: packets (all with
+        distinct addresses) coalesce into a live Dirty entry, else take
+        an Empty slot, else *bypass* the full hop and continue toward
+        PM; afterwards the hop's own drain policy runs once over the
+        settled table (PB forwards everything, PB_RF drains LRU Dirty
+        entries down to its per-hop preset).  Chain-internal acks are
+        synchronous in the untimed model, so a forwarded entry frees
+        immediately — matching the engine at slot boundaries, where
+        every cascade ack has long landed.  ``tenant`` is the trigger
+        billed for PM writes (engine twin: ``ctx.tenant``).
+        """
+        if not packets:
+            return
+        if s > self.config.n_switches:
+            ts = self._tstats(tenant)
+            for (addr, ver, data, _owner) in packets:
+                self.pm.write(addr, ver, data)
+                self.stats["pm_writes"] += 1
+                ts["pm_writes"] += 1
+            return
+        hop = self.hops[s - 2]
+        cap = self._hop_pbes[s - 1]
+        hc = self.hop_counts[s - 1]
+        bypass: List[tuple] = []
+        for (addr, ver, data, owner) in packets:
+            e = next((x for x in hop
+                      if x.addr == addr and x.state == PBEState.DIRTY),
+                     None)
+            if e is not None:
+                # same-line versions travel in order, so a coalesce
+                # always installs a newer version
+                assert ver >= e.version
+                e.version, e.data, e.tenant = ver, data, owner
+                self._touch(e)
+                hc["commits"] += 1
+                hc["coalesces"] += 1
+                continue
+            slot = next((x for x in hop if x.state == PBEState.EMPTY),
+                        None)
+            if slot is None and len(hop) < cap:
+                slot = PBEntry(addr=-1, version=-1, data=None,
+                               state=PBEState.EMPTY, lru=0)
+                hop.append(slot)
+            if slot is None:
+                hc["bypasses"] += 1
+                bypass.append((addr, ver, data, owner))
+                continue
+            slot.addr, slot.version, slot.data = addr, ver, data
+            slot.state, slot.tenant = PBEState.DIRTY, owner
+            self._touch(slot)
+            hc["commits"] += 1
+        # the hop's own drain-down, once per batch (engine lockstep)
+        dirty = [x for x in hop if x.state == PBEState.DIRTY]
+        if self.config.scheme == Scheme.PB:
+            k = len(dirty)          # drain-immediate: store and forward
+        else:
+            thr, pre = self._hop_drain[s - 1]
+            # deep hops run the pure threshold/preset rule — no
+            # keep-one-free heuristic (it protects the hop-1 PI front)
+            k = rf_drain_count(len(dirty), 0, thr, pre,
+                               low_water=0, empty_slack=-1)
+        out: List[tuple] = []
+        for victim in sorted(dirty, key=lambda x: x.lru)[:k]:
+            out.append((victim.addr, victim.version, victim.data,
+                        victim.tenant))
+            victim.state = PBEState.EMPTY     # synchronous downstream ack
+        self._forward_batch(bypass + out, s + 1, tenant)
 
     def _rf_drain_down(self, events: List[Event], tenant: int = 0) -> None:
         """PB_RF drain policy, shared with the timed engine.
@@ -254,11 +356,16 @@ class PersistentBuffer:
                         self.config.preset_count)
         k = rf_drain_count(dirty, empty, thr, pre,
                            pol.low_water_drains, pol.empty_slack)
+        packets = []
         for _ in range(k):
             victim = self._lru_dirty(owner=scope)
             if victim is None:
                 break
-            self._start_drain(victim, events, tenant)
+            packets.append(self._start_drain(victim, events, tenant))
+        # chain: the drain-down set travels to hop 2 as ONE batch (the
+        # engine's policy-drain leg); no-op with a single switch
+        if self.config.n_switches >= 2:
+            self._forward_batch(packets, 2, tenant)
 
     def _stall(self, addr: int, data: object, tenant: int, version: int,
                events: List[Event], retry: bool,
@@ -321,7 +428,9 @@ class PersistentBuffer:
             # Volatile switch: the persist round-trips to PM.
             self.pm.write(addr, version, data)
             self.stats["acks"] += 1
+            self.stats["pm_writes"] += 1
             ts["acks"] += 1
+            ts["pm_writes"] += 1
             events.append(Event(EventKind.PERSIST_ACK, addr, version,
                                 self._next_seq()))
             return events
@@ -338,6 +447,8 @@ class PersistentBuffer:
                 self.stats["acks"] += 1
                 ts["coalesces"] += 1
                 ts["acks"] += 1
+                self.hop_counts[0]["commits"] += 1
+                self.hop_counts[0]["coalesces"] += 1
                 events.append(Event(EventKind.COALESCED, addr, version,
                                     self._next_seq()))
                 events.append(Event(EventKind.PERSIST_ACK, addr, version,
@@ -370,7 +481,11 @@ class PersistentBuffer:
             if not _retry:
                 victim = self._lru_dirty(owner=tenant)
                 if victim is not None:
-                    self._start_drain(victim, events, tenant)
+                    pkt = self._start_drain(victim, events, tenant)
+                    # chain: the victim leg travels ahead of the entry
+                    # write (engine lockstep: a one-packet batch)
+                    if self.config.n_switches >= 2:
+                        self._forward_batch([pkt], 2, tenant)
             return self._stall(addr, data, tenant, version, events,
                                _retry, claim_below=occ)
 
@@ -383,7 +498,9 @@ class PersistentBuffer:
             if not _retry:
                 victim = self._pick_victim(tenant)
                 if victim is not None:
-                    self._start_drain(victim, events, tenant)
+                    pkt = self._start_drain(victim, events, tenant)
+                    if self.config.n_switches >= 2:
+                        self._forward_batch([pkt], 2, tenant)
             # Whether we drained a victim or everything is already Drain,
             # the write must wait for an Empty entry (Section V-D1).
             return self._stall(addr, data, tenant, version, events,
@@ -397,12 +514,15 @@ class PersistentBuffer:
         self._touch(slot)
         self.stats["acks"] += 1
         ts["acks"] += 1
+        self.hop_counts[0]["commits"] += 1
         events.append(Event(EventKind.PERSIST_ACK, addr, version,
                             self._next_seq()))
 
         if self.config.scheme == Scheme.PB:
             # Drain as soon as acked, to keep Empty entries available.
-            self._start_drain(slot, events, tenant)
+            pkt = self._start_drain(slot, events, tenant)
+            if self.config.n_switches >= 2:
+                self._forward_batch([pkt], 2, tenant)
         else:
             self._rf_drain_down(events, tenant)
         return events
@@ -448,8 +568,24 @@ class PersistentBuffer:
             self._touch(e)
             self.stats["read_hits"] += 1
             ts["read_hits"] += 1
+            self.hop_counts[0]["read_hits"] += 1
             return e.data, Event(EventKind.READ_FROM_PB, addr, e.version,
                                  self._next_seq())
+        # chain read forwarding: the miss travels toward PM past every
+        # deeper switch's PBCS — the shallowest hop holding a live entry
+        # serves it (shallower always holds the newer version); NOPB has
+        # no persistent hops (n_hops == 0)
+        for s in range(2, self.n_hops + 1):
+            d_e = next((x for x in self.hops[s - 2]
+                        if x.addr == addr and x.state == PBEState.DIRTY),
+                       None)
+            if d_e is not None:
+                self._touch(d_e)
+                self.stats["read_hits"] += 1
+                ts["read_hits"] += 1
+                self.hop_counts[s - 1]["read_hits"] += 1
+                return d_e.data, Event(EventKind.READ_FROM_PB, addr,
+                                       d_e.version, self._next_seq())
         self.stats["read_misses"] += 1
         ts["read_misses"] += 1
         rec = self.pm.read(addr)
@@ -467,13 +603,32 @@ class PersistentBuffer:
         # Entries survive with their states; nothing else to do.
 
     def recover(self) -> List[Event]:
-        """Reboot: treat every non-Empty entry as Dirty and drain it all."""
+        """Reboot: treat every non-Empty entry — at every hop — as Dirty
+        and drain the union straight to PM (the device rejects stale
+        versions, so duplicate addresses across hops resolve to the
+        newest surviving copy regardless of drain order)."""
         events: List[Event] = []
         for e in self.entries:
             if e.state in (PBEState.DIRTY, PBEState.DRAIN):
                 e.state = PBEState.DIRTY
-                # recovery drains belong to the entry's owning tenant
-                self._start_drain(e, events, e.tenant)
+                # recovery drains belong to the entry's owning tenant;
+                # forward=False: drain-all bypasses the (rebooting) chain
+                self._start_drain(e, events, e.tenant, forward=False)
+        for hop in self.hops:
+            for e in hop:
+                if e.state in (PBEState.DIRTY, PBEState.DRAIN):
+                    # deep entries sit outside the hop-1 ack protocol:
+                    # their recovery drain completes synchronously
+                    self.pm.write(e.addr, e.version, e.data)
+                    self.stats["drains"] += 1
+                    self.stats["pm_writes"] += 1
+                    self._tstats(e.tenant)["drains"] += 1
+                    self._tstats(e.tenant)["pm_writes"] += 1
+                    events.append(Event(EventKind.DRAIN_SENT, e.addr,
+                                        e.version, self._next_seq()))
+                    events.append(Event(EventKind.DRAIN_ACKED, e.addr,
+                                        e.version, self._next_seq()))
+                    e.state = PBEState.EMPTY
         # Recovery drains are immediately acked in this untimed model.
         for e in self.entries:
             if e.state == PBEState.DRAIN:
@@ -493,13 +648,21 @@ class PersistentBuffer:
         read the oracle's durable state at arbitrary crash points.
         """
         durable: Dict[int, Tuple[int, object]] = dict(self.pm.store)
-        for e in self.entries:
-            if e.state == PBEState.EMPTY:
-                continue
-            cur = durable.get(e.addr)
-            if cur is None or e.version > cur[0]:
-                durable[e.addr] = (e.version, e.data)
+        for hop in [self.entries, *self.hops]:
+            for e in hop:
+                if e.state == PBEState.EMPTY:
+                    continue
+                cur = durable.get(e.addr)
+                if cur is None or e.version > cur[0]:
+                    durable[e.addr] = (e.version, e.data)
         return durable
+
+    def hop_surviving(self) -> List[int]:
+        """Live (non-Empty) PBEs per switch — what a crash right now
+        would leave for the per-hop recovery drain-all (engine twin:
+        ``SimResult.hop_recovery``)."""
+        return [sum(1 for e in hop if e.state != PBEState.EMPTY)
+                for hop in [self.entries, *self.hops]][:self.n_hops]
 
     # ------------------------------------------------------------ invariant
     def check_invariants(self) -> None:
@@ -534,3 +697,28 @@ class PersistentBuffer:
                     and e.version >= newest_dirty[e.addr]):
                 raise AssertionError(
                     f"Drain entry not older than Dirty for addr={e.addr}")
+        # Switch-chain forms of (b) and (c): per hop at most one Dirty
+        # entry per address; versions strictly decrease with depth (an
+        # entry only moves down the chain, and coalescing keeps the
+        # newest at the shallowest hop holding the line); PM never holds
+        # a version newer than any live Dirty entry at any hop.
+        newest_by_addr: Dict[int, int] = dict(newest_dirty)
+        for s, hop in enumerate(self.hops, start=2):
+            hop_dirty = [e.addr for e in hop if e.state == PBEState.DIRTY]
+            if len(hop_dirty) != len(set(hop_dirty)):
+                raise AssertionError(
+                    f"duplicate Dirty entries for one address at hop {s}")
+            for e in hop:
+                if e.state != PBEState.DIRTY:
+                    continue
+                if (e.addr in newest_by_addr
+                        and e.version >= newest_by_addr[e.addr]):
+                    raise AssertionError(
+                        f"hop {s} holds a version not older than a "
+                        f"shallower hop's for addr={e.addr}")
+                newest_by_addr[e.addr] = e.version
+                rec = self.pm.read(e.addr)
+                if rec is not None and rec[0] > e.version:
+                    raise AssertionError(
+                        f"PM holds newer version than hop-{s} Dirty entry "
+                        f"for addr={e.addr}: pm={rec[0]} pb={e.version}")

@@ -31,14 +31,17 @@ def _counts_from(stats, scheme, victim_stalls):
         coalesces=stats["coalesces"],
         read_hits=stats["read_hits"],
         pm_reads=stats["read_hits"] + stats["read_misses"],
-        pm_writes=(stats["persists"] if scheme == Scheme.NOPB
-                   else stats["drains"]),
+        # writes that reached the PM device: under a switch chain the
+        # hop-1 drain count is NOT the PM write count (deep hops retain
+        # and coalesce), so the oracle tracks device arrivals explicitly
+        pm_writes=stats["pm_writes"],
         victim_drains=victim_stalls,
     )
 
 
 def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
-                  n_tenants=1, policy=None):
+                  n_tenants=1, policy=None, n_switches=1,
+                  pbe_per_hop=None):
     """Replay schedule slots ``<= crash_slot``, then crash + recover.
 
     Acks are delivered promptly (all in-flight drains complete between
@@ -51,10 +54,15 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
     ``tenant_counts`` row per tenant must match the engine's per-tenant
     stats rows exactly.  ``policy`` (a ``PBPolicy``) drives the oracle's
     quota / victim / drain-scope decisions — the engine cell must be run
-    with the *same* policy on its config.
+    with the *same* policy on its config.  ``n_switches`` /
+    ``pbe_per_hop`` select a chained pooling topology: the returned
+    ``hop_surviving`` / ``hop_counts`` rows must match the engine's
+    per-hop recovery attribution and telemetry exactly.
     """
-    pb = PersistentBuffer(PCSConfig(scheme=scheme, n_pbe=n_pbe,
-                                    n_tenants=n_tenants, policy=policy))
+    pb = PersistentBuffer(PCSConfig(
+        scheme=scheme, n_pbe=n_pbe, n_tenants=n_tenants, policy=policy,
+        n_switches=n_switches,
+        pbe_per_hop=(None if scheme == Scheme.NOPB else pbe_per_hop)))
     aver = collections.defaultdict(int)   # per-address issued versions
     pending = []
     victim_stalls = collections.defaultdict(int)
@@ -92,12 +100,16 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
                      victim_stalls[t])
         for t in range(n_tenants)]
     snapshot = {a: rec[0] for a, rec in pb.snapshot_durable().items()}
-    # surviving (non-Empty) PBEs at the crash instant, per owning tenant:
-    # the engine's recovery_entries / tenant_recovery must match exactly
+    # surviving (non-Empty) PBEs at the crash instant, per owning tenant
+    # and per hop of the switch chain: the engine's recovery_entries /
+    # tenant_recovery / hop_recovery must match exactly
     tenant_surviving = [0] * n_tenants
-    for e in pb.entries:
-        if e.state.name != "EMPTY":
-            tenant_surviving[e.tenant] += 1
+    for hop in [pb.entries, *pb.hops]:
+        for e in hop:
+            if e.state.name != "EMPTY":
+                tenant_surviving[e.tenant] += 1
+    hop_surviving = pb.hop_surviving()
+    hop_counts = [dict(hc) for hc in pb.hop_counts]
     pb.crash()
     pb.recover()
     durable = {}
@@ -109,7 +121,8 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
         "snapshot_durable disagrees with crash+recover"
     return dict(durable=durable, counts=counts, reads=reads,
                 issued=dict(aver), tenant_counts=tenant_counts,
-                tenant_surviving=tenant_surviving)
+                tenant_surviving=tenant_surviving,
+                hop_surviving=hop_surviving, hop_counts=hop_counts)
 
 
 def assert_cell_matches(res, oracle, n_addrs, label=""):
@@ -126,10 +139,27 @@ def assert_cell_matches(res, oracle, n_addrs, label=""):
     assert counts == oracle["counts"], (label, counts, oracle["counts"])
 
     # the Section V-D4 recovery pass re-drains exactly the oracle's
-    # surviving (non-Empty) entries
+    # surviving (non-Empty) entries — the union across every hop
     assert res.recovery_entries == sum(oracle["tenant_surviving"]), (
         label, "recovery entries", res.recovery_entries,
         oracle["tenant_surviving"])
+
+    # per-hop durable-state agreement over the switch chain: survivors
+    # and the chain telemetry (commits / coalesces / bypasses / read
+    # hits at every switch) must match row by row
+    if res.hop_stats is not None:
+        hops = res.hop_results()
+        assert len(hops) == len(oracle["hop_surviving"]), (
+            label, "hop count", len(hops), oracle["hop_surviving"])
+        got_hs = [h["recovered"] for h in hops]
+        assert got_hs == oracle["hop_surviving"], (
+            label, "per-hop survivors", got_hs, oracle["hop_surviving"])
+        for h, (got_h, want_h) in enumerate(
+                zip(hops, oracle["hop_counts"])):
+            got_row = {k: got_h[k] for k in
+                       ("commits", "coalesces", "bypasses", "read_hits")}
+            assert got_row == want_h, (label, "hop", h + 1, got_row,
+                                       want_h)
 
     # per-tenant accounting over the shared switch must agree row by row
     if res.n_tenants > 1:

@@ -153,6 +153,105 @@ def test_differential_matrix_quota_policies_one_compile():
                        "default" if pol is None else str(pol.alloc)))
 
 
+def test_differential_matrix_switch_chains_one_compile():
+    """Chained pooling topologies (per-switch PBs): the {trace x scheme
+    x depth 1..3 x crash-point} matrix must be ONE XLA program (depth
+    and per-hop capacities are traced), with exact engine<->oracle
+    agreement on the durable state, the global counts AND the per-hop
+    survivor/telemetry rows at every crash point.  Depth-1 cells ride
+    in the same mixed-depth grid — the legacy-compat anchor."""
+    seeds = list(range(5))
+    traces, scheds = zip(*[
+        fuzz_trace(s, n_cores=N_CORES, n_slots=N_SLOTS, n_addrs=N_ADDRS,
+                   p_persist=0.7)
+        for s in seeds])
+    crash_slots = (0, 11, 23, 36, N_SLOTS)
+    # depth axis: single switch, uniform chain, and a bypass-heavy
+    # chain whose deep hops are smaller than hop 1
+    chains = [(1, None), (2, (3, 3)), (3, (3, 2, 1))]
+    plan = []
+    for scheme in SCHEMES:
+        for d, hop_pbes in chains:
+            for k in crash_slots:
+                plan.append((scheme, d, hop_pbes, k))
+    configs = [PCSConfig(scheme=s, n_pbe=3, n_switches=d,
+                         pbe_per_hop=(None if s == Scheme.NOPB
+                                      else hop_pbes)
+                         ).with_crash(fuzz_crash_ns(k))
+               for s, d, hop_pbes, k in plan]
+    n_cells = len(seeds) * len(configs)
+    assert n_cells >= 200, n_cells
+    c0 = compile_count()
+    cells = simulate_grid(list(traces), configs, max_pbe=3,
+                          bucket=BUCKET, track_addrs=N_ADDRS)
+    assert compile_count() - c0 == 1, (
+        "the mixed {trace x scheme x depth x crash-point} chain matrix "
+        "must be one XLA program")
+    for i, sched in enumerate(scheds):
+        for j, (scheme, d, hop_pbes, k) in enumerate(plan):
+            oracle = oracle_replay(sched, k, scheme, 3, n_switches=d,
+                                   pbe_per_hop=hop_pbes)
+            assert_cell_matches(cells[i][j], oracle, N_ADDRS,
+                                label=("CHAIN", seeds[i], scheme.name,
+                                       d, hop_pbes, k))
+
+
+@pytest.mark.slow
+def test_differential_matrix_switch_chains_big():
+    """The full-budget chain matrix: more seeds, depth up to 4, mixed
+    hop capacities and a multi-tenant chain group — still one compiled
+    grid per call (make test-all / tier-1 lane)."""
+    seeds = list(range(8))
+    traces, scheds = zip(*[
+        fuzz_trace(s, n_cores=N_CORES, n_slots=N_SLOTS, n_addrs=N_ADDRS,
+                   p_persist=0.75)
+        for s in seeds])
+    chains = [(1, None), (2, (4, 1)), (3, (4, 2, 2)), (4, (2, 1, 1, 1))]
+    crash_slots = (0, 7, 15, 23, 31, 42, N_SLOTS)
+    plan = [(s, d, hp, k) for s in SCHEMES for d, hp in chains
+            for k in crash_slots]
+    configs = [PCSConfig(scheme=s, n_pbe=(4 if hp is None else hp[0]),
+                         n_switches=d,
+                         pbe_per_hop=(None if s == Scheme.NOPB else hp)
+                         ).with_crash(fuzz_crash_ns(k))
+               for s, d, hp, k in plan]
+    assert len(seeds) * len(configs) >= 500
+    c0 = compile_count()
+    cells = simulate_grid(list(traces), configs, max_pbe=4,
+                          bucket=BUCKET, track_addrs=N_ADDRS)
+    assert compile_count() - c0 == 1
+    for i, sched in enumerate(scheds):
+        for j, (scheme, d, hp, k) in enumerate(plan):
+            oracle = oracle_replay(sched, k, scheme,
+                                   4 if hp is None else hp[0],
+                                   n_switches=d, pbe_per_hop=hp)
+            assert_cell_matches(cells[i][j], oracle, N_ADDRS,
+                                label=("CHAIN-BIG", seeds[i],
+                                       scheme.name, d, hp, k))
+    # multi-tenant chain group: per-tenant accounting and per-hop
+    # recovery attribution must both hold on a shared chained switch
+    n_tenants, n_cores = 2, 4
+    t_traces, t_scheds = zip(*[
+        fuzz_trace(s, n_cores=n_cores, n_slots=N_SLOTS, n_addrs=N_ADDRS,
+                   n_tenants=n_tenants, p_persist=0.7)
+        for s in range(3)])
+    t_plan = [(s, k) for s in SCHEMES for k in (11, 29, N_SLOTS)]
+    t_configs = [PCSConfig(scheme=s, n_pbe=4, n_cores=n_cores,
+                           n_tenants=n_tenants,
+                           n_switches=2).with_crash(fuzz_crash_ns(k))
+                 for s, k in t_plan]
+    t_cells = simulate_grid(list(t_traces), t_configs, max_pbe=4,
+                            bucket=BUCKET, track_addrs=N_ADDRS)
+    for i, (tr, sched) in enumerate(zip(t_traces, t_scheds)):
+        core_tenant = tenant_ids(tr.lengths, n_tenants)
+        for j, (scheme, k) in enumerate(t_plan):
+            oracle = oracle_replay(sched, k, scheme, 4,
+                                   core_tenant=core_tenant,
+                                   n_tenants=n_tenants, n_switches=2)
+            assert_cell_matches(t_cells[i][j], oracle, N_ADDRS,
+                                label=("CHAIN-T2", i, scheme.name, k))
+
+
 def _one_cell(seed, scheme, crash_slot, n_pbe, p_persist=0.55):
     trace, sched = fuzz_trace(seed, n_cores=N_CORES, n_slots=N_SLOTS,
                               n_addrs=N_ADDRS, p_persist=p_persist)

@@ -135,6 +135,44 @@ def test_crash_straddling_persist_not_double_counted():
         assert r.acked_persists <= r.durable_persists, f
 
 
+def test_mid_chain_crash_acked_persist_survives_from_hop1():
+    """Mid-chain crash acceptance (pooling topologies): a persist acked
+    at hop 1 whose hop-2 propagation lands only after the power loss is
+    still durable — hop 1's PB cells hold it in Drain (its downstream
+    ack is lost with the power), so recovery re-drains it from hop 1."""
+    # one persist, then a crash falling inside the hop-1 -> hop-2 hop
+    # window: after the hop-1 ack (~2*(link+pipe)+service) but before
+    # the inter-switch commit lands at hop 2
+    tr = Trace(ops=np.array([[int(Op.PERSIST)]], np.int32),
+               addrs=np.array([[0]], np.int32),
+               gaps=np.zeros((1, 1), np.float32),
+               lengths=np.array([1], np.int32), name="one")
+    cfg = PCSConfig(scheme=Scheme.PB, n_switches=2, n_pbe=4)
+    full = simulate(tr, cfg, bucket=64, track_addrs=1)
+    assert full.persists == 1 and full.acked_persists == 1
+    ack_ns = full.persist_lat_ns          # hop-1 round trip
+    hop_ns = cfg.latency.hop_ns()
+    # the forward leaves hop 1 at the entry-write instant (~ack minus
+    # the return link) and needs a full hop + hop-2 PBC service to
+    # commit: a crash shortly after the ack falls mid-wire
+    crash = ack_ns + 0.25 * hop_ns
+    r = simulate(tr, cfg.with_crash(crash), bucket=64, track_addrs=1)
+    assert r.acked_persists == 1, "persist must be acked before the crash"
+    assert r.durable_persists == 1, "acked persist lost mid-chain"
+    assert int(np.asarray(r.durable_ver)[0]) == 1
+    # durable FROM HOP 1: the copy survives in hop 1's PB (Drain, ack
+    # pending), not at hop 2 (commit landed post-crash) and not at PM
+    assert r.hop_recovery is not None
+    assert list(r.hop_recovery) == [1, 0], list(r.hop_recovery)
+    assert r.recovery_entries == 1
+    # and once the hop-2 commit beats the crash, the surviving copy
+    # moves one hop deeper (hop 1's entry freed by the downstream ack)
+    r2 = simulate(tr, cfg.with_crash(full.runtime_ns + 5e6), bucket=64,
+                  track_addrs=1)
+    assert r2.durable_persists == 1
+    assert list(r2.hop_recovery) == [0, 0], list(r2.hop_recovery)
+
+
 def test_crash_at_zero_and_after_end(tiny_traces):
     tr = tiny_traces["raytrace"]
     r0 = simulate(tr, PCSConfig(scheme=Scheme.PB_RF).with_crash(0.0),

@@ -21,10 +21,13 @@ PROFILES = [
 
 @pytest.mark.parametrize("lat", PROFILES)
 def test_path_helpers_non_negative(lat):
+    """All three helpers are total functions of the depth, 0 included
+    (the old ``oneway_sw1_pm(0)`` evaluated to MINUS switch_pipe_ns and
+    had to be special-cased out of the engine lowering)."""
     for n in DEPTHS:
         assert lat.oneway_cpu_pm(n) >= 0.0, n
-        if n >= 1:
-            assert lat.oneway_sw1_pm(n) >= 0.0, n
+        assert lat.oneway_cpu_sw1(n) >= 0.0, n
+        assert lat.oneway_sw1_pm(n) >= 0.0, n
     assert lat.oneway_cpu_sw1() >= 0.0
 
 
@@ -47,6 +50,30 @@ def test_path_composition_identity(lat):
         whole = lat.oneway_cpu_pm(n)
         split = lat.oneway_cpu_sw1() + lat.oneway_sw1_pm(n)
         assert split == pytest.approx(whole, rel=1e-12, abs=1e-12), n
+
+
+@pytest.mark.parametrize("lat", PROFILES)
+def test_path_composition_identity_total_at_depth_zero(lat):
+    """The depth-aware helper forms extend the identity to n == 0
+    (direct attach: the "first hop" degenerates to the CPU link and the
+    drain path to nothing) — the engine lowering needs no depth
+    special-casing (the old state.py ow_cpu_sw1/ow_sw1_pm branches)."""
+    for n in range(0, 9):
+        whole = lat.oneway_cpu_pm(n)
+        split = lat.oneway_cpu_sw1(n) + lat.oneway_sw1_pm(n)
+        assert split == pytest.approx(whole, rel=1e-12, abs=1e-12), n
+    assert lat.oneway_sw1_pm(0) == 0.0
+    assert lat.oneway_cpu_sw1(0) == lat.cpu_link_ns
+
+
+@pytest.mark.parametrize("lat", PROFILES)
+def test_hop_segment_decomposes_drain_path(lat):
+    """``hop_ns`` (one inter-switch segment) decomposes the drain path:
+    sw1 -> PM through n switches = (n-1) hops plus the final link —
+    the identity the chain's forward/PM-landing latencies are built on."""
+    for n in range(1, 9):
+        assert lat.oneway_sw1_pm(n) == pytest.approx(
+            (n - 1) * lat.hop_ns() + lat.link_ns, rel=1e-12, abs=1e-12), n
 
 
 # ---------------------------------------------------------------------------
