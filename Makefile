@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all test-fuzz bench-smoke bench calibrate ci
+.PHONY: test test-all test-fuzz bench-smoke bench bench-compare calibrate ci
 
 # fast suite (<1 min): everything except the @slow big-model smokes and
 # exhaustive grids
@@ -22,6 +22,12 @@ test-fuzz:
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --smoke
 
+# regenerate the smoke report and diff it against the committed
+# baseline (git show HEAD:BENCH_engine.json): prints per-sweep speedup
+# ratios, fails on a >1.25x regression of any *_sweep_wall_s
+bench-compare: bench-smoke
+	$(PYTHON) -m benchmarks.compare
+
 # full paper-budget benchmark CSV
 bench:
 	$(PYTHON) -m benchmarks.run
@@ -31,9 +37,11 @@ calibrate:
 
 # CI lane: fast tests (including the depth differential's fast chain
 # matrix; the >=500-cell depth-4 matrix runs behind the `slow` marker in
-# `test-all`), then the smoke benchmarks, then the compile-count
-# regression guard (the shared grid / recovery sweep / tenant sweep /
-# QoS sweep / chain depth sweep must each stay exactly ONE XLA program
-# — see benchmarks/check_compiles.py)
-ci: test bench-smoke
+# `test-all`), then the smoke benchmarks + wall-clock regression diff
+# against the committed report (benchmarks/compare.py), then the
+# compile-count regression guard (the shared grid / recovery sweep /
+# tenant sweep / QoS sweep / chain depth sweep must each stay exactly
+# ONE XLA program, macro-stepping enabled, with per-sweep macro hit
+# rates recorded — see benchmarks/check_compiles.py)
+ci: test bench-compare
 	$(PYTHON) -m benchmarks.check_compiles

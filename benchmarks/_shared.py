@@ -13,7 +13,8 @@ import time
 from typing import Dict, Tuple
 
 from repro.core import PCSConfig, Scheme, WORKLOADS, make_trace
-from repro.core.engine import compile_count, simulate_grid
+from repro.core.engine import (compile_count, last_macro_hit_rate,
+                               simulate_grid)
 
 # full paper budget by default; BENCH_QUICK=1 runs a reduced grid fast
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
@@ -65,6 +66,7 @@ def _ensure_grid() -> None:
         grid_wall_s=round(time.time() - t0, 3),
         grid_compiles=compile_count() - c0,
         grid_cells=len(names) * len(SCHEMES),
+        grid_macro_hit=round(last_macro_hit_rate(), 4),
     )
     for i, n in enumerate(names):
         for j, s in enumerate(SCHEMES):

@@ -11,6 +11,16 @@ a lowered PBPolicy field — back into a static), the build fails loudly
 instead of the trajectory silently absorbing a multi-compile
 regression.
 
+The macro-stepping fast path (DESIGN.md "Macro-stepping & state
+packing") is enabled in every benchmark sweep, so the counts above also
+pin that the macro-enabled grid still lowers to ONE XLA program per
+sweep — the guarded macro-step is part of the same scan body, never a
+second program.  Each sweep additionally records its ``*_macro_hit``
+(fraction of trace slots executed via committed macro-steps); this
+guard requires the telemetry to be present and sane, so a regression
+that silently disables macro-stepping (hit rate pinned at 0 would be
+visible in review) or drops the telemetry fails CI.
+
     PYTHONPATH=src python -m benchmarks.check_compiles [report.json]
 """
 from __future__ import annotations
@@ -22,6 +32,11 @@ GUARDED = ("shared_grid_compiles", "recovery_sweep_compiles",
            "tenant_sweep_compiles", "qos_sweep_compiles",
            "chain_sweep_compiles")
 
+# macro-stepping telemetry: every sweep must record its hit rate
+MACRO_KEYS = ("shared_grid_macro_hit", "recovery_sweep_macro_hit",
+              "tenant_sweep_macro_hit", "qos_sweep_macro_hit",
+              "chain_sweep_macro_hit")
+
 
 def check(report: dict) -> list:
     problems = []
@@ -32,7 +47,16 @@ def check(report: dict) -> list:
                             "didn't run or telemetry was dropped)")
         elif v != 1:
             problems.append(f"{key} = {v}: grid no longer lowers to one "
-                            "XLA program")
+                            "XLA program (macro-stepping included, the "
+                            "sweep must stay a single compilation)")
+    for key in MACRO_KEYS:
+        v = report.get(key)
+        if v is None:
+            problems.append(f"{key}: missing from the report (macro "
+                            "hit-rate telemetry was dropped)")
+        elif not isinstance(v, (int, float)) or not 0.0 <= v <= 1.0:
+            problems.append(f"{key} = {v!r}: macro hit rate must be a "
+                            "fraction in [0, 1]")
     return problems
 
 
@@ -50,7 +74,9 @@ def main(argv=None) -> int:
             print(f"check_compiles: FAIL {p}", file=sys.stderr)
         return 1
     counts = {k: report[k] for k in GUARDED}
+    hits = {k: report[k] for k in MACRO_KEYS}
     print(f"check_compiles: OK {counts}")
+    print(f"check_compiles: macro hit rates {hits}")
     return 0
 
 

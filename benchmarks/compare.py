@@ -1,0 +1,105 @@
+"""Engine perf trajectory guard: fresh vs committed BENCH_engine.json.
+
+``make bench-compare`` regenerates the smoke report and diffs it against
+the committed baseline (``git show HEAD:BENCH_engine.json`` by default,
+so it works even though ``bench-smoke`` overwrites the working-tree
+copy).  It prints a per-sweep speedup ratio for every ``*_sweep_wall_s``
+(plus the shared grid) and **fails** when any sweep regressed by more
+than ``THRESHOLD``x — wall-clock noise on a quiet machine is far below
+25%, so a trip means a real perf regression (e.g. a change that breaks
+the macro-step guards, widens the packed dtypes, or defeats the chunked
+early exit).
+
+Reports are only comparable at the same measurement budget: when the
+budget/bucket/smoke fields differ the comparison is skipped with a
+warning instead of producing nonsense ratios.
+
+    PYTHONPATH=src python -m benchmarks.compare [fresh] [baseline]
+
+``fresh`` defaults to ``BENCH_engine.json``; ``baseline`` defaults to
+the HEAD copy via git (pass a path to diff two files directly).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+THRESHOLD = 1.25     # fail when fresh wall > 1.25x the committed wall
+BUDGET_KEYS = ("smoke", "budget", "bucket")
+
+
+def _load_baseline(ref: str) -> dict:
+    """Baseline report: a file path, or ``git:REF`` for a committed copy."""
+    if ref.startswith("git:"):
+        blob = subprocess.run(
+            ["git", "show", f"{ref[4:]}:BENCH_engine.json"],
+            capture_output=True, text=True, check=True).stdout
+        return json.loads(blob)
+    with open(ref) as f:
+        return json.load(f)
+
+
+def wall_keys(fresh: dict, base: dict) -> list:
+    keys = sorted(k for k in fresh
+                  if k.endswith("_sweep_wall_s") or k == "shared_grid_wall_s")
+    return [k for k in keys if isinstance(base.get(k), (int, float))]
+
+
+def compare(fresh: dict, base: dict) -> tuple:
+    """Returns ``(lines, regressions)`` — human lines and failed keys."""
+    mismatched = [k for k in BUDGET_KEYS if fresh.get(k) != base.get(k)]
+    if mismatched:
+        return ([f"skip: budgets differ ({', '.join(mismatched)}); "
+                 "ratios would compare different workloads"], [])
+    lines, regressions = [], []
+    for k in wall_keys(fresh, base):
+        f_v, b_v = float(fresh[k]), float(base[k])
+        if f_v <= 0:
+            continue
+        speedup = b_v / f_v
+        verdict = "ok"
+        if k.endswith("_sweep_wall_s") and f_v > THRESHOLD * b_v:
+            verdict = f"REGRESSION (> {THRESHOLD}x)"
+            regressions.append(k)
+        lines.append(f"{k}: {b_v:.3f}s -> {f_v:.3f}s "
+                     f"({speedup:.2f}x speedup) {verdict}")
+    if "total_wall_s" in fresh and "total_wall_s" in base:
+        lines.append(f"total_wall_s: {base['total_wall_s']} -> "
+                     f"{fresh['total_wall_s']}")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", nargs="?", default="BENCH_engine.json")
+    ap.add_argument("baseline", nargs="?", default="git:HEAD")
+    args = ap.parse_args(argv)
+    try:
+        fresh = json.load(open(args.fresh))
+    except OSError as e:
+        print(f"bench-compare: cannot read {args.fresh}: {e}",
+              file=sys.stderr)
+        return 2
+    try:
+        base = _load_baseline(args.baseline)
+    except (OSError, subprocess.CalledProcessError, json.JSONDecodeError):
+        # no committed baseline (first PR with a report, shallow clone):
+        # nothing to regress against — succeed loudly, don't block CI
+        print("bench-compare: no readable baseline "
+              f"({args.baseline}); skipping comparison")
+        return 0
+    lines, regressions = compare(fresh, base)
+    for ln in lines:
+        print(f"bench-compare: {ln}")
+    if regressions:
+        print(f"bench-compare: FAIL {len(regressions)} sweep(s) regressed "
+              f"beyond {THRESHOLD}x: {', '.join(regressions)}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

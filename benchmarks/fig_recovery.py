@@ -5,8 +5,11 @@ workload's NoPB runtime and record (a) the persisted fraction — how much
 of the issued work survives crash + recovery (Section V-D4) — and
 (b) the modeled recovery latency of the drain-all pass over the
 surviving Dirty/Drain PBEs.  The whole sweep — every workload x scheme x
-crash point, plus a multi-tenant group — is ONE ``simulate_grid`` call:
-the crash instant is a traced config scalar like every latency.
+crash point, plus a multi-tenant group — is ONE ``simulate_cells`` call:
+the crash instant is a traced config scalar like every latency, and the
+sweep was never a cross product (each crash group anchors on exactly one
+trace), so the flat paired-cell API runs the diagonal the figure reads
+instead of paying for every off-anchor cell.
 
 The multi-tenant group adds the per-tenant recovery attribution
 (ROADMAP crash/recovery fairness): for a T=2 shared switch, each
@@ -24,7 +27,7 @@ import math
 import time
 
 from repro.core import PCSConfig, Scheme, make_tenant_trace, simulate_grid
-from repro.core.engine import compile_count
+from repro.core.engine import compile_count, last_macro_hit_rate, simulate_cells
 
 from benchmarks import _shared
 from benchmarks._shared import emit, trace
@@ -55,16 +58,16 @@ CHAIN_DEPTH = 2
 
 def run() -> list:
     names = SMOKE_NAMES if _shared.SMOKE else NAMES
-    traces = [trace(n) for n in names]
     # Crash instants anchor on EACH workload's own NoPB (cached)
-    # runtime.  The grid is a {trace x config} cross product, so the
-    # config list carries one group per workload; workload i reads only
-    # its own group from cells[i] — still one compiled program.
+    # runtime.  Each config pairs with exactly one trace, so the sweep
+    # is a flat (trace, config) cell list — no off-anchor cells — and
+    # still one compiled program (simulate_cells vmaps one shared axis).
     ends = {n: _shared.result(n, Scheme.NOPB).runtime_ns for n in names}
-    configs, keys = [], []
+    cell_traces, configs, keys = [], [], []
     for name in names:
         for key, scheme in SCHEMES:
             for f in FRACS:
+                cell_traces.append(trace(name))
                 configs.append(
                     PCSConfig(scheme=scheme).with_crash(f * ends[name]))
                 keys.append((name, key, f))
@@ -74,10 +77,11 @@ def run() -> list:
     # Depth is traced, so the group rides the same one-program sweep.
     for key, scheme in SCHEMES[1:]:        # pb, pb_rf
         for f in FRACS:
+            cell_traces.append(trace(names[0]))
             configs.append(PCSConfig(
                 scheme=scheme,
                 n_switches=CHAIN_DEPTH).with_crash(f * ends[names[0]]))
-            keys.append((f"{names[0]}:chain", key, f))
+            keys.append(("chain", key, f))
     # Multi-tenant group (per-tenant recovery attribution): a T=2
     # shared-switch trace crashed at the same fractions of ITS OWN NoPB
     # runtime (anchored outside the counted sweep so the sweep stays one
@@ -89,40 +93,38 @@ def run() -> list:
         [t_trace], [PCSConfig(scheme=Scheme.NOPB, n_tenants=TENANTS,
                               n_cores=TENANTS * TENANT_CORES)],
         bucket=_shared.bucket())[0][0].runtime_ns
-    traces.append(t_trace)
     for key, scheme in SCHEMES[1:]:        # pb, pb_rf
         for f in FRACS:
+            cell_traces.append(t_trace)
             configs.append(PCSConfig(
                 scheme=scheme, n_tenants=TENANTS,
                 n_cores=TENANTS * TENANT_CORES).with_crash(f * t_end))
             keys.append(("tenants", key, f))
     c0, t0 = compile_count(), time.time()
-    cells = simulate_grid(traces, configs, bucket=_shared.bucket())
+    cells = simulate_cells(cell_traces, configs, bucket=_shared.bucket())
     sweep_metrics.update(
         recovery_sweep_wall_s=round(time.time() - t0, 3),
         recovery_sweep_compiles=compile_count() - c0,
-        # computed cells of the cross product (the figure reads only the
-        # matching-anchor diagonal, but the wall time pays for all of
-        # them) — same convention as tenant_sweep_cells
-        recovery_sweep_cells=len(traces) * len(configs),
+        recovery_sweep_cells=len(configs),
+        recovery_sweep_macro_hit=round(last_macro_hit_rate(), 4),
     )
     rows = []
-    for name, row in zip(names, cells):
-        for (anchor, key, f), r in zip(keys, row):
-            if anchor != name:      # another workload's crash anchors
-                continue
-            scheme = dict(SCHEMES)[key]
-            total = _shared.result(name, scheme).persists
-            frac = r.durable_persists / max(total, 1)
-            rows.append((f"recovery_{key}_{name}_f{int(100 * f)}",
-                         round(frac, 4), "durable_fraction_of_run"))
-            rows.append((f"recovery_lat_{key}_{name}_f{int(100 * f)}",
-                         round(r.recovery_ns, 1), "recovery_ns"))
-    # per-hop recovery attribution of the chain group (first workload's
-    # trace row); hops with zero traffic have NaN mean forward latency
-    # — skipped, never emitted as a 0.0 ns hop
-    for (anchor, key, f), r in zip(keys, cells[0]):
-        if anchor != f"{names[0]}:chain":
+    for (anchor, key, f), r in zip(keys, cells):
+        if anchor not in names:
+            continue
+        name = anchor
+        scheme = dict(SCHEMES)[key]
+        total = _shared.result(name, scheme).persists
+        frac = r.durable_persists / max(total, 1)
+        rows.append((f"recovery_{key}_{name}_f{int(100 * f)}",
+                     round(frac, 4), "durable_fraction_of_run"))
+        rows.append((f"recovery_lat_{key}_{name}_f{int(100 * f)}",
+                     round(r.recovery_ns, 1), "recovery_ns"))
+    # per-hop recovery attribution of the chain group (anchored on the
+    # first workload's trace); hops with zero traffic have NaN mean
+    # forward latency — skipped, never emitted as a 0.0 ns hop
+    for (anchor, key, f), r in zip(keys, cells):
+        if anchor != "chain":
             continue
         for h in r.hop_results():
             rows.append((
@@ -134,8 +136,8 @@ def run() -> list:
                     f"recovery_chain_fwd_{key}_d{CHAIN_DEPTH}"
                     f"_f{int(100 * f)}_h{h['hop']}",
                     round(h["fwd_lat_ns"], 1), "mean_fwd_ns"))
-    # per-tenant recovery attribution (the multi-tenant trace is last)
-    for (anchor, key, f), r in zip(keys, cells[len(names)]):
+    # per-tenant recovery attribution (the multi-tenant cells)
+    for (anchor, key, f), r in zip(keys, cells):
         if anchor != "tenants":
             continue
         for t, tr_t in enumerate(r.tenant_results()):

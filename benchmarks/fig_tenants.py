@@ -9,10 +9,12 @@ degrades with contention and the per-tenant stats rows expose how
 fairly the shared switch spreads that pain.
 
 The whole sweep — every {tenant count x scheme}, plus a shared-hot-set
-contention variant at the highest tenant count — is ONE ``simulate_grid``
+contention variant at the highest tenant count — is ONE ``simulate_cells``
 call: the tenant count is a traced config scalar like every latency, so
-the mixed-tenant grid shares a single XLA program (the compile-count
-guard in ``make ci`` pins this).
+the mixed-tenant sweep shares a single XLA program (the compile-count
+guard in ``make ci`` pins this), and the flat paired-cell API runs only
+the diagonal the figure reads (a config's tenant count must match its
+trace's partition) instead of the full cross product.
 
 Reported per (scheme, T):
   * mean persist latency (ns) over all tenants;
@@ -25,8 +27,9 @@ from __future__ import annotations
 import math
 import time
 
-from repro.core import PCSConfig, Scheme, make_tenant_trace, simulate_grid
-from repro.core.engine import compile_count
+from repro.core import PCSConfig, Scheme, make_tenant_trace
+from repro.core.engine import (compile_count, last_macro_hit_rate,
+                               simulate_cells)
 from repro.core.engine.state import S_PBCQ_SUM, S_PERSIST_CNT
 
 from benchmarks import _shared
@@ -58,54 +61,57 @@ def run() -> list:
                                 persist_budget=budget)
               for t in counts]
     t_hot = counts[-1]
-    traces.append(make_tenant_trace(WORKLOAD, t_hot, CORES_PER_TENANT,
-                                    persist_budget=budget,
-                                    shared_lines=SHARED_HOT_LINES))
-    # The grid is a {trace x config} cross product; only the diagonal
-    # cells (config tenant count == trace tenant structure) are read,
-    # still one compiled program (same pattern as fig_recovery).
-    configs, keys = [], []
+    hot_trace = make_tenant_trace(WORKLOAD, t_hot, CORES_PER_TENANT,
+                                  persist_budget=budget,
+                                  shared_lines=SHARED_HOT_LINES)
+    # Flat paired cells: a config's tenant count only means something on
+    # the trace with the matching partition, so the sweep pairs each
+    # config with exactly that trace — one shared vmap axis, one program.
+    cell_traces, configs, keys = [], [], []
     for key, scheme in SCHEMES:
-        for t in counts:
+        for i, t in enumerate(counts):
+            cell_traces.append(traces[i])
             configs.append(PCSConfig(
                 scheme=scheme, n_tenants=t,
                 n_cores=t * CORES_PER_TENANT))
-            keys.append((key, t))
+            keys.append((key, t, False))
+        # shared-hot-set contention variant: all tenants fight over one
+        # hot set instead of private address spaces (read forwarding +
+        # coalescing now cross tenants; fairness typically degrades)
+        cell_traces.append(hot_trace)
+        configs.append(PCSConfig(
+            scheme=scheme, n_tenants=t_hot,
+            n_cores=t_hot * CORES_PER_TENANT))
+        keys.append((key, t_hot, True))
     c0, t0 = compile_count(), time.time()
-    cells = simulate_grid(traces, configs, bucket=_shared.bucket())
+    cells = simulate_cells(cell_traces, configs, bucket=_shared.bucket())
     sweep_metrics.update(
         tenant_sweep_wall_s=round(time.time() - t0, 3),
         tenant_sweep_compiles=compile_count() - c0,
-        tenant_sweep_cells=len(traces) * len(configs),
+        tenant_sweep_cells=len(configs),
+        tenant_sweep_macro_hit=round(last_macro_hit_rate(), 4),
     )
     rows = []
-    for i, t_trace in enumerate(counts):
-        for (key, t_cfg), r in zip(keys, cells[i]):
-            if t_cfg != t_trace:        # off-diagonal: wrong partition
-                continue
-            if math.isnan(r.persist_lat_ns):
-                continue                # empty cell: no persists to plot
-            rows.append((f"tenants_persist_{key}_T{t_cfg}",
+    for (key, t_cfg, hot), r in zip(keys, cells):
+        if math.isnan(r.persist_lat_ns):
+            continue                    # empty cell: no persists to plot
+        if hot:
+            rows.append((f"tenants_hot_persist_{key}_T{t_cfg}",
                          round(r.persist_lat_ns, 1), "ns"))
-            rows.append((f"tenants_fair_{key}_T{t_cfg}",
+            rows.append((f"tenants_hot_fair_{key}_T{t_cfg}",
                          round(_fairness(r), 3), "max_min_tenant_ratio"))
-            if r.tenant_stats is not None:
-                q = r.tenant_stats[:, S_PBCQ_SUM]
-                n = r.tenant_stats[:, S_PERSIST_CNT]
-                worst = max(float(qi / ni) for qi, ni in zip(q, n)
-                            if ni > 0)
-                rows.append((f"tenants_pbcq_{key}_T{t_cfg}",
-                             round(worst, 1), "worst_tenant_pbcq_ns"))
-    # shared-hot-set contention variant: all tenants fight over one hot
-    # set instead of private address spaces (read forwarding + coalescing
-    # now cross tenants; fairness typically degrades)
-    for (key, t_cfg), r in zip(keys, cells[len(counts)]):
-        if t_cfg != t_hot or math.isnan(r.persist_lat_ns):
             continue
-        rows.append((f"tenants_hot_persist_{key}_T{t_cfg}",
+        rows.append((f"tenants_persist_{key}_T{t_cfg}",
                      round(r.persist_lat_ns, 1), "ns"))
-        rows.append((f"tenants_hot_fair_{key}_T{t_cfg}",
+        rows.append((f"tenants_fair_{key}_T{t_cfg}",
                      round(_fairness(r), 3), "max_min_tenant_ratio"))
+        if r.tenant_stats is not None:
+            q = r.tenant_stats[:, S_PBCQ_SUM]
+            n = r.tenant_stats[:, S_PERSIST_CNT]
+            worst = max(float(qi / ni) for qi, ni in zip(q, n)
+                        if ni > 0)
+            rows.append((f"tenants_pbcq_{key}_T{t_cfg}",
+                         round(worst, 1), "worst_tenant_pbcq_ns"))
     return rows
 
 

@@ -57,6 +57,11 @@ def main() -> None:
         timings[name] = round(time.time() - t0, 2)
         if getattr(mod, "REUSES_SHARED_GRID", False) and grid_was_built:
             reused[name] = "shared_grid"
+            if timings[name] < 0.05:
+                # pure grid reader: its work was paid for under
+                # shared_grid_wall_s, so a 0.0 here would misread as
+                # "this figure is free" in the perf trajectory
+                timings[name] = "reused"
         rows.append((f"_elapsed_{name}", timings[name], "seconds"))
 
     if args.smoke:

@@ -10,13 +10,17 @@ pieces:
                    the untimed oracle and the checkpoint tier
   * ``handlers`` — per-op handlers with traced-scheme ``lax.switch``
   * ``step``     — clock-merge step driver + the scan (compile counter)
-  * ``grid``     — ``simulate_grid`` batched front-end and the
-                   ``simulate`` / ``simulate_sweep`` compat wrappers
+  * ``macro``    — guarded macro-step mini-interpreter (homogeneous-run
+                   speculation; bit-exact commit-or-abort)
+  * ``grid``     — ``simulate_grid`` / ``simulate_cells`` batched
+                   front-ends and the ``simulate`` / ``simulate_sweep``
+                   compat wrappers
 """
-from repro.core.engine.grid import (simulate, simulate_grid,  # noqa: F401
-                                    simulate_sweep)
+from repro.core.engine.grid import (last_macro_hit_rate,  # noqa: F401
+                                    simulate, simulate_cells,
+                                    simulate_grid, simulate_sweep)
 from repro.core.engine.state import SimResult  # noqa: F401
 from repro.core.engine.step import compile_count  # noqa: F401
 
-__all__ = ["SimResult", "simulate", "simulate_grid", "simulate_sweep",
-           "compile_count"]
+__all__ = ["SimResult", "simulate", "simulate_cells", "simulate_grid",
+           "simulate_sweep", "compile_count", "last_macro_hit_rate"]

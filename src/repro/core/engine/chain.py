@@ -56,7 +56,9 @@ class Batch(NamedTuple):
     active: jnp.ndarray  # (Q,) bool
     addr: jnp.ndarray    # (Q,) i32
     ver: jnp.ndarray     # (Q,) i32
-    owner: jnp.ndarray   # (Q,) i32
+    owner: jnp.ndarray   # (Q,) i8 (the packed MachineState owner dtype;
+                         #          `_place`'s injective pick() sums carry
+                         #          it through without widening)
     emit: jnp.ndarray    # (Q,) f64  emission time at the previous switch
     ohop: jnp.ndarray    # (Q,) i32  origin hop (0 = hop-1 flat columns,
                          #           m > 0 = deep row m-1) for dd writeback

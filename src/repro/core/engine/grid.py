@@ -8,6 +8,17 @@ nested-``vmap``-ed over the config axis then the trace axis.  Mixed
 schemes in one grid are first-class — the scheme is traced, not a
 compile-time static.
 
+``simulate_cells`` is the flat variant: one result per (trace, config)
+*pair* under a single vmap axis, for sweeps that never needed the full
+cross product (half the cells of an anchored two-trace sweep).
+
+The stacker also runs the macro-run pre-pass (``core.traces.plan_runs``)
+and pads the op axis by ``MACRO_KMAX`` slots so the engine's macro-step
+window slice never clamps; ``macro=False`` opts a call out (the
+differential tests' control column).  Input buffers are donated to the
+jitted programs — they are freshly staged per call, so XLA may reuse
+them for the scan carry instead of allocating.
+
 ``simulate`` and ``simulate_sweep`` are thin compatibility wrappers over
 the same cell program, returning identical ``SimResult`` objects to the
 original monolithic simulator.
@@ -15,6 +26,7 @@ original monolithic simulator.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import List, Sequence
 
 import jax
@@ -25,10 +37,21 @@ from jax.experimental import enable_x64
 from repro.core.engine.state import (SimResult, result_from_stats,
                                      scalars_from_config)
 from repro.core.engine.step import scan_cell
-from repro.core.params import PCSConfig
-from repro.core.traces import Trace
+from repro.core.params import MACRO_KMAX, PCSConfig
+from repro.core.traces import Trace, plan_runs
 
 _BUCKET = 16384
+
+# telemetry of the most recent grid/cells call: macro-executed trace
+# slots vs total trace slots (the benchmarks' macro_hit_rate source)
+_LAST_MACRO = {"macro_ops": 0, "total_ops": 0}
+
+
+def last_macro_hit_rate() -> float:
+    """Fraction of trace slots the latest simulate_* call ran via
+    macro-steps (0.0 when macro was disabled or nothing ran)."""
+    total = _LAST_MACRO["total_ops"]
+    return (_LAST_MACRO["macro_ops"] / total) if total else 0.0
 
 
 def _pad_up(n: int, b: int = _BUCKET) -> int:
@@ -41,9 +64,12 @@ def _stack_traces(traces: Sequence[Trace], bucket: int):
     Padded cores get zero-length streams (they never issue an op and
     never count toward barriers); padded steps are no-ops, so sharing
     one bucket across workloads of different sizes changes no result.
+    The op axis carries ``MACRO_KMAX`` slots of slack past the longest
+    stream (inside the bucket rounding) so the macro-step window slice
+    never clamps, and the macro-run plan is stacked alongside.
     """
     C = max(t.ops.shape[0] for t in traces)
-    L = _pad_up(max(t.ops.shape[1] for t in traces), bucket)
+    L = _pad_up(max(t.ops.shape[1] for t in traces) + MACRO_KMAX, bucket)
     T = len(traces)
     ops = np.zeros((T, C, L), np.int32)
     addrs = np.zeros((T, C, L), np.int32)
@@ -55,8 +81,10 @@ def _stack_traces(traces: Sequence[Trace], bucket: int):
         addrs[k, :c, :l] = t.addrs
         gaps[k, :c, :l] = t.gaps
         lengths[k, :c] = t.lengths
+    mlen = np.stack([plan_runs(ops[k], addrs[k], gaps[k], MACRO_KMAX)
+                     for k in range(T)])
     n_steps = _pad_up(max(t.total_ops for t in traces), bucket)
-    return ops, addrs, gaps, lengths, n_steps
+    return ops, addrs, gaps, lengths, mlen, n_steps
 
 
 def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None,
@@ -83,39 +111,89 @@ def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None,
     return sc, schemes, max_pbe, banks.pop(), n_deep
 
 
-@functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
-                                             "pm_banks", "n_track",
-                                             "n_tenants_max", "n_deep_max"))
-def _run_cell(ops, addrs, gaps, lengths, scheme, sc, *,
+_STATICS = ("max_pbe", "n_steps", "pm_banks", "n_track", "n_tenants_max",
+            "n_deep_max", "macro")
+_DONATED = ("ops", "addrs", "gaps", "mlen")
+
+
+@functools.partial(jax.jit, static_argnames=_STATICS,
+                   donate_argnames=_DONATED)
+def _run_cell(ops, addrs, gaps, lengths, mlen, scheme, sc, *,
               max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
-              n_deep_max):
+              n_deep_max, macro):
     # single-cell program: no batch axes, so `lax.switch` lowers to real
     # branches instead of vmap's execute-all-and-select
     return scan_cell(ops, addrs, gaps, lengths, scheme, sc,
                      max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
                      n_track=n_track, n_tenants_max=n_tenants_max,
-                     n_deep_max=n_deep_max)
+                     n_deep_max=n_deep_max, mlen=mlen, macro=macro)
 
 
-@functools.partial(jax.jit, static_argnames=("max_pbe", "n_steps",
-                                             "pm_banks", "n_track",
-                                             "n_tenants_max", "n_deep_max"))
-def _run_grid(ops, addrs, gaps, lengths, schemes, sc, *,
+def _cell_fn(max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
+             n_deep_max, macro):
+    def cell(ops, addrs, gaps, lengths, mlen, scheme, sc):
+        return scan_cell(ops, addrs, gaps, lengths, scheme, sc,
+                         max_pbe=max_pbe, n_steps=n_steps,
+                         pm_banks=pm_banks, n_track=n_track,
+                         n_tenants_max=n_tenants_max,
+                         n_deep_max=n_deep_max, mlen=mlen, macro=macro)
+    return cell
+
+
+@functools.partial(jax.jit, static_argnames=_STATICS,
+                   donate_argnames=_DONATED)
+def _run_grid(ops, addrs, gaps, lengths, mlen, schemes, sc, *,
               max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
-              n_deep_max):
-    cell = functools.partial(scan_cell, max_pbe=max_pbe, n_steps=n_steps,
-                             pm_banks=pm_banks, n_track=n_track,
-                             n_tenants_max=n_tenants_max,
-                             n_deep_max=n_deep_max)
-    over_cfg = jax.vmap(cell, in_axes=(None, None, None, None, 0, 0))
-    over_tr = jax.vmap(over_cfg, in_axes=(0, 0, 0, 0, None, None))
-    return over_tr(ops, addrs, gaps, lengths, schemes, sc)
+              n_deep_max, macro):
+    cell = _cell_fn(max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
+                    n_deep_max, macro)
+    over_cfg = jax.vmap(cell, in_axes=(None, None, None, None, None, 0, 0))
+    over_tr = jax.vmap(over_cfg, in_axes=(0, 0, 0, 0, 0, None, None))
+    return over_tr(ops, addrs, gaps, lengths, mlen, schemes, sc)
+
+
+@functools.partial(jax.jit, static_argnames=_STATICS,
+                   donate_argnames=_DONATED)
+def _run_cells(ops, addrs, gaps, lengths, mlen, schemes, sc, *,
+               max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
+               n_deep_max, macro):
+    # flat pairing: one shared batch axis over traces AND configs
+    cell = _cell_fn(max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
+                    n_deep_max, macro)
+    return jax.vmap(cell)(ops, addrs, gaps, lengths, mlen, schemes, sc)
+
+
+def _results_from(out, traces, configs, track_addrs, pairs: bool):
+    (runtimes, stats, durable_ver, n_recov, recov_ns, recov_t,
+     hop_stats, recov_h, mops) = out
+    _LAST_MACRO["macro_ops"] = int(np.sum(mops))
+    _LAST_MACRO["total_ops"] = int(sum(t.total_ops for t in traces)
+                                   * (1 if pairs else len(configs)))
+
+    def cell(i, j, k):
+        return result_from_stats(
+            float(runtimes[k]), stats[k],
+            crash_at_ns=configs[j].crash_at_ns,
+            recovery_entries=int(n_recov[k]),
+            recovery_ns=float(recov_ns[k]),
+            durable_ver=(durable_ver[k][:track_addrs].copy()
+                         if track_addrs > 0 else None),
+            n_tenants=configs[j].n_tenants,
+            tenant_recovery=recov_t[k],
+            n_hops=len(configs[j].hop_pbes),
+            hop_stats=hop_stats[k],
+            hop_recovery=recov_h[k])
+    if pairs:
+        return [cell(k, k, (k,)) for k in range(len(traces))]
+    return [[cell(i, j, (i, j)) for j in range(len(configs))]
+            for i in range(len(traces))]
 
 
 def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                   max_pbe: int | None = None,
                   bucket: int = _BUCKET,
-                  track_addrs: int = 0) -> List[List[SimResult]]:
+                  track_addrs: int = 0,
+                  macro: bool = True) -> List[List[SimResult]]:
     """Simulate every (trace, config) cell in one compiled program.
 
     Returns a ``len(traces) x len(configs)`` nested list of SimResult.
@@ -129,17 +207,23 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
     A config's ``n_tenants`` is a traced scalar too — a {workload x
     scheme x tenant-count} sweep shares the program; only the *max*
     tenant count (per-tenant stats rows) is a static shape.
+    ``macro`` (static) toggles the guarded macro-step fast path —
+    results are bit-identical either way (the crash differential pins
+    this); it exists so the tests can diff the two columns.
     """
     if not traces or not configs:
         return [[] for _ in traces]
-    ops, addrs, gaps, lengths, n_steps = _stack_traces(traces, bucket)
+    ops, addrs, gaps, lengths, mlen, n_steps = _stack_traces(traces, bucket)
     # static per-tenant stats row count; every config's rows beyond its
     # own n_tenants stay zero, so mixed tenant counts share one program
     n_tenants_max = max(c.n_tenants for c in configs)
     sc_np, schemes, max_pbe, pm_banks, n_deep = _stack_configs(
         configs, max_pbe, n_tenants_max)
     single = len(traces) == 1 and len(configs) == 1
-    with enable_x64():
+    with enable_x64(), warnings.catch_warnings():
+        # donated buffers the program cannot alias (dtype/layout) emit a
+        # UserWarning; donation is best-effort here
+        warnings.filterwarnings("ignore", message=".*[Dd]onat")
         if single:
             # 1x1 grid: skip the vmap so the op/scheme switches keep
             # their branch semantics (~4x less work per scan step)
@@ -148,44 +232,79 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
             out = _run_cell(
                 jnp.asarray(ops[0]), jnp.asarray(addrs[0]),
                 jnp.asarray(gaps[0]), jnp.asarray(lengths[0]),
-                jnp.asarray(schemes[0]), sc,
+                jnp.asarray(mlen[0]), jnp.asarray(schemes[0]), sc,
                 max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
                 n_track=track_addrs, n_tenants_max=n_tenants_max,
-                n_deep_max=n_deep)
+                n_deep_max=n_deep, macro=macro)
             out = tuple(np.asarray(o)[None, None] for o in out)
         else:
             sc = {k: jnp.asarray(v, jnp.float64) for k, v in sc_np.items()}
             out = _run_grid(
                 jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(gaps),
-                jnp.asarray(lengths), jnp.asarray(schemes), sc,
+                jnp.asarray(lengths), jnp.asarray(mlen),
+                jnp.asarray(schemes), sc,
                 max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
                 n_track=track_addrs, n_tenants_max=n_tenants_max,
-                n_deep_max=n_deep)
+                n_deep_max=n_deep, macro=macro)
             out = tuple(np.asarray(o) for o in out)
-    (runtimes, stats, durable_ver, n_recov, recov_ns, recov_t,
-     hop_stats, recov_h) = out
-    return [[result_from_stats(
-                float(runtimes[i, j]), stats[i, j],
-                crash_at_ns=configs[j].crash_at_ns,
-                recovery_entries=int(n_recov[i, j]),
-                recovery_ns=float(recov_ns[i, j]),
-                durable_ver=(durable_ver[i, j][:track_addrs].copy()
-                             if track_addrs > 0 else None),
-                n_tenants=configs[j].n_tenants,
-                tenant_recovery=recov_t[i, j],
-                n_hops=len(configs[j].hop_pbes),
-                hop_stats=hop_stats[i, j],
-                hop_recovery=recov_h[i, j])
-             for j in range(len(configs))] for i in range(len(traces))]
+    return _results_from(out, traces, configs, track_addrs, pairs=False)
+
+
+def simulate_cells(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
+                   max_pbe: int | None = None,
+                   bucket: int = _BUCKET,
+                   track_addrs: int = 0,
+                   macro: bool = True) -> List[SimResult]:
+    """Simulate paired cells: ``result[k]`` is (traces[k], configs[k]).
+
+    The flat twin of :func:`simulate_grid` for sweeps that are not a
+    cross product — e.g. a crash sweep anchored on two traces runs
+    ``len(configs)`` cells instead of ``2 x len(configs)``.  One vmap
+    axis, one compiled program; repeated Trace objects stack by
+    reference on the host, so passing the same trace many times costs
+    one pad, not many.
+    """
+    if not traces:
+        return []
+    if len(traces) != len(configs):
+        raise ValueError("simulate_cells wants len(traces) == len(configs)")
+    # stack unique traces once, then index the stacked arrays per pair
+    uniq: List[Trace] = []
+    index = {}
+    for t in traces:
+        if id(t) not in index:
+            index[id(t)] = len(uniq)
+            uniq.append(t)
+    ops, addrs, gaps, lengths, mlen, n_steps = _stack_traces(uniq, bucket)
+    sel = np.asarray([index[id(t)] for t in traces], np.int32)
+    ops, addrs, gaps = ops[sel], addrs[sel], gaps[sel]
+    lengths, mlen = lengths[sel], mlen[sel]
+    n_tenants_max = max(c.n_tenants for c in configs)
+    sc_np, schemes, max_pbe, pm_banks, n_deep = _stack_configs(
+        configs, max_pbe, n_tenants_max)
+    with enable_x64(), warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message=".*[Dd]onat")
+        sc = {k: jnp.asarray(v, jnp.float64) for k, v in sc_np.items()}
+        out = _run_cells(
+            jnp.asarray(ops), jnp.asarray(addrs), jnp.asarray(gaps),
+            jnp.asarray(lengths), jnp.asarray(mlen),
+            jnp.asarray(schemes), sc,
+            max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
+            n_track=track_addrs, n_tenants_max=n_tenants_max,
+            n_deep_max=n_deep, macro=macro)
+        out = tuple(np.asarray(o) for o in out)
+    return _results_from(out, traces, configs, track_addrs, pairs=True)
 
 
 def simulate(trace: Trace, config: PCSConfig,
              max_pbe: int | None = None, *,
-             bucket: int = _BUCKET, track_addrs: int = 0) -> SimResult:
+             bucket: int = _BUCKET, track_addrs: int = 0,
+             macro: bool = True) -> SimResult:
     """Simulate one (trace, config) pair and return aggregate metrics."""
     max_pbe = max_pbe or config.max_hop_pbe
     return simulate_grid([trace], [config], max_pbe=max_pbe,
-                         bucket=bucket, track_addrs=track_addrs)[0][0]
+                         bucket=bucket, track_addrs=track_addrs,
+                         macro=macro)[0][0]
 
 
 def simulate_sweep(trace: Trace, configs: List[PCSConfig], *,

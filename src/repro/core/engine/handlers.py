@@ -156,12 +156,19 @@ def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
 
 
 # ----------------------------------------------------------------- persist
-def _persist_with_buffer(ctx: StepCtx, st: MachineState,
-                         coalesce_enabled: bool,
-                         drain_policy) -> MachineState:
+def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
     """Shared PB persist core: PBC service, lookup, allocation / victim
-    selection, entry write — then the scheme's drain policy."""
+    selection, entry write — then the scheme's drain policy.
+
+    One traced body serves both buffered schemes: ``is_rf`` selects
+    coalescing and the threshold/preset drain policy (PB_RF) vs the
+    immediate write-through drain (PB) elementwise.  Tracing this once
+    instead of once per scheme halves the vmap-executed switch-chain
+    work per step (vmap runs every ``lax.switch`` branch), which is the
+    dominant cost of the scan body at depth >= 2.
+    """
     sc, t, addr = ctx.sc, ctx.t, ctx.addr
+    is_rf = ctx.scheme == 2          # Scheme.PB_RF, traced
     crash = sc["crash_at"]
     bank = channels.bank_of(addr, ctx.n_banks)
     arr = t + sc["ow_cpu_sw1"]
@@ -179,7 +186,7 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     v_new = st.aver[a_idx] + 1
     aver2 = st.aver.at[a_idx].add(jnp.where(tracked, 1, 0))
 
-    is_coalesce = jnp.logical_and(coalesce_enabled, has_dirty)
+    is_coalesce = jnp.logical_and(is_rf, has_dirty)
     # An in-flight (Drain) older version does NOT block the new persist
     # (write order, Section IV-A): the new version gets its own entry.
     # The switch->PM path is FIFO per bank, so drains of the same line
@@ -258,11 +265,19 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState,
     ver3 = st.ver.at[wslot].set(v_new)
     # the writer takes ownership (a cross-tenant coalesce included,
     # mirroring the oracle's PBEntry.tenant update)
-    owner3 = st.owner.at[wslot].set(ctx.tenant.astype(jnp.int32))
+    owner3 = st.owner.at[wslot].set(ctx.tenant.astype(st.owner.dtype))
 
-    state4, dd4, pm_busy2, policy_writes = drain_policy(
-        bank=bank, wslot=wslot, t_written=t_written, state3=state3,
-        tag3=tag3, lru3=lru3, dd3=dd3, pm_busy1=pm_busy1, owner3=owner3)
+    # Both drain policies run (cheap relative to the chain legs); the
+    # traced scheme bit picks each output elementwise, bit-exactly.
+    state4_pb, dd4_pb, pmb2_pb, pw_pb = policy.drain_immediate(
+        sc, bank, ctx.slot_ids, wslot, t_written, state3, dd3, pm_busy1)
+    state4_rf, dd4_rf, pmb2_rf, pw_rf = policy.drain_threshold_preset(
+        sc, ctx.n_banks, ctx.slot_active, t_written, state3, tag3, lru3,
+        dd3, pm_busy1, owner=owner3, tenant=ctx.tenant)
+    state4 = jnp.where(is_rf, state4_rf, state4_pb)
+    dd4 = jnp.where(is_rf, dd4_rf, dd4_pb)
+    pm_busy2 = jnp.where(is_rf, pmb2_rf, pmb2_pb)
+    policy_writes = jnp.where(is_rf, pw_rf, pw_pb)
 
     # drains the policy just scheduled (Dirty -> Drain) whose PM ack
     # beats the crash make their versions durable at the device
@@ -400,22 +415,13 @@ def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
                                      sc["nvm_w_occ"]),
             stats=stats)
 
-    def pb(st: MachineState) -> MachineState:
-        return _persist_with_buffer(
-            ctx, st, coalesce_enabled=False,
-            drain_policy=lambda **kw: policy.drain_immediate(
-                sc, kw["bank"], ctx.slot_ids, kw["wslot"], kw["t_written"],
-                kw["state3"], kw["dd3"], kw["pm_busy1"]))
+    def buffered(st: MachineState) -> MachineState:
+        # PB and PB_RF share one traced body (is_rf inside selects the
+        # coalesce rule and drain policy) so vmap executes the
+        # expensive chain legs once per step instead of twice.
+        return _persist_with_buffer(ctx, st)
 
-    def pb_rf(st: MachineState) -> MachineState:
-        return _persist_with_buffer(
-            ctx, st, coalesce_enabled=True,
-            drain_policy=lambda **kw: policy.drain_threshold_preset(
-                sc, ctx.n_banks, ctx.slot_active, kw["t_written"],
-                kw["state3"], kw["tag3"], kw["lru3"], kw["dd3"],
-                kw["pm_busy1"], owner=kw["owner3"], tenant=ctx.tenant))
-
-    return jax.lax.switch(ctx.scheme, [nopb, pb, pb_rf], st)
+    return jax.lax.switch(jnp.minimum(ctx.scheme, 1), [nopb, buffered], st)
 
 
 # ----------------------------------------------------------------- barrier

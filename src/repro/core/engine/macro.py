@@ -1,0 +1,272 @@
+"""Macro-stepping: execute a homogeneous op run as one guarded step.
+
+The trace-time pre-pass (``core.traces.plan_runs``) marks, per trace
+slot, the length of the longest *statically eligible* run starting
+there: consecutive PM_READ / PERSIST ops of one core with non-negative
+gaps and pairwise-distinct addresses (when a persist is involved).  The
+step driver (``engine.step``) consults that plan and hands eligible
+windows to :func:`macro_step`, which replays up to ``MACRO_KMAX`` ops of
+the selected core as an *unrolled exact mini-interpreter* — every
+arithmetic expression is kept in the same form and order as the
+slot-at-a-time handlers, so a committed macro-step is bit-identical to
+the handler path by construction, not by approximation.
+
+Commit-or-abort contract (the SyphonArch trace-speculation shape —
+record a hot linear path, guard it, fall back on guard failure):
+
+  * while replaying, the mini-interpreter accumulates a traced guard
+    conjunction; any op that would leave the straight-line fast path —
+    a PB lookup hit, a coalesce opportunity, a missing Empty slot, a
+    PB_RF drain-down that would fire, an op issuing past the crash
+    point, a deep (>= 2 switch) chain cell — clears the guard;
+  * cross-core interleaving is guarded globally: every other core's
+    next issue time must lie strictly after the window's last issue
+    time, so the engine's argmin selection provably picks this core
+    for the whole window;
+  * on guard failure the whole candidate state is discarded (commit-
+    or-abort, never a partial prefix) and the driver's slot-at-a-time
+    result stands; the run re-enters macro planning at the next step.
+
+A second, independent fast path collapses *dead runs*: once a core's
+next op issues after the crash point, its remaining stream drains as
+provable no-ops that only advance its cursor and clock — those are
+collapsed ``MACRO_KMAX`` at a time with no guard beyond gap
+non-negativity (dead ops touch no shared state, so they commute with
+every other core's ops bit-exactly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import channels, policy
+from repro.core.engine.state import (DIRTY, EMPTY, INF, H_FWD_CNT, H_FWD_SUM,
+                                     S_ACKED, S_DURABLE, S_PBCQ_SUM,
+                                     S_PERSIST_CNT, S_PERSIST_SUM,
+                                     S_PM_WRITES, S_READ_CNT, S_READ_SUM)
+from repro.core.params import Op
+
+
+def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
+               valid, live, t_issue, i, *, kmax: int):
+    """Candidate macro execution of up to ``kmax`` ops of core ``ctx.c``.
+
+    Returns ``(st_macro, use_macro, k_adv)``: the candidate state (only
+    meaningful where ``use_macro`` holds), whether either macro path
+    (live window or dead run) committed, and how many trace slots it
+    consumed.  The caller selects ``st_macro`` over the slot-step result
+    and advances the cursor by ``k_adv`` when ``use_macro`` is set.
+    """
+    sc = ctx.sc
+    c = ctx.c
+    crash = sc["crash_at"]
+    A = st.aver.shape[0]
+    T = st.stats.shape[0]
+
+    # window data; the grid pads L by kmax slots so the slice never
+    # clamps (see grid._stack_traces)
+    c32 = c.astype(jnp.int32)
+    i32 = i.astype(jnp.int32)
+    w_ops = jax.lax.dynamic_slice(ops, (c32, i32), (1, kmax))[0]
+    w_addr = jax.lax.dynamic_slice(addrs, (c32, i32), (1, kmax))[0]
+    w_gap = jax.lax.dynamic_slice(gaps64, (c32, i32), (1, kmax))[0]
+    rem = lengths[c] - i
+    k_cap = jnp.clip(rem, 0, kmax)
+
+    # ---------------- dead-run collapse (post-crash stream drain) ------
+    # Each dead step sets clock[c] to its issue time and bumps the
+    # cursor; the sequential masked adds reproduce the step-at-a-time
+    # rounding order exactly.  Monotone issue times (gaps >= 0) make
+    # first-dead imply all-dead.
+    gaps_ok = jnp.all(w_gap >= 0.0)
+    clk_dead, _ = jax.lax.scan(
+        lambda ck, jg: (jnp.where(jg[0] < k_cap, ck + jg[1], ck), None),
+        st.clock[c], (jnp.arange(kmax), w_gap))
+    dead_ok = valid & ~live & gaps_ok & (k_cap >= 2)
+    st_dead = st._replace(clock=st.clock.at[c].set(clk_dead))
+
+    # ---------------- live window (exact mini-interpreter) -------------
+    k_live = jnp.minimum(mlen[c, i].astype(jnp.int32), k_cap)
+    is_nopb = ctx.scheme == 0                       # Scheme.NOPB
+    is_rf = ctx.scheme == 2                         # Scheme.PB_RF
+    pb_like = ~is_nopb
+    # chain cells (>= 2 switches) take the deep persist/read legs the
+    # mini-interpreter does not model; their dead tails still collapse
+    deep_ok = is_nopb | (sc["n_switches"] < 2.0)
+
+    ow = sc["ow_cpu_pm"]
+
+    # The window replay is a lax.scan over the kmax slots (not a Python
+    # unroll): every iteration runs the identical expressions in
+    # sequence, so the result is bitwise the same as unrolling while the
+    # op body lowers to ONE XLA subgraph instead of kmax inlined copies
+    # (the scan body already dominates compile time; unrolling the
+    # mini-interpreter 8x on top of it roughly doubled it again).
+    def win_op(carry, x):
+        (clk, state_cur, tag_cur, lru_cur, dd_cur, ver_cur, owner_cur,
+         pmb_cur, pbc_cur, pm_ver_cur, aver_cur, stats_cur, hop_cur,
+         guard, t_last) = carry
+        j, o_j, a_j, g_j = x
+        m = j < k_live
+        is_p = o_j == int(Op.PERSIST)
+        t_j = clk + g_j
+        t_last = jnp.where(m, t_j, t_last)
+        bank = channels.bank_of(a_j, ctx.n_banks)
+        tracked = (a_j >= 0) & (a_j < ctx.n_track)
+        a_idx = jnp.clip(a_j, 0, A - 1)
+
+        # ---- PM read (handler miss path; identical in both schemes)
+        pm_start_r = channels.service_start(pmb_cur, bank, t_j + ow)
+        resp = pm_start_r + sc["nvm_read"] + ow
+        state_rd = policy.lazy_free(state_cur, dd_cur, t_j)
+        has_rd = jnp.any(ctx.slot_active & (tag_cur == a_j)
+                         & (state_rd != EMPTY))
+        pmb_rd = pmb_cur.at[bank].set(pm_start_r + sc["nvm_r_occ"])
+
+        # ---- persist, NoPB leg (always exact: no guard)
+        pm_start_w = channels.service_start(pmb_cur, bank, t_j + ow)
+        ack_n = pm_start_w + sc["nvm_write"] + ow
+        ok_n = ack_n <= crash
+        pmb_wn = channels.reserve(pmb_cur, bank, pm_start_w,
+                                  sc["nvm_w_occ"])
+
+        # ---- persist, buffered leg (fresh-Empty allocation only)
+        arr = t_j + sc["ow_cpu_sw1"]
+        pbc_start = channels.pbc_start(pbc_cur, arr,
+                                       sc["pbc_proc_ns"] + sc["tag_ns"])
+        state_p1 = policy.lazy_free(state_cur, dd_cur, pbc_start)
+        has_dirty = jnp.any(ctx.slot_active & (tag_cur == a_j)
+                            & (state_p1 == DIRTY))
+        # select_slot's Empty leg under the quota gate, verbatim
+        occ_t = jnp.sum(jnp.where(
+            ctx.slot_active & (state_p1 != EMPTY)
+            & (jnp.clip(owner_cur, 0, T - 1) == ctx.tenant), 1.0, 0.0))
+        over_quota = occ_t >= sc["quota"][ctx.tenant]
+        empty_mask = ctx.slot_active & (state_p1 == EMPTY) & ~over_quota
+        any_empty = jnp.any(empty_mask)
+        wslot = jnp.argmin(jnp.where(empty_mask, lru_cur, INF))
+        t_written = pbc_start + sc["data_ns"]
+        ack_p = t_written + sc["ow_cpu_sw1"]
+        v_new = aver_cur[a_idx] + 1
+        state_w = jnp.where(ctx.slot_ids == wslot, DIRTY, state_p1)
+        tag_w = tag_cur.at[wslot].set(a_j)
+        lru_w = lru_cur.at[wslot].set(t_written)
+        ver_w = ver_cur.at[wslot].set(v_new)
+        owner_w = owner_cur.at[wslot].set(
+            ctx.tenant.astype(owner_cur.dtype))
+        # PB: immediate drain of the written entry (exact policy call)
+        st4_pb, dd4_pb, pmb2_pb, _pw = policy.drain_immediate(
+            sc, bank, ctx.slot_ids, wslot, t_written, state_w, dd_cur,
+            pmb_cur)
+        dd_new_pb = dd4_pb[wslot]
+        # PB_RF: guard that the threshold/preset drain-down fires zero
+        # drains (same sub-expressions as drain_threshold_preset's k)
+        scoped = sc["drain_scope"] > 0.0
+        in_scope = jnp.where(scoped, owner_w == ctx.tenant, True)
+        dirty_cnt = jnp.sum((state_w == DIRTY) & ctx.slot_active
+                            & in_scope)
+        empty_cnt = jnp.sum((state_w == EMPTY) & ctx.slot_active)
+        thr = jnp.where(scoped, sc["t_threshold"][ctx.tenant],
+                        sc["threshold_count"])
+        pre = jnp.where(scoped, sc["t_preset"][ctx.tenant],
+                        sc["preset_count"])
+        k_thresh = jnp.where(dirty_cnt >= thr, dirty_cnt - pre, 0.0)
+        k_low = jnp.where(empty_cnt <= sc["empty_slack"],
+                          jnp.minimum(sc["low_water"], dirty_cnt), 0.0)
+        rf_zero = jnp.maximum(k_thresh, k_low) == 0.0
+        # scheme-selected buffered outcome (RF with k == 0 is a no-op
+        # drain policy: state/dd/pm_busy provably unchanged)
+        state_wp = jnp.where(is_rf, state_w, st4_pb)
+        dd_wp = jnp.where(is_rf, dd_cur, dd4_pb)
+        pmb_wp = jnp.where(is_rf, pmb_cur, pmb2_pb)
+        pbcq_inc = jnp.maximum(pbc_cur - arr, 0.0)
+        pbc_wp = jnp.maximum(
+            channels.pbc_hold(pbc_cur, arr, sc["pbc_occ_ns"]), 0.0)
+
+        # ---- per-op guard
+        g_wr = (any_empty & (t_written <= crash)
+                & (~is_rf | (~has_dirty & rf_zero)))
+        g_op = ((t_j <= crash)
+                & jnp.where(pb_like, jnp.where(is_p, g_wr, ~has_rd), True))
+        guard = guard & jnp.where(m, g_op, True)
+
+        # ---- apply op j (masked; aborted windows are discarded whole)
+        sel_r = m & ~is_p
+        sel_wn = m & is_p & is_nopb
+        sel_wp = m & is_p & pb_like
+        clk = jnp.where(
+            m, jnp.where(is_p, jnp.where(is_nopb, ack_n, ack_p), resp),
+            clk)
+        state_cur = jnp.where(sel_wp, state_wp,
+                              jnp.where(sel_r & pb_like, state_rd,
+                                        state_cur))
+        tag_cur = jnp.where(sel_wp, tag_w, tag_cur)
+        lru_cur = jnp.where(sel_wp, lru_w, lru_cur)
+        ver_cur = jnp.where(sel_wp, ver_w, ver_cur)
+        owner_cur = jnp.where(sel_wp, owner_w, owner_cur)
+        dd_cur = jnp.where(sel_wp, dd_wp, dd_cur)
+        pmb_cur = jnp.where(sel_r, pmb_rd,
+                            jnp.where(sel_wn, pmb_wn,
+                                      jnp.where(sel_wp, pmb_wp, pmb_cur)))
+        pbc_cur = jnp.where(sel_wp, pbc_wp, pbc_cur)
+        aver_cur = aver_cur.at[a_idx].add(
+            jnp.where(m & is_p & tracked, 1, 0))
+        pv_ok = jnp.where(is_nopb, ok_n, ~is_rf & (dd_new_pb <= crash))
+        pm_ver_cur = pm_ver_cur.at[a_idx].max(
+            jnp.where(m & is_p & tracked & pv_ok, v_new, 0))
+        # stats / telemetry: adds of exact 0.0 are bitwise identities
+        # (every counter is >= +0.0), so skipped terms stay exact
+        stats_cur = stats_cur.at[ctx.tenant, S_READ_SUM].add(
+            jnp.where(sel_r, resp - t_j, 0.0))
+        stats_cur = stats_cur.at[ctx.tenant, S_READ_CNT].add(
+            jnp.where(sel_r, 1.0, 0.0))
+        stats_cur = stats_cur.at[ctx.tenant, S_PBCQ_SUM].add(
+            jnp.where(sel_wp, pbcq_inc, 0.0))
+        stats_cur = stats_cur.at[ctx.tenant, S_PERSIST_SUM].add(
+            jnp.where(m & is_p,
+                      jnp.where(is_nopb, ack_n, ack_p) - t_j, 0.0))
+        stats_cur = stats_cur.at[ctx.tenant, S_PERSIST_CNT].add(
+            jnp.where(m & is_p, 1.0, 0.0))
+        stats_cur = stats_cur.at[ctx.tenant, S_PM_WRITES].add(
+            jnp.where(m & is_p & (is_nopb | ~is_rf), 1.0, 0.0))
+        stats_cur = stats_cur.at[ctx.tenant, S_ACKED].add(
+            jnp.where(m & is_p,
+                      jnp.where(is_nopb, ok_n, ack_p <= crash)
+                      .astype(jnp.float64), 0.0))
+        stats_cur = stats_cur.at[ctx.tenant, S_DURABLE].add(
+            jnp.where(m & is_p,
+                      jnp.where(is_nopb, ok_n.astype(jnp.float64), 1.0),
+                      0.0))
+        hop_cur = hop_cur.at[0, H_FWD_CNT].add(
+            jnp.where(sel_wp, 1.0, 0.0))
+        hop_cur = hop_cur.at[0, H_FWD_SUM].add(
+            jnp.where(sel_wp, t_written - arr, 0.0))
+        return (clk, state_cur, tag_cur, lru_cur, dd_cur, ver_cur,
+                owner_cur, pmb_cur, pbc_cur, pm_ver_cur, aver_cur,
+                stats_cur, hop_cur, guard, t_last), None
+
+    carry0 = (st.clock[c], st.state, st.tag, st.lru, st.dd, st.ver,
+              st.owner, st.pm_busy, st.pbc_busy, st.pm_ver, st.aver,
+              st.stats, st.hop_stats, jnp.asarray(True), t_issue)
+    (clk, state_cur, tag_cur, lru_cur, dd_cur, ver_cur, owner_cur,
+     pmb_cur, pbc_cur, pm_ver_cur, aver_cur, stats_cur, hop_cur,
+     guard, t_last), _ = jax.lax.scan(
+        win_op, carry0, (jnp.arange(kmax), w_ops, w_addr, w_gap))
+
+    # no other core may issue inside the window (strict: argmin ties
+    # break by index, so equality must abort too)
+    others_min = jnp.min(tsel.at[c].set(INF))
+    live_ok = (valid & live & (k_live >= 2) & deep_ok & guard
+               & (others_min > t_last))
+
+    st_live = st._replace(
+        clock=st.clock.at[c].set(clk), state=state_cur, tag=tag_cur,
+        lru=lru_cur, dd=dd_cur, ver=ver_cur, owner=owner_cur,
+        aver=aver_cur, pm_ver=pm_ver_cur, pm_busy=pmb_cur,
+        pbc_busy=pbc_cur, stats=stats_cur, hop_stats=hop_cur)
+
+    use_macro = live_ok | dead_ok
+    k_adv = jnp.where(live_ok, k_live, k_cap)
+    st_macro = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(live_ok, a, b), st_live, st_dead)
+    return st_macro, use_macro, k_adv

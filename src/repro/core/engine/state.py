@@ -73,16 +73,26 @@ class MachineState(NamedTuple):
     the newest version whose PM write-ack landed *before the crash point*
     (a later ack means the in-flight write is lost with the power).
     Addresses ``>= n_track`` are not tracked (A = max(n_track, 1)).
+
+    The scan carry is packed: categorical columns (``state``/``owner``
+    and their deep-hop twins) live in int8, barrier arrival counts in
+    int16 — weak-typed literal comparisons and ``where`` selects keep
+    the narrow dtype through every handler.  Every *time* column stays
+    float64: the issue-time merge, the crash compares and the lazily
+    freed drain-ack stamps all subtract nanosecond-scale quantities
+    from ~1e9-scale clocks, where float32 would quantize at ~100 ns and
+    break the bit-exact engine<->oracle differentials.  ``tag`` (cache
+    lines up to 2^20+) and the version counters stay int32.
     """
 
     clock: jnp.ndarray     # (C,)  f64  per-core clocks
     ptr: jnp.ndarray       # (C,)  i32  per-core trace cursors
     tag: jnp.ndarray       # (P,)  i32  TAT tags (P = max_pbe)
-    state: jnp.ndarray     # (P,)  i32  ST states (Empty/Dirty/Drain)
+    state: jnp.ndarray     # (P,)  i8   ST states (Empty/Dirty/Drain)
     lru: jnp.ndarray       # (P,)  f64  LRU stamps
     dd: jnp.ndarray        # (P,)  f64  in-flight drain-ack times
     ver: jnp.ndarray       # (P,)  i32  per-entry persist version
-    owner: jnp.ndarray     # (P,)  i32  tenant that last wrote each entry
+    owner: jnp.ndarray     # (P,)  i8   tenant that last wrote each entry
                            #            (quota occupancy, weighted victim
                            #            selection, tenant-scoped drains,
                            #            per-tenant recovery attribution)
@@ -91,18 +101,18 @@ class MachineState(NamedTuple):
     pm_busy: jnp.ndarray   # (B,)  f64  PM bank next-free times
     pbc_busy: jnp.ndarray  # ()    f64  PBC next-free time
     blocked: jnp.ndarray   # (C,)  bool blocked at barrier
-    bcount: jnp.ndarray    # (T,)  i32  per-tenant barrier arrival counts
+    bcount: jnp.ndarray    # (T,)  i16  per-tenant barrier arrival counts
     stats: jnp.ndarray     # (T, N_STATS) f64 per-tenant accumulators
     # ---- deep-hop PB columns (the switch-level axis, D = n_deep_max) ----
     # Switch j+2 of the chain owns row j of each array; the flat columns
     # above stay the first (tenant-facing) switch, so depth-1 configs run
     # byte-identical code (D == 0 skips the chain entirely at trace time).
     dtag: jnp.ndarray      # (D, P) i32  deep-hop TAT tags
-    dstate: jnp.ndarray    # (D, P) i32  deep-hop ST states
+    dstate: jnp.ndarray    # (D, P) i8   deep-hop ST states
     dlru: jnp.ndarray      # (D, P) f64  deep-hop LRU stamps
     ddd: jnp.ndarray       # (D, P) f64  deep-hop in-flight forward-ack times
     dver: jnp.ndarray      # (D, P) i32  deep-hop held persist versions
-    downer: jnp.ndarray    # (D, P) i32  owning tenant (recovery attribution)
+    downer: jnp.ndarray    # (D, P) i8   owning tenant (recovery attribution)
     dwt: jnp.ndarray       # (D, P) f64  commit time into this hop's cells
                            #             (crash gate + read visibility)
     hpbc: jnp.ndarray      # (D,)   f64  deep-hop PBC / inter-switch channel
@@ -116,28 +126,30 @@ def init_state(n_cores: int, max_pbe: int, pm_banks: int,
     A = max(n_track, 1)
     T = max(n_tenants_max, 1)
     D = max(n_deep_max, 0)
+    if T > 127:
+        raise ValueError("n_tenants_max exceeds the int8 owner column")
     return MachineState(
         clock=jnp.zeros((n_cores,), jnp.float64),
         ptr=jnp.zeros((n_cores,), jnp.int32),
         tag=jnp.full((max_pbe,), -1, jnp.int32),
-        state=jnp.full((max_pbe,), EMPTY, jnp.int32),
+        state=jnp.full((max_pbe,), EMPTY, jnp.int8),
         lru=jnp.zeros((max_pbe,), jnp.float64),
         dd=jnp.zeros((max_pbe,), jnp.float64),
         ver=jnp.zeros((max_pbe,), jnp.int32),
-        owner=jnp.zeros((max_pbe,), jnp.int32),
+        owner=jnp.zeros((max_pbe,), jnp.int8),
         aver=jnp.zeros((A,), jnp.int32),
         pm_ver=jnp.zeros((A,), jnp.int32),
         pm_busy=jnp.zeros((pm_banks,), jnp.float64),
         pbc_busy=jnp.zeros((), jnp.float64),
         blocked=jnp.zeros((n_cores,), bool),
-        bcount=jnp.zeros((T,), jnp.int32),
+        bcount=jnp.zeros((T,), jnp.int16),
         stats=jnp.zeros((T, N_STATS), jnp.float64),
         dtag=jnp.full((D, max_pbe), -1, jnp.int32),
-        dstate=jnp.full((D, max_pbe), EMPTY, jnp.int32),
+        dstate=jnp.full((D, max_pbe), EMPTY, jnp.int8),
         dlru=jnp.zeros((D, max_pbe), jnp.float64),
         ddd=jnp.zeros((D, max_pbe), jnp.float64),
         dver=jnp.zeros((D, max_pbe), jnp.int32),
-        downer=jnp.zeros((D, max_pbe), jnp.int32),
+        downer=jnp.zeros((D, max_pbe), jnp.int8),
         dwt=jnp.zeros((D, max_pbe), jnp.float64),
         hpbc=jnp.zeros((D,), jnp.float64),
         hop_stats=jnp.zeros((D + 1, N_HOP_STATS), jnp.float64),

@@ -10,6 +10,21 @@ the property the crash model and the differential conformance harness
 exhaustion are provable no-ops, which lets callers pad the scan length
 to shared buckets without changing any result.
 
+Two step-count optimizations ride on that no-op property:
+
+  * **macro-stepping** (``engine.macro``): when the trace-time run plan
+    (``mlen``) marks an eligible homogeneous window at the selected
+    core's cursor, the step executes up to ``MACRO_KMAX`` ops at once
+    behind a traced guard conjunction, falling back to the
+    slot-at-a-time handlers on guard failure — bit-exact either way;
+  * **chunked early exit**: the scan runs in ``CHUNK``-step segments
+    under a ``while_loop`` that stops at the first segment boundary
+    where every core has drained its stream, so bucket-padded
+    ``n_steps`` costs nothing once the real work (shortened further by
+    macro-steps) is done.  Exactly ``n_steps`` steps are executed in
+    the worst case — never more — so short-scan callers see the old
+    semantics unchanged.
+
 Crash semantics (Section V-D4): ``sc["crash_at"]`` is a traced scalar;
 an op whose issue time exceeds it becomes a no-op (the machine is off),
 and after the scan a recovery pass (``handlers.recovery_snapshot``)
@@ -21,7 +36,10 @@ surviving Dirty/Drain PBEs.
 ``jit(vmap(vmap(...)))`` (full trace x config grid).  A module-level
 compile counter increments once per trace of ``scan_cell`` — i.e. once
 per XLA program built — backing the one-compilation acceptance test and
-the BENCH_engine.json perf tracking.
+the BENCH_engine.json perf tracking.  ``return_state=True`` traces
+(the padding-invariant tests' state-introspection path) are excluded
+from the counter: they are test-only retraces of an already-counted
+program shape, and counting them double-billed suites that mix both.
 """
 from __future__ import annotations
 
@@ -29,12 +47,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine.handlers import HANDLERS, StepCtx, recovery_snapshot
+from repro.core.engine.macro import macro_step
 from repro.core.engine.state import INF, MachineState, init_state
-from repro.core.params import Op
+from repro.core.params import MACRO_KMAX, Op
 
 # Incremented inside `scan_cell` at trace time: one tick per XLA program
-# built from the engine (jit caches hits do not retrace).
+# built from the engine (jit cache hits do not retrace; test-only
+# return_state traces are excluded, see module docstring).
 _COMPILES = [0]
+
+# Steps per inner scan segment of the chunked driver.  Segment
+# boundaries only ever skip provable no-op steps (every core past its
+# stream end), so results are invariant to this constant; it trades
+# while_loop trip overhead against wasted post-exhaustion steps.
+CHUNK = 128
 
 
 def compile_count() -> int:
@@ -45,12 +71,13 @@ def compile_count() -> int:
 def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
               max_pbe: int, n_steps: int, pm_banks: int, n_track: int = 0,
               n_tenants_max: int = 1, n_deep_max: int = 0,
+              mlen=None, macro: bool = False,
               return_state: bool = False):
     """Simulate one (trace, config) cell.
 
     Returns ``(runtime, stats, durable_ver, n_recovered, recovery_ns,
-    recovered_per_tenant, hop_stats, recovered_per_hop)``, plus the
-    final :class:`MachineState` when ``return_state`` is set
+    recovered_per_tenant, hop_stats, recovered_per_hop, macro_ops)``,
+    plus the final :class:`MachineState` when ``return_state`` is set
     (used by the padding-invariant tests).  ``scheme`` and every entry
     of ``sc`` are traced scalars; only array shapes (core count C,
     ``max_pbe``, ``pm_banks``, ``n_steps``, ``n_track``,
@@ -59,13 +86,23 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
     one); 0 skips the chain code entirely at trace time, so depth-1
     grids stay byte-identical to the pre-chain engine.
 
+    ``macro=True`` (static) enables the macro-stepping fast path;
+    ``mlen`` is the (C, L) int8 run plan from
+    ``core.traces.plan_runs``.  The caller must then pad the trace
+    axis L by at least ``MACRO_KMAX`` slots past the longest stream
+    (the grid stacker does) so the window slice never clamps.
+    ``macro_ops`` counts the trace slots executed via macro-steps
+    (0 when disabled) — the ``macro_hit_rate`` numerator.
+
     Tenancy: ``sc["n_tenants"]`` (traced) partitions the *live* cores
     into contiguous balanced groups — core ``c`` belongs to tenant
     ``floor(c * T / n_live)`` — that share the PB slots, the PBC FIFO
     and the PM banks but keep independent barriers and stats rows
     (``core.traces.tenant_ids`` is the numpy twin of this mapping).
     """
-    _COMPILES[0] += 1
+    if not return_state:
+        _COMPILES[0] += 1
+    use_macro = bool(macro) and mlen is not None
     C = ops.shape[0]
     slot_ids = jnp.arange(max_pbe)
     slot_active = slot_ids < sc["n_pbe"].astype(jnp.int32)
@@ -81,11 +118,15 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
                     jnp.minimum(t_int, n_tenants_max) - 1)
     live_per_tenant = jnp.zeros((n_tenants_max,), jnp.int32).at[tids].add(
         (lengths > 0).astype(jnp.int32))
+    # per-step invariant: the issue-time merge runs in f64, so widen the
+    # stored f32 gaps once instead of on every step
+    gaps64 = gaps.astype(jnp.float64)
 
-    def step(st: MachineState, _):
+    def step(carry, _):
+        st, mops = carry
         active = st.ptr < lengths
         idx = jnp.minimum(st.ptr, jnp.maximum(lengths - 1, 0))
-        next_gap = gaps[core_ids, idx].astype(jnp.float64)
+        next_gap = gaps64[core_ids, idx]
         # blocked cores wait at a barrier and cannot be selected; all
         # others compete on the *issue* time of their next op
         tsel = jnp.where(active & ~st.blocked, st.clock + next_gap, INF)
@@ -108,7 +149,21 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
         branches = [lambda s, h=h: h(ctx, s) for h in HANDLERS]
         st2 = jax.lax.switch(jnp.clip(op, 0, 5), branches, st)
 
-        # barriers synchronize only within a tenant (independent hosts)
+        if use_macro:
+            st_m, took, k_m = macro_step(
+                ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
+                valid, live, t_issue, i, kmax=MACRO_KMAX)
+            st2 = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(took, a, b), st_m, st2)
+            adv = jnp.where(took, k_m, 1)
+            mops = mops + jnp.where(took, k_m, 0)
+        else:
+            took = jnp.asarray(False)
+            adv = 1
+
+        # barriers synchronize only within a tenant (independent hosts);
+        # macro windows contain no barriers, so the bookkeeping below is
+        # an exact identity whenever the macro path was taken
         is_bar = live & (op == int(Op.BARRIER))
         last = is_bar & ((st.bcount[tid_c] + 1) >= n_live_t)
         blocked = jnp.where(last & (tids == tid_c), False,
@@ -122,16 +177,34 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
         # still advance the core clock to their issue time: gaps are
         # relative, so a frozen clock would let a *later* op's issue
         # time collapse back below the crash point and wrongly execute
-        ptr = st2.ptr.at[c].add(jnp.where(valid, 1, 0))
+        # (a dead-run macro-step already advanced the clock itself)
+        ptr = st2.ptr.at[c].add(jnp.where(valid, adv, 0))
         clock = st2.clock.at[c].set(
-            jnp.where(valid & ~live, t_issue, st2.clock[c]))
-        return st2._replace(clock=clock, ptr=ptr, blocked=blocked,
-                            bcount=bcount), None
+            jnp.where(valid & ~live & ~took, t_issue, st2.clock[c]))
+        return (st2._replace(clock=clock, ptr=ptr, blocked=blocked,
+                             bcount=bcount), mops), None
 
-    final, _ = jax.lax.scan(
-        step, init_state(C, max_pbe, pm_banks, n_track, n_tenants_max,
-                         n_deep_max),
-        None, length=n_steps)
+    def segment(carry, length):
+        return jax.lax.scan(step, carry, None, length=length)[0]
+
+    carry = (init_state(C, max_pbe, pm_banks, n_track, n_tenants_max,
+                        n_deep_max),
+             jnp.zeros((), jnp.int32))
+    n_full, n_tail = divmod(n_steps, CHUNK)
+    if n_full > 0:
+        def more_work(loop):
+            k, (st, _mops) = loop
+            return (k < n_full) & jnp.any(st.ptr < lengths)
+
+        def run_segment(loop):
+            k, seg_carry = loop
+            return k + 1, segment(seg_carry, CHUNK)
+
+        _, carry = jax.lax.while_loop(
+            more_work, run_segment, (jnp.asarray(0, jnp.int32), carry))
+    if n_tail > 0:
+        carry = segment(carry, n_tail)
+    final, mops = carry
     # a crashed run ends at the power loss: dead cores advanced their
     # clocks through never-executed ops, so cap at the crash instant
     runtime = jnp.max(jnp.where(final.clock < INF * 0.5,
@@ -140,5 +213,5 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
     durable_ver, n_recov, recov_ns, recov_t, recov_h = recovery_snapshot(
         final, scheme, sc, slot_active, pm_banks, n_track)
     out = (runtime, final.stats, durable_ver, n_recov, recov_ns, recov_t,
-           final.hop_stats, recov_h)
+           final.hop_stats, recov_h, mops)
     return out + (final,) if return_state else out

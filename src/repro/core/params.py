@@ -65,6 +65,13 @@ def preset_count(n_pbe: "int | float",
 RF_EMPTY_SLACK = 1
 RF_LOW_WATER_DRAINS = 2
 
+# Macro-stepping window bound (engine.macro): the trace-time pre-pass
+# (``core.traces.plan_runs``) caps eligible homogeneous runs at this many
+# ops, and the engine's guarded macro-step unrolls exactly this many
+# iterations.  The grid stacker pads every trace row by MACRO_KMAX extra
+# slots so the engine's dynamic window slice never reads out of bounds.
+MACRO_KMAX = 8
+
 
 def rf_drain_count(dirty: int, empty: int, threshold: int, preset: int,
                    low_water: int = RF_LOW_WATER_DRAINS,

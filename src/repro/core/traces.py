@@ -165,6 +165,55 @@ def _pack(streams: List[_CoreStream], name: str,
     return Trace(ops=ops, addrs=addrs, gaps=gaps, lengths=lengths, name=name)
 
 
+def plan_runs(ops: np.ndarray, addrs: np.ndarray, gaps: np.ndarray,
+              kmax: int = None) -> np.ndarray:
+    """Trace-time macro-run planner (numpy pre-pass for engine.macro).
+
+    ``mlen[c, i]`` is the length (1..kmax) of the longest *statically
+    eligible* homogeneous run starting at op ``i`` of core ``c``: every
+    op in the window is a PM_READ or PERSIST with a non-negative compute
+    gap, and no two ops in the window share an address when either of
+    the pair is a PERSIST (same-address pairs would coalesce in the PB /
+    hit in the read path, which the engine's unrolled macro-step guards
+    against dynamically anyway — the static filter just avoids paying
+    for windows that would always abort).
+
+    The value is only a *candidate*: the engine still evaluates its
+    traced guard set (no cross-core interleaving, crash outside the
+    window, depth-1, no PB hits, a free slot for every persist, ...) and
+    falls back to slot-at-a-time handlers when any guard fails, so
+    results are bit-exact by construction whether or not a run commits.
+
+    Prefixes of eligible windows are eligible (the recurrence below is
+    an all-pairs induction), so the engine may truncate a run at the
+    stream tail without re-planning.
+    """
+    if kmax is None:
+        from repro.core.params import MACRO_KMAX
+        kmax = MACRO_KMAX
+    ops = np.asarray(ops)
+    addrs = np.asarray(addrs)
+    gaps = np.asarray(gaps)
+    C, L = ops.shape
+    is_p = ops == int(Op.PERSIST)
+    valid = (is_p | (ops == int(Op.PM_READ))) & (gaps >= 0.0)
+    mlen = np.ones((C, L), np.int8)
+    for K in range(2, kmax + 1):
+        d = K - 1
+        if d >= L:
+            break
+        # valid_K[i] = valid_{K-1}[i] & valid_{K-1}[i+1] & pair_ok(i, i+d)
+        pair_ok = ~((addrs[:, :L - d] == addrs[:, d:])
+                    & (is_p[:, :L - d] | is_p[:, d:]))
+        v_next = np.zeros((C, L), bool)
+        v_next[:, :L - d] = valid[:, :L - d] & valid[:, 1:L - d + 1] & pair_ok
+        if not v_next.any():
+            break
+        mlen[v_next] = K
+        valid = v_next
+    return mlen
+
+
 # ===========================================================================
 # Algorithm-derived generators
 # ===========================================================================

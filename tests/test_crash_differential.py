@@ -16,11 +16,20 @@ scheme are traced, so the whole matrix is a single XLA program).  When
 (same guard pattern as tests/test_semantics_props.py); without it a
 seeded parametrized fallback covers the same space.
 
+The macro-stepped engine (``engine.macro``, on by default) is pinned
+two ways: every matrix above already runs macro-enabled against the
+untimed oracle, and a dedicated macro column re-runs fuzzed matrices
+with ``macro=False`` and asserts *exact* SimResult equality — every
+scalar, per-tenant row and per-hop row bit-identical, so a macro guard
+that silently admits a non-straight-line window cannot hide behind the
+oracle's coarser durable-state view.
+
 ``make test-fuzz`` raises the budgets via CRASH_FUZZ_SEEDS /
 CRASH_FUZZ_EXAMPLES.
 """
 import os
 
+import numpy as np
 import pytest
 
 from _crash_driver import assert_cell_matches, oracle_replay
@@ -250,6 +259,62 @@ def test_differential_matrix_switch_chains_big():
                                    n_tenants=n_tenants, n_switches=2)
             assert_cell_matches(t_cells[i][j], oracle, N_ADDRS,
                                 label=("CHAIN-T2", i, scheme.name, k))
+
+
+def _assert_simresults_identical(a, b, label):
+    """Exact equality over every SimResult field — arrays bitwise equal
+    (per-tenant and per-hop rows included), scalars equal with NaN==NaN
+    (empty cells have NaN mean latencies on both sides)."""
+    for f in a.__dataclass_fields__:
+        x, y = getattr(a, f), getattr(b, f)
+        if isinstance(x, np.ndarray):
+            assert y is not None and np.array_equal(x, y), (label, f)
+        else:
+            both_nan = (isinstance(x, float) and isinstance(y, float)
+                        and np.isnan(x) and np.isnan(y))
+            assert x == y or both_nan, (label, f, x, y)
+
+
+def test_differential_macro_column_bit_exact():
+    """The macro-enabled engine column vs the macro-disabled control
+    over the same fuzzed cells: exact SimResult equality.  Covers the
+    single-tenant matrix (with a depth-2 chain group: the deep guard
+    must abort cleanly) and a T=2 multi-tenant group, at crash points
+    that land mid-window as well as past the stream end."""
+    seeds = list(range(4))
+    traces = [fuzz_trace(s, n_cores=N_CORES, n_slots=N_SLOTS,
+                         n_addrs=N_ADDRS)[0] for s in seeds]
+    plan = [(scheme, k, PBES[ki % len(PBES)], d)
+            for scheme in SCHEMES
+            for ki, k in enumerate((0, 13, 29, N_SLOTS))
+            for d in (1, 2)]
+    configs = [PCSConfig(scheme=s, n_pbe=p,
+                         n_switches=d).with_crash(fuzz_crash_ns(k))
+               for s, k, p, d in plan]
+    on = simulate_grid(traces, configs, max_pbe=max(PBES), bucket=BUCKET,
+                       track_addrs=N_ADDRS)
+    off = simulate_grid(traces, configs, max_pbe=max(PBES), bucket=BUCKET,
+                        track_addrs=N_ADDRS, macro=False)
+    for i, s in enumerate(seeds):
+        for j, (scheme, k, p, d) in enumerate(plan):
+            _assert_simresults_identical(
+                on[i][j], off[i][j], (s, scheme.name, k, p, d))
+
+    n_tenants, n_cores = 2, 4
+    t_traces = [fuzz_trace(s, n_cores=n_cores, n_slots=N_SLOTS,
+                           n_addrs=N_ADDRS, n_tenants=n_tenants)[0]
+                for s in range(2)]
+    t_configs = [PCSConfig(scheme=s, n_pbe=4, n_cores=n_cores,
+                           n_tenants=n_tenants).with_crash(fuzz_crash_ns(k))
+                 for s in SCHEMES for k in (11, 29, N_SLOTS)]
+    t_on = simulate_grid(t_traces, t_configs, max_pbe=4, bucket=BUCKET,
+                         track_addrs=N_ADDRS)
+    t_off = simulate_grid(t_traces, t_configs, max_pbe=4, bucket=BUCKET,
+                          track_addrs=N_ADDRS, macro=False)
+    for i in range(len(t_traces)):
+        for j in range(len(t_configs)):
+            _assert_simresults_identical(t_on[i][j], t_off[i][j],
+                                         ("T2", i, j))
 
 
 def _one_cell(seed, scheme, crash_slot, n_pbe, p_persist=0.55):

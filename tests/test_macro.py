@@ -1,0 +1,139 @@
+"""Macro-stepping unit tests: the run planner, the guard fallback, and
+the commit paths (DESIGN.md "Macro-stepping & state packing").
+
+The crash differential pins macro-vs-plain bit-exactness over fuzzed
+matrices (tests/test_crash_differential.py); this file covers the
+mechanism itself — ``plan_runs`` eligibility rules, guard-failure
+fallback to the slot-at-a-time handlers, dead-run collapse, and the
+``macro_ops`` telemetry behind ``last_macro_hit_rate``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Op, PCSConfig, Scheme, Trace
+from repro.core.engine import last_macro_hit_rate, simulate
+from repro.core.params import MACRO_KMAX
+from repro.core.traces import plan_runs
+
+BUCKET = 128
+
+
+def _trace(ops, addrs, gap=2000.0):
+    ops = np.asarray([ops], np.int32)
+    return Trace(ops=ops,
+                 addrs=np.asarray([addrs], np.int32),
+                 gaps=np.full(ops.shape, gap, np.float32),
+                 lengths=np.asarray([ops.shape[1]], np.int32),
+                 name="macro_probe")
+
+
+def _assert_equal_results(a, b, label=""):
+    for f in a.__dataclass_fields__:
+        x, y = getattr(a, f), getattr(b, f)
+        if isinstance(x, np.ndarray):
+            assert y is not None and np.array_equal(x, y), (label, f)
+        else:
+            both_nan = (isinstance(x, float) and isinstance(y, float)
+                        and np.isnan(x) and np.isnan(y))
+            assert x == y or both_nan, (label, f, x, y)
+
+
+# ------------------------------------------------------------ plan_runs
+def test_plan_runs_eligibility():
+    """Only PM_READ/PERSIST slots with non-negative gaps start runs;
+    run length counts the homogeneous suffix, capped at MACRO_KMAX."""
+    ops = np.asarray([[int(Op.PM_READ)] * 12], np.int32)
+    addrs = np.arange(12, dtype=np.int32)[None, :]
+    gaps = np.full((1, 12), 10.0, np.float32)
+    mlen = plan_runs(ops, addrs, gaps)
+    assert mlen[0, 0] == MACRO_KMAX           # capped
+    assert mlen[0, 11] == 1                   # nothing after it
+    assert mlen[0, 12 - MACRO_KMAX] == MACRO_KMAX
+
+    # a COMPUTE op breaks the run and is itself ineligible
+    ops2 = ops.copy()
+    ops2[0, 5] = int(Op.COMPUTE)
+    mlen2 = plan_runs(ops2, addrs, gaps)
+    assert mlen2[0, 0] == 5
+    assert mlen2[0, 5] == 1
+    # a negative gap (impossible issue order) is likewise ineligible
+    gaps3 = gaps.copy()
+    gaps3[0, 3] = -1.0
+    assert plan_runs(ops, addrs, gaps3)[0, 0] == 3
+
+
+def test_plan_runs_same_addr_persist_pairs_excluded():
+    """A window holding two ops on one address where either is a PERSIST
+    is statically excluded (coalesce/read-forwarding territory); pure
+    read-read repeats are fine."""
+    P, R = int(Op.PERSIST), int(Op.PM_READ)
+    gaps = np.full((1, 4), 10.0, np.float32)
+    # persist a, read a -> pair blocked at the persist
+    mlen = plan_runs(np.asarray([[P, R, R, R]], np.int32),
+                     np.asarray([[7, 7, 8, 9]], np.int32), gaps)
+    assert mlen[0, 0] == 1 and mlen[0, 1] == 3
+    # read a, read a -> no persist involved, window OK
+    mlen = plan_runs(np.asarray([[R, R, R, R]], np.int32),
+                     np.asarray([[7, 7, 8, 9]], np.int32), gaps)
+    assert mlen[0, 0] == 4
+    # persist a ... persist a two apart -> blocked at that distance
+    mlen = plan_runs(np.asarray([[P, P, P, P]], np.int32),
+                     np.asarray([[7, 8, 7, 9]], np.int32), gaps)
+    assert mlen[0, 0] == 2
+
+
+# ----------------------------------------------------- guard fallback
+@pytest.mark.parametrize("scheme", [Scheme.PB, Scheme.PB_RF])
+def test_guard_failure_falls_back_bit_exact(scheme):
+    """A statically eligible window whose *runtime* guard fails (a PB
+    read hit mid-window) must fall back to the slot-at-a-time handlers
+    and still match the macro-disabled engine exactly."""
+    P, R = int(Op.PERSIST), int(Op.PM_READ)
+    # persist 5 primes the PB; the later [read 5, read 6] window is
+    # statically eligible but read 5 hits the buffered entry -> abort
+    # (tight gaps: the reads issue while the entry is still live, before
+    # lazy-free could turn the PB drain into a miss)
+    tr = _trace([P, R, R], [5, 5, 6], gap=10.0)
+    cfg = PCSConfig(scheme=scheme, n_pbe=4)
+    r_macro = simulate(tr, cfg, bucket=BUCKET, track_addrs=8)
+    hit = last_macro_hit_rate()
+    r_plain = simulate(tr, cfg, bucket=BUCKET, track_addrs=8, macro=False)
+    _assert_equal_results(r_macro, r_plain, label=scheme.name)
+    # the aborted window fell back: no slot of this trace ran as a macro
+    # step (the only eligible window was the one that hit)
+    assert hit == 0.0, hit
+
+
+def test_macro_commit_pure_miss_window():
+    """Distinct-address read windows commit: hit rate > 0 and results
+    stay identical to the macro-disabled engine."""
+    R = int(Op.PM_READ)
+    tr = _trace([R] * 10, list(range(10)))
+    cfg = PCSConfig(scheme=Scheme.PB, n_pbe=4)
+    r_macro = simulate(tr, cfg, bucket=BUCKET)
+    hit = last_macro_hit_rate()
+    r_plain = simulate(tr, cfg, bucket=BUCKET, macro=False)
+    _assert_equal_results(r_macro, r_plain)
+    assert hit > 0.5, hit
+
+
+def test_macro_disabled_reports_zero_hit_rate():
+    R = int(Op.PM_READ)
+    tr = _trace([R] * 6, list(range(6)))
+    simulate(tr, PCSConfig(scheme=Scheme.PB), bucket=BUCKET, macro=False)
+    assert last_macro_hit_rate() == 0.0
+
+
+def test_dead_run_collapse_after_crash():
+    """Post-crash streams collapse MACRO_KMAX slots at a time — even for
+    op mixes (COMPUTE, coalescing persists) the live path never takes —
+    and the crashed results match the macro-disabled engine exactly."""
+    P, C = int(Op.PERSIST), int(Op.COMPUTE)
+    # same-address persists + computes: statically ineligible live runs
+    tr = _trace([P, C] * 15, [3, 0] * 15, gap=1000.0)
+    cfg = PCSConfig(scheme=Scheme.PB, n_pbe=4).with_crash(1500.0)
+    r_macro = simulate(tr, cfg, bucket=BUCKET, track_addrs=8)
+    hit = last_macro_hit_rate()
+    r_plain = simulate(tr, cfg, bucket=BUCKET, track_addrs=8, macro=False)
+    _assert_equal_results(r_macro, r_plain)
+    assert hit > 0.5, hit
