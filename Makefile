@@ -24,7 +24,8 @@ bench-smoke:
 
 # regenerate the smoke report and diff it against the committed
 # baseline (git show HEAD:BENCH_engine.json): prints per-sweep speedup
-# ratios, fails on a >1.25x regression of any *_sweep_wall_s
+# ratios, fails on a >1.25x regression of ANY numeric *_wall_s
+# (total_wall_s included); rows without a numeric baseline warn
 bench-compare: bench-smoke
 	$(PYTHON) -m benchmarks.compare
 

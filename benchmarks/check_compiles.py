@@ -4,8 +4,9 @@ The engine's one-program property — a whole {trace x config x scheme x
 crash-point x tenant-count x policy x switch-depth} grid lowering to a
 single XLA compilation — is a load-bearing perf invariant (DESIGN.md
 §3).  ``make ci`` runs this after ``bench-smoke``: if the shared grid,
-the recovery sweep, the tenant sweep, the mixed-policy QoS sweep or
-the switch-chain depth sweep ever compiles more than once (e.g.
+the recovery sweep, the tenant sweep, the mixed-policy QoS sweep, the
+offered-load SLO sweep or the switch-chain depth sweep ever compiles
+more than once (e.g.
 someone turns a traced scalar — the chain depth, a per-hop capacity or
 a lowered PBPolicy field — back into a static), the build fails loudly
 instead of the trajectory silently absorbing a multi-compile
@@ -30,12 +31,12 @@ import sys
 
 GUARDED = ("shared_grid_compiles", "recovery_sweep_compiles",
            "tenant_sweep_compiles", "qos_sweep_compiles",
-           "chain_sweep_compiles")
+           "slo_sweep_compiles", "chain_sweep_compiles")
 
 # macro-stepping telemetry: every sweep must record its hit rate
 MACRO_KEYS = ("shared_grid_macro_hit", "recovery_sweep_macro_hit",
               "tenant_sweep_macro_hit", "qos_sweep_macro_hit",
-              "chain_sweep_macro_hit")
+              "slo_sweep_macro_hit", "chain_sweep_macro_hit")
 
 
 def check(report: dict) -> list:

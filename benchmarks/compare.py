@@ -3,12 +3,15 @@
 ``make bench-compare`` regenerates the smoke report and diffs it against
 the committed baseline (``git show HEAD:BENCH_engine.json`` by default,
 so it works even though ``bench-smoke`` overwrites the working-tree
-copy).  It prints a per-sweep speedup ratio for every ``*_sweep_wall_s``
-(plus the shared grid) and **fails** when any sweep regressed by more
-than ``THRESHOLD``x — wall-clock noise on a quiet machine is far below
-25%, so a trip means a real perf regression (e.g. a change that breaks
-the macro-step guards, widens the packed dtypes, or defeats the chunked
-early exit).
+copy).  It prints a per-key speedup ratio for **every numeric top-level
+``*_wall_s``** in the fresh report (sweeps, the shared grid, the total)
+and **fails** when any of them regressed by more than ``THRESHOLD``x —
+wall-clock noise on a quiet machine is far below 25%, so a trip means a
+real perf regression (e.g. a change that breaks the macro-step guards,
+widens the packed dtypes, or defeats the chunked early exit).  Keys
+that cannot be compared (no numeric baseline — e.g. a sweep new in this
+PR — or a non-positive wall time) are reported as loud ``warn:`` lines
+rather than silently dropped.
 
 Reports are only comparable at the same measurement budget: when the
 budget/bucket/smoke fields differ the comparison is skipped with a
@@ -41,10 +44,15 @@ def _load_baseline(ref: str) -> dict:
         return json.load(f)
 
 
-def wall_keys(fresh: dict, base: dict) -> list:
-    keys = sorted(k for k in fresh
-                  if k.endswith("_sweep_wall_s") or k == "shared_grid_wall_s")
-    return [k for k in keys if isinstance(base.get(k), (int, float))]
+def wall_keys(fresh: dict) -> list:
+    """Every top-level *numeric* ``*_wall_s`` key in the fresh report.
+
+    ``figures_wall_s`` (a dict of per-figure timings) is excluded by the
+    numeric filter; its entries are already rolled up in the sweep keys
+    and ``total_wall_s``.
+    """
+    return sorted(k for k in fresh if k.endswith("_wall_s")
+                  and isinstance(fresh[k], (int, float)))
 
 
 def compare(fresh: dict, base: dict) -> tuple:
@@ -54,20 +62,26 @@ def compare(fresh: dict, base: dict) -> tuple:
         return ([f"skip: budgets differ ({', '.join(mismatched)}); "
                  "ratios would compare different workloads"], [])
     lines, regressions = [], []
-    for k in wall_keys(fresh, base):
-        f_v, b_v = float(fresh[k]), float(base[k])
-        if f_v <= 0:
+    for k in wall_keys(fresh):
+        f_v = float(fresh[k])
+        b = base.get(k)
+        if not isinstance(b, (int, float)):
+            lines.append(f"warn: {k} has no numeric baseline ({b!r}); "
+                         "not compared (expected for a sweep new in "
+                         "this PR)")
+            continue
+        b_v = float(b)
+        if f_v <= 0 or b_v <= 0:
+            lines.append(f"warn: {k} skipped — non-positive wall time "
+                         f"(fresh={f_v}, base={b_v}) cannot be ratioed")
             continue
         speedup = b_v / f_v
         verdict = "ok"
-        if k.endswith("_sweep_wall_s") and f_v > THRESHOLD * b_v:
+        if f_v > THRESHOLD * b_v:
             verdict = f"REGRESSION (> {THRESHOLD}x)"
             regressions.append(k)
         lines.append(f"{k}: {b_v:.3f}s -> {f_v:.3f}s "
                      f"({speedup:.2f}x speedup) {verdict}")
-    if "total_wall_s" in fresh and "total_wall_s" in base:
-        lines.append(f"total_wall_s: {base['total_wall_s']} -> "
-                     f"{fresh['total_wall_s']}")
     return lines, regressions
 
 

@@ -1,0 +1,131 @@
+"""Offered-load saturation sweep: tail latency (P50/P95/P99) vs load.
+
+The paper's headline numbers are *mean*-latency wins, but a serving
+deployment (ROADMAP: pooled switches in front of millions of users)
+lives on tails: the persist that queues behind a drain burst is exactly
+the P99 event an SLO cares about.  This figure drives one workload's
+op/address stream with **open-loop Poisson arrivals** at a sweep of
+offered loads (``core.traces.make_offered_load_trace``), plus one
+bursty (on-off) point at the mid rate, and reads the per-persist
+latency histogram the engine now accumulates per tenant
+(``SimResult.persist_lat_p50/p95/p99``):
+
+  * below the saturation knee the percentiles sit flat at the service
+    latency; past it the PBC/PM queues grow without bound and the tail
+    explodes — the knee rate per {scheme x policy} is the serving
+    capacity of the switch;
+  * the ``pb_rf_slo`` config closes the loop with
+    ``DrainPolicy(latency_target_ns=...)``: when the observed running
+    tail exceeds target, drain-down tightens to drain-everything-ASAP.
+
+The whole {offered-load x scheme x policy} sweep is ONE
+``simulate_grid`` call — arrival processes are a *trace* axis, so they
+compose with the traced config axes for free (the
+``slo_sweep_compiles`` guard in ``make ci`` pins this).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core import (BurstyArrivals, DrainPolicy, PBPolicy, PCSConfig,
+                        PoissonArrivals, Scheme, make_offered_load_trace,
+                        simulate_grid)
+from repro.core.engine import compile_count, last_macro_hit_rate
+
+from benchmarks import _shared
+
+WORKLOAD = "raytrace"
+# Serving pressure needs enough cores behind one switch to saturate the
+# shared PBC (20 ns occupancy) and PM banks: each blocked core offers at
+# most ~1/300ns, so 64 cores push one request every ~5 ns at full load —
+# well past the service rate, where the queue (and the tail) grows.
+N_CORES = 64
+
+# offered load axis, Mops/s per core; smoke keeps enough points to see
+# the knee while staying inside the <60s budget
+RATES_FULL = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
+RATES_SMOKE = (0.25, 1.0, 4.0, 16.0)
+
+# knee = first rate whose P99 exceeds KNEE x the lowest-rate P99.  1.8
+# keeps the drain-immediately PB scheme's shallow saturation visible
+# (its tail roughly doubles while NOPB's and lazy PB_RF's explode).
+KNEE = 1.8
+
+CONFIGS = (
+    ("nopb", Scheme.NOPB, PBPolicy()),
+    ("pb", Scheme.PB, PBPolicy()),
+    ("pb_rf", Scheme.PB_RF, PBPolicy()),
+    ("pb_rf_slo", Scheme.PB_RF, PBPolicy(drain=DrainPolicy(
+        latency_target_ns=450.0, latency_tol=0.05))),
+)
+
+# telemetry of the SLO sweep for BENCH_engine.json (set by run())
+sweep_metrics: dict = {}
+
+
+def run() -> list:
+    rates = RATES_SMOKE if _shared.SMOKE else RATES_FULL
+    budget = max(_shared.BUDGET // 4, 150)
+    traces = [make_offered_load_trace(
+                  WORKLOAD, PoissonArrivals(r), n_cores=N_CORES,
+                  persist_budget=budget)
+              for r in rates]
+    # one bursty point at the mid rate: same time-average offered load,
+    # fatter tail (the on-phase runs burst-x hotter)
+    mid = rates[len(rates) // 2]
+    traces.append(make_offered_load_trace(
+        WORKLOAD, BurstyArrivals(mid), n_cores=N_CORES,
+        persist_budget=budget))
+    configs = [PCSConfig(scheme=s, n_cores=N_CORES, policy=pol)
+               for _, s, pol in CONFIGS]
+    c0, t0 = compile_count(), time.time()
+    cells = simulate_grid(traces, configs, bucket=_shared.bucket())
+    sweep_metrics.update(
+        slo_sweep_wall_s=round(time.time() - t0, 3),
+        slo_sweep_compiles=compile_count() - c0,
+        slo_sweep_cells=len(traces) * len(configs),
+        slo_sweep_macro_hit=round(last_macro_hit_rate(), 4),
+    )
+    rows = []
+    p99_series = {ckey: [] for ckey, _, _ in CONFIGS}
+    for rate, row in zip(rates, cells):
+        for (ckey, _, _), r in zip(CONFIGS, row):
+            if math.isnan(r.persist_lat_p50):
+                continue            # zero-traffic cell: no percentiles
+            rows.append((f"slo_p50_{ckey}_{rate:g}",
+                         round(r.persist_lat_p50, 1), "ns"))
+            rows.append((f"slo_p95_{ckey}_{rate:g}",
+                         round(r.persist_lat_p95, 1), "ns"))
+            rows.append((f"slo_p99_{ckey}_{rate:g}",
+                         round(r.persist_lat_p99, 1), "ns"))
+            p99_series[ckey].append((rate, r.persist_lat_p99))
+    for (ckey, _, _), r in zip(CONFIGS, cells[len(rates)]):
+        if not math.isnan(r.persist_lat_p99):
+            rows.append((f"slo_p99_{ckey}_bursty{mid:g}",
+                         round(r.persist_lat_p99, 1), "ns"))
+    # the saturation knee (NaN = no knee inside the swept range)
+    for ckey, series in p99_series.items():
+        if not series:
+            continue
+        base = series[0][1]
+        knee = next((rate for rate, p99 in series if p99 > KNEE * base),
+                    float("nan"))
+        rows.append((f"slo_knee_{ckey}", knee, "mops_per_core"))
+    # SLO accounting at the hottest rate; only configs with a target
+    # count violations (nothing is ever over the default +inf target)
+    top = cells[len(rates) - 1]
+    for (ckey, _, pol), r in zip(CONFIGS, top):
+        if pol.drain.latency_target_ns is not None and r.persists > 0:
+            rows.append((f"slo_viol_{ckey}_{rates[-1]:g}",
+                         round(r.slo_violations / r.persists, 4),
+                         "over_450ns_fraction"))
+    return rows
+
+
+def main() -> None:
+    _shared.emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -35,11 +35,12 @@ def main() -> None:
     # imported late so smoke mode is set before any trace is built
     from benchmarks import (ckpt_tier_bench, fig1_switch_depth, fig5_speedup,
                             fig6_latency, fig7_rf_rates, fig8_pbe_sweep,
-                            fig_qos, fig_recovery, fig_tenants, kernel_bench)
+                            fig_qos, fig_recovery, fig_slo, fig_tenants,
+                            kernel_bench)
     from repro.core.engine import compile_count
 
     figures = (fig1_switch_depth, fig5_speedup, fig6_latency, fig7_rf_rates,
-               fig8_pbe_sweep, fig_recovery, fig_tenants, fig_qos)
+               fig8_pbe_sweep, fig_recovery, fig_tenants, fig_qos, fig_slo)
     extras = () if args.smoke else (ckpt_tier_bench, kernel_bench)
 
     rows, timings = [], {}
@@ -96,6 +97,8 @@ def main() -> None:
         **fig_tenants.sweep_metrics,
         # telemetry of the mixed {scheme x policy} QoS sweep
         **fig_qos.sweep_metrics,
+        # telemetry of the {offered-load x scheme x policy} SLO sweep
+        **fig_slo.sweep_metrics,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

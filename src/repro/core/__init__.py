@@ -14,9 +14,12 @@ from repro.core.params import (AllocPolicy, DrainPolicy, LatencyProfile,
                                Op, PBEState, PBPolicy, PCSConfig, Scheme)
 from repro.core.semantics import (Event, EventKind, PersistentBuffer,
                                   PersistentMemory)
-from repro.core.traces import (Trace, WORKLOADS, compose_tenants,
+from repro.core.traces import (BurstyArrivals, DiurnalArrivals,
+                               PoissonArrivals, Trace, WORKLOADS,
+                               apply_arrivals, compose_tenants,
                                fuzz_crash_ns, fuzz_trace,
-                               make_mixed_tenant_trace, make_tenant_trace,
+                               make_mixed_tenant_trace,
+                               make_offered_load_trace, make_tenant_trace,
                                make_trace, tenant_ids)
 
 __all__ = [
@@ -24,7 +27,9 @@ __all__ = [
     "PBPolicy", "PCSConfig", "Scheme",
     "Event", "EventKind", "PersistentBuffer", "PersistentMemory",
     "SimResult", "simulate", "simulate_grid", "simulate_sweep",
-    "Trace", "WORKLOADS", "compose_tenants", "fuzz_crash_ns", "fuzz_trace",
-    "make_mixed_tenant_trace", "make_tenant_trace", "make_trace",
+    "BurstyArrivals", "DiurnalArrivals", "PoissonArrivals",
+    "Trace", "WORKLOADS", "apply_arrivals", "compose_tenants",
+    "fuzz_crash_ns", "fuzz_trace", "make_mixed_tenant_trace",
+    "make_offered_load_trace", "make_tenant_trace", "make_trace",
     "tenant_ids",
 ]

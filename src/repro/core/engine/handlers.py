@@ -24,11 +24,12 @@ from repro.core.engine import chain, channels, policy
 from repro.core.engine.state import (DIRTY, DRAIN, EMPTY, INF, H_COALESCES,
                                      H_FWD_CNT, H_FWD_SUM, H_READ_HITS,
                                      MachineState, S_ACKED, S_COALESCES,
-                                     S_DRAM_READS, S_DURABLE, S_PBCQ_SUM,
-                                     S_PERSIST_CNT, S_PERSIST_SUM,
-                                     S_PI_DETOURS, S_PM_WRITES, S_READ_CNT,
-                                     S_READ_HITS, S_READ_SUM, S_STALL_TIME,
-                                     S_VICTIM_CNT)
+                                     S_DRAM_READS, S_DURABLE, S_LAT_HIST0,
+                                     S_PBCQ_SUM, S_PERSIST_CNT,
+                                     S_PERSIST_SUM, S_PI_DETOURS,
+                                     S_PM_WRITES, S_READ_CNT, S_READ_HITS,
+                                     S_READ_SUM, S_SLO_OVER, S_STALL_TIME,
+                                     S_VICTIM_CNT, lat_bin)
 
 
 class StepCtx(NamedTuple):
@@ -79,8 +80,9 @@ def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
         # NoPB: the volatile switch forwards every read to PM.
         pm_start = channels.service_start(st.pm_busy, bank, t + ow)
         resp = pm_start + sc["nvm_read"] + ow
-        stats = st.stats.at[ctx.tenant, S_READ_SUM].add(resp - t)
-        stats = stats.at[ctx.tenant, S_READ_CNT].add(1.0)
+        stats = st.stats.at[
+            ctx.tenant, jnp.asarray([S_READ_SUM, S_READ_CNT], jnp.int32)
+        ].add(jnp.stack([resp - t, jnp.ones((), jnp.float64)]))
         return st._replace(
             clock=st.clock.at[ctx.c].set(resp),
             pm_busy=channels.reserve(st.pm_busy, bank, pm_start,
@@ -142,11 +144,12 @@ def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
         if D > 0:
             hop_stats = hop_stats.at[hrow + 1, H_READ_HITS].add(
                 deep_hit.astype(jnp.float64))
-        stats = st.stats.at[ctx.tenant, S_READ_SUM].add(resp - t)
-        stats = stats.at[ctx.tenant, S_READ_CNT].add(1.0)
-        stats = stats.at[ctx.tenant, S_READ_HITS].add(
-            ((has & served) | deep_hit).astype(jnp.float64))
-        stats = stats.at[ctx.tenant, S_PI_DETOURS].add(has.astype(jnp.float64))
+        stats = st.stats.at[
+            ctx.tenant, jnp.asarray([S_READ_SUM, S_READ_CNT, S_READ_HITS,
+                                     S_PI_DETOURS], jnp.int32)
+        ].add(jnp.stack([resp - t, jnp.ones((), jnp.float64),
+                         ((has & served) | deep_hit).astype(jnp.float64),
+                         has.astype(jnp.float64)]))
         return st._replace(clock=st.clock.at[ctx.c].set(resp), state=state0,
                            lru=lru2, dlru=dlru3, pm_busy=pm_busy2,
                            pbc_busy=pbc_busy2, stats=stats,
@@ -258,6 +261,16 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
     wslot = jnp.where(is_coalesce, idx, slot)
     t_written = jnp.where(is_coalesce, pbc_start, ta) + sc["data_ns"]
     ack = t_written + sc["ow_cpu_sw1"]
+    # Serving-SLO drain tightening (DrainPolicy.latency_target_ns): the
+    # running over-target fraction *including this persist* decides
+    # whether this op's drain-down runs tight.  With no target the
+    # lowered scalar is INF, over_now is always 0 and tight is always
+    # false — bit-exact with the pre-SLO engine.
+    lat = ack - t
+    over_now = (lat > sc["lat_target"]).astype(jnp.float64)
+    cnt1 = st.stats[ctx.tenant, S_PERSIST_CNT] + 1.0
+    over1 = st.stats[ctx.tenant, S_SLO_OVER] + over_now
+    tight = over1 > sc["lat_tol"] * cnt1
     state3 = jnp.where(ctx.slot_ids == wslot, DIRTY, state2)
     tag3 = st.tag.at[wslot].set(addr)
     lru3 = st.lru.at[wslot].set(t_written)
@@ -273,7 +286,7 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
         sc, bank, ctx.slot_ids, wslot, t_written, state3, dd3, pm_busy1)
     state4_rf, dd4_rf, pmb2_rf, pw_rf = policy.drain_threshold_preset(
         sc, ctx.n_banks, ctx.slot_active, t_written, state3, tag3, lru3,
-        dd3, pm_busy1, owner=owner3, tenant=ctx.tenant)
+        dd3, pm_busy1, owner=owner3, tenant=ctx.tenant, tight=tight)
     state4 = jnp.where(is_rf, state4_rf, state4_pb)
     dd4 = jnp.where(is_rf, dd4_rf, dd4_pb)
     pm_busy2 = jnp.where(is_rf, pmb2_rf, pmb2_pb)
@@ -357,26 +370,36 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
         (is_coalesce & commit).astype(jnp.float64))
 
     stall = jnp.where(is_coalesce, 0.0, ta - pbc_start)
-    stats = st.stats.at[ctx.tenant, S_VICTIM_CNT].add(
-        ((~is_coalesce) & (~any_empty)).astype(jnp.float64))
-    stats = stats.at[ctx.tenant, S_PBCQ_SUM].add(
-        jnp.maximum(st.pbc_busy - arr, 0.0))
     # Only a genuine Empty-shortage stall (ta > pbc_start) holds the PI
     # front beyond the pipelined issue interval.
     pbc_free = jnp.maximum(
         channels.pbc_hold(st.pbc_busy, arr, sc["pbc_occ_ns"]),
         jnp.where(is_coalesce | (ta <= pbc_start), 0.0, ta))
-    stats = stats.at[ctx.tenant, S_PERSIST_SUM].add(ack - t)
-    stats = stats.at[ctx.tenant, S_PERSIST_CNT].add(1.0)
-    stats = stats.at[ctx.tenant, S_COALESCES].add(is_coalesce.astype(jnp.float64))
-    stats = stats.at[ctx.tenant, S_PM_WRITES].add(pm_writes_inc)
-    stats = stats.at[ctx.tenant, S_STALL_TIME].add(stall)
-    # A persist committed into the persistent switch is durable
-    # regardless of the drain's fate (the paper's core claim); the core
-    # only *observes* the ack if it lands before the crash.  ack beats
-    # the crash only if the write committed first, so acked => durable.
-    stats = stats.at[ctx.tenant, S_ACKED].add((ack <= crash).astype(jnp.float64))
-    stats = stats.at[ctx.tenant, S_DURABLE].add(commit.astype(jnp.float64))
+    # One fused scatter for every per-persist accumulator (all distinct
+    # columns, so the sums are element-wise identical to chained adds —
+    # the macro fast path stays bit-exact).  A persist committed into
+    # the persistent switch is durable regardless of the drain's fate
+    # (the paper's core claim); the core only *observes* the ack if it
+    # lands before the crash, and ack beats the crash only if the write
+    # committed first, so acked => durable.
+    cols = jnp.concatenate([
+        jnp.asarray([S_VICTIM_CNT, S_PBCQ_SUM, S_PERSIST_SUM,
+                     S_PERSIST_CNT, S_SLO_OVER, S_COALESCES, S_PM_WRITES,
+                     S_STALL_TIME, S_ACKED, S_DURABLE], jnp.int32),
+        (S_LAT_HIST0 + lat_bin(lat))[None]])
+    vals = jnp.stack([
+        ((~is_coalesce) & (~any_empty)).astype(jnp.float64),
+        jnp.maximum(st.pbc_busy - arr, 0.0),
+        ack - t,
+        jnp.ones((), jnp.float64),
+        over_now,
+        is_coalesce.astype(jnp.float64),
+        pm_writes_inc,
+        stall,
+        (ack <= crash).astype(jnp.float64),
+        commit.astype(jnp.float64),
+        jnp.ones((), jnp.float64)])
+    stats = st.stats.at[ctx.tenant, cols].add(vals)
     return st._replace(clock=st.clock.at[ctx.c].set(ack), tag=tag5,
                        state=state5, lru=lru5, dd=dd5, ver=ver5,
                        owner=owner5, aver=aver3, pm_ver=pm_ver3,
@@ -401,11 +424,17 @@ def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
         tracked = _tracked(ctx, addr)
         a_idx = jnp.clip(addr, 0, A - 1)
         v_new = st.aver[a_idx] + 1
-        stats = st.stats.at[ctx.tenant, S_PERSIST_SUM].add(ack - t)
-        stats = stats.at[ctx.tenant, S_PERSIST_CNT].add(1.0)
-        stats = stats.at[ctx.tenant, S_PM_WRITES].add(1.0)
-        stats = stats.at[ctx.tenant, S_ACKED].add(ok.astype(jnp.float64))
-        stats = stats.at[ctx.tenant, S_DURABLE].add(ok.astype(jnp.float64))
+        lat = ack - t
+        over_now = (lat > sc["lat_target"]).astype(jnp.float64)
+        one = jnp.ones((), jnp.float64)
+        cols = jnp.concatenate([
+            jnp.asarray([S_PERSIST_SUM, S_PERSIST_CNT, S_SLO_OVER,
+                         S_PM_WRITES, S_ACKED, S_DURABLE], jnp.int32),
+            (S_LAT_HIST0 + lat_bin(lat))[None]])
+        vals = jnp.stack([ack - t, one, over_now, one,
+                          ok.astype(jnp.float64), ok.astype(jnp.float64),
+                          one])
+        stats = st.stats.at[ctx.tenant, cols].add(vals)
         return st._replace(
             clock=st.clock.at[ctx.c].set(ack),
             aver=st.aver.at[a_idx].add(jnp.where(tracked, 1, 0)),

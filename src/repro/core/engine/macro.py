@@ -41,9 +41,10 @@ import jax.numpy as jnp
 
 from repro.core.engine import channels, policy
 from repro.core.engine.state import (DIRTY, EMPTY, INF, H_FWD_CNT, H_FWD_SUM,
-                                     S_ACKED, S_DURABLE, S_PBCQ_SUM,
-                                     S_PERSIST_CNT, S_PERSIST_SUM,
-                                     S_PM_WRITES, S_READ_CNT, S_READ_SUM)
+                                     S_ACKED, S_DURABLE, S_LAT_HIST0,
+                                     S_PBCQ_SUM, S_PERSIST_CNT,
+                                     S_PERSIST_SUM, S_PM_WRITES, S_READ_CNT,
+                                     S_READ_SUM, S_SLO_OVER, lat_bin)
 from repro.core.params import Op
 
 
@@ -170,6 +171,16 @@ def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
                         sc["threshold_count"])
         pre = jnp.where(scoped, sc["t_preset"][ctx.tenant],
                         sc["preset_count"])
+        # serving-SLO tightening mirror (handler computes tight from the
+        # pre-op stats row *including this persist*; with no target the
+        # lowered scalar is INF, over stays 0 and tight is never true)
+        lat_p = ack_p - t_j
+        over_p = (lat_p > sc["lat_target"]).astype(jnp.float64)
+        cnt1 = stats_cur[ctx.tenant, S_PERSIST_CNT] + 1.0
+        over1 = stats_cur[ctx.tenant, S_SLO_OVER] + over_p
+        tight = over1 > sc["lat_tol"] * cnt1
+        thr = jnp.where(tight, 1.0, thr)
+        pre = jnp.where(tight, 0.0, pre)
         k_thresh = jnp.where(dirty_cnt >= thr, dirty_cnt - pre, 0.0)
         k_low = jnp.where(empty_cnt <= sc["empty_slack"],
                           jnp.minimum(sc["low_water"], dirty_cnt), 0.0)
@@ -215,32 +226,41 @@ def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
         pm_ver_cur = pm_ver_cur.at[a_idx].max(
             jnp.where(m & is_p & tracked & pv_ok, v_new, 0))
         # stats / telemetry: adds of exact 0.0 are bitwise identities
-        # (every counter is >= +0.0), so skipped terms stay exact
-        stats_cur = stats_cur.at[ctx.tenant, S_READ_SUM].add(
-            jnp.where(sel_r, resp - t_j, 0.0))
-        stats_cur = stats_cur.at[ctx.tenant, S_READ_CNT].add(
-            jnp.where(sel_r, 1.0, 0.0))
-        stats_cur = stats_cur.at[ctx.tenant, S_PBCQ_SUM].add(
-            jnp.where(sel_wp, pbcq_inc, 0.0))
-        stats_cur = stats_cur.at[ctx.tenant, S_PERSIST_SUM].add(
+        # (every counter is >= +0.0), so skipped terms stay exact.  The
+        # per-persist latency histogram + SLO-over counter use identical
+        # expressions to the handler sites (lat = scheme-selected ack -
+        # issue time); masked lanes add exact 0.0 at a garbage bin,
+        # which is a bitwise identity.  One fused scatter per window
+        # step (all columns distinct) keeps every per-column sum
+        # element-wise identical to the chained adds.
+        lat_j = jnp.where(is_nopb, ack_n, ack_p) - t_j
+        over_j = (lat_j > sc["lat_target"]).astype(jnp.float64)
+        scols = jnp.concatenate([
+            jnp.asarray([S_READ_SUM, S_READ_CNT, S_PBCQ_SUM,
+                         S_PERSIST_SUM, S_PERSIST_CNT, S_SLO_OVER,
+                         S_PM_WRITES, S_ACKED, S_DURABLE], jnp.int32),
+            (S_LAT_HIST0 + lat_bin(lat_j))[None]])
+        svals = jnp.stack([
+            jnp.where(sel_r, resp - t_j, 0.0),
+            jnp.where(sel_r, 1.0, 0.0),
+            jnp.where(sel_wp, pbcq_inc, 0.0),
             jnp.where(m & is_p,
-                      jnp.where(is_nopb, ack_n, ack_p) - t_j, 0.0))
-        stats_cur = stats_cur.at[ctx.tenant, S_PERSIST_CNT].add(
-            jnp.where(m & is_p, 1.0, 0.0))
-        stats_cur = stats_cur.at[ctx.tenant, S_PM_WRITES].add(
-            jnp.where(m & is_p & (is_nopb | ~is_rf), 1.0, 0.0))
-        stats_cur = stats_cur.at[ctx.tenant, S_ACKED].add(
+                      jnp.where(is_nopb, ack_n, ack_p) - t_j, 0.0),
+            jnp.where(m & is_p, 1.0, 0.0),
+            jnp.where(m & is_p, over_j, 0.0),
+            jnp.where(m & is_p & (is_nopb | ~is_rf), 1.0, 0.0),
             jnp.where(m & is_p,
                       jnp.where(is_nopb, ok_n, ack_p <= crash)
-                      .astype(jnp.float64), 0.0))
-        stats_cur = stats_cur.at[ctx.tenant, S_DURABLE].add(
+                      .astype(jnp.float64), 0.0),
             jnp.where(m & is_p,
                       jnp.where(is_nopb, ok_n.astype(jnp.float64), 1.0),
-                      0.0))
-        hop_cur = hop_cur.at[0, H_FWD_CNT].add(
-            jnp.where(sel_wp, 1.0, 0.0))
-        hop_cur = hop_cur.at[0, H_FWD_SUM].add(
-            jnp.where(sel_wp, t_written - arr, 0.0))
+                      0.0),
+            jnp.where(m & is_p, 1.0, 0.0)])
+        stats_cur = stats_cur.at[ctx.tenant, scols].add(svals)
+        hop_cur = hop_cur.at[
+            0, jnp.asarray([H_FWD_CNT, H_FWD_SUM], jnp.int32)
+        ].add(jnp.stack([jnp.where(sel_wp, 1.0, 0.0),
+                         jnp.where(sel_wp, t_written - arr, 0.0)]))
         return (clk, state_cur, tag_cur, lru_cur, dd_cur, ver_cur,
                 owner_cur, pmb_cur, pbc_cur, pm_ver_cur, aver_cur,
                 stats_cur, hop_cur, guard, t_last), None

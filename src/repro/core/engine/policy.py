@@ -160,7 +160,7 @@ def recovery_burst_cost(sc, per_bank, n):
 
 def drain_threshold_preset(sc, n_banks, slot_active, t_written,
                            state3, tag3, lru3, dd3, pm_busy1, *,
-                           owner, tenant):
+                           owner, tenant, tight=None):
     """PB_RF: threshold/preset drain-down over LRU Dirty entries.
 
     Traced twin of :func:`rf_drain_count` plus the per-bank burst
@@ -175,6 +175,14 @@ def drain_threshold_preset(sc, n_banks, slot_active, t_written,
     tenant's Dirty entries.  The keep-one-free low-water heuristic keeps
     watching the *global* Empty pool (it protects the shared PI front)
     but likewise drains only in-scope entries.
+
+    ``tight`` (a traced bool, or None to skip) is the serving-SLO
+    override (``DrainPolicy.latency_target_ns``): while the issuing
+    tenant's observed over-target persist fraction exceeds its
+    tolerance, the drain-down runs with threshold 1 / preset 0 — drain
+    every in-scope Dirty entry ASAP so the next tail persist does not
+    queue behind a full PB.  A never-true ``tight`` (no target set)
+    selects the untightened counts and is bit-exact with ``tight=None``.
     Returns (state4, dd4, pm_busy2, policy_writes).
     """
     B = n_banks
@@ -186,6 +194,9 @@ def drain_threshold_preset(sc, n_banks, slot_active, t_written,
     thr = jnp.where(scoped, sc["t_threshold"][tenant],
                     sc["threshold_count"])
     pre = jnp.where(scoped, sc["t_preset"][tenant], sc["preset_count"])
+    if tight is not None:
+        thr = jnp.where(tight, 1.0, thr)
+        pre = jnp.where(tight, 0.0, pre)
     do_drain = dirty_cnt >= thr
     k_thresh = jnp.where(do_drain, dirty_cnt - pre, 0.0)
     k_low = jnp.where(empty_cnt <= sc["empty_slack"],

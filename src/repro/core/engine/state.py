@@ -49,7 +49,20 @@ S_VICTIM_CNT = 10    # persists that took the no-Empty victim path
 S_PBCQ_SUM = 11      # total PBC queueing wait (arrival -> service start)
 S_ACKED = 12         # persists whose ack reached the core before the crash
 S_DURABLE = 13       # persists whose payload survives crash + recovery
-N_STATS = 14
+S_SLO_OVER = 14      # persists whose ack latency exceeded lat_target
+# Fixed-bin log-spaced per-persist ack-latency histogram: columns
+# S_LAT_HIST0 .. S_LAT_HIST0+N_LAT_BINS-1 of every per-tenant stats row.
+# Bin 0 is the underflow bin (lat < LAT_HIST_MIN_NS); bin k >= 1 holds
+# MIN*r^(k-1) <= lat < MIN*r^k with r = LAT_HIST_RATIO; the last bin is
+# open above.  sqrt(2) spacing over 28 bins spans 256 ns .. ~2.1 ms —
+# sub-bin percentile resolution of ~19% latency, fine enough to place a
+# saturation knee while keeping the widened scan carry cheap.
+S_LAT_HIST0 = 15
+N_LAT_BINS = 28
+N_STATS = S_LAT_HIST0 + N_LAT_BINS
+
+LAT_HIST_MIN_NS = 256.0
+LAT_HIST_RATIO = float(np.sqrt(2.0))
 
 # per-switch (hop) statistics row layout — ``MachineState.hop_stats`` is
 # ``(Hmax, N_HOP_STATS)`` with row h = switch h+1 of the chain
@@ -63,6 +76,70 @@ N_HOP_STATS = 5
 EMPTY = int(PBEState.EMPTY)
 DIRTY = int(PBEState.DIRTY)
 DRAIN = int(PBEState.DRAIN)
+
+
+def lat_bin(lat_ns):
+    """Traced histogram bin index of one persist latency.
+
+    ``log_r(x) == 2 * log2(x)`` for ``r = sqrt(2)``, so the bin index is
+    an exact cheap expression; both persist accumulation sites (the
+    slot-at-a-time handler and the macro-step mini-interpreter) MUST use
+    this same function so macro on/off stays bit-exact.  The ``max(lat,
+    1)`` guard keeps masked macro lanes (whose latency operand can be
+    arbitrary garbage, added with weight 0.0) out of ``log2(<=0)``.
+    """
+    x = jnp.floor(jnp.log2(jnp.maximum(lat_ns, 1.0) / LAT_HIST_MIN_NS) * 2.0)
+    return jnp.clip(x.astype(jnp.int32) + 1, 0, N_LAT_BINS - 1)
+
+
+def lat_hist_edges() -> np.ndarray:
+    """Upper bin edges: ``edges[k]`` closes bin k (k = 0..N_LAT_BINS-2).
+
+    Bin 0 spans (0, edges[0]); bin k spans [edges[k-1], edges[k]); the
+    last bin is open above edges[-1].
+    """
+    return LAT_HIST_MIN_NS * LAT_HIST_RATIO ** np.arange(N_LAT_BINS - 1)
+
+
+def lat_hist_percentile(hist, q: float) -> float:
+    """Latency at quantile ``q`` (0..1) from one histogram row.
+
+    Linear interpolation inside the covering bin (bin 0's lower edge is
+    0; the open last bin extends one more ratio step).  NaN when the
+    histogram is empty — a zero-traffic cell has *no* P99, not a 0 ns
+    one (same convention as :func:`_mean`).
+    """
+    hist = np.asarray(hist, np.float64)
+    total = float(hist.sum())
+    if not total > 0:
+        return float("nan")
+    target = q * total
+    c = np.cumsum(hist)
+    b = min(int(np.searchsorted(c, target, side="left")), N_LAT_BINS - 1)
+    edges = lat_hist_edges()
+    lo = 0.0 if b == 0 else float(edges[b - 1])
+    hi = (float(edges[b]) if b < N_LAT_BINS - 1
+          else float(edges[-1] * LAT_HIST_RATIO))
+    prev = float(c[b - 1]) if b > 0 else 0.0
+    frac = (target - prev) / hist[b] if hist[b] > 0 else 1.0
+    return lo + frac * (hi - lo)
+
+
+def lat_hist_mean(hist) -> float:
+    """Mean latency reconstructed from the histogram (geometric-mid
+    representatives; agrees with S_PERSIST_SUM/CNT to bin resolution)."""
+    hist = np.asarray(hist, np.float64)
+    total = float(hist.sum())
+    if not total > 0:
+        return float("nan")
+    edges = lat_hist_edges()
+    half = np.sqrt(LAT_HIST_RATIO)
+    reps = np.concatenate([
+        [edges[0] / half],                       # underflow bin
+        np.sqrt(edges[:-1] * edges[1:]),         # interior geometric mids
+        [edges[-1] * half],                      # open last bin
+    ])
+    return float((hist * reps).sum() / total)
 
 
 class MachineState(NamedTuple):
@@ -209,6 +286,33 @@ class SimResult:
     n_hops: int = 0
     hop_stats: "np.ndarray | None" = None     # (n_hops, N_HOP_STATS) f64
     hop_recovery: "np.ndarray | None" = None  # (n_hops,) i64 or None
+    # ---- serving / SLO telemetry (tail-latency distribution) -----------
+    # ``lat_hist`` is the fixed-bin log-spaced per-persist ack-latency
+    # histogram (N_LAT_BINS columns of the stats block, summed over
+    # tenants here; per-tenant rows come back via tenant_results()).
+    # ``slo_violations`` counts persists over DrainPolicy.latency_target_ns
+    # (0 when no target is set — nothing is ever over +inf).
+    lat_hist: "np.ndarray | None" = None      # (N_LAT_BINS,) f64 or None
+    slo_violations: int = 0
+
+    def persist_lat_pct(self, q: float) -> float:
+        """Persist ack-latency quantile from the histogram (NaN when the
+        cell saw no persists or carries no histogram)."""
+        if self.lat_hist is None:
+            return float("nan")
+        return lat_hist_percentile(self.lat_hist, q)
+
+    @property
+    def persist_lat_p50(self) -> float:
+        return self.persist_lat_pct(0.50)
+
+    @property
+    def persist_lat_p95(self) -> float:
+        return self.persist_lat_pct(0.95)
+
+    @property
+    def persist_lat_p99(self) -> float:
+        return self.persist_lat_pct(0.99)
 
     @property
     def read_hit_rate(self) -> float:
@@ -319,6 +423,8 @@ def result_from_stats(runtime: float, stats: np.ndarray, *,
                    if n_hops > 0 and hop_stats is not None else None),
         hop_recovery=(np.asarray(hop_recovery, np.int64)[:n_hops].copy()
                       if n_hops > 0 and hop_recovery is not None else None),
+        lat_hist=tot[S_LAT_HIST0:S_LAT_HIST0 + N_LAT_BINS].copy(),
+        slo_violations=int(tot[S_SLO_OVER]),
     )
 
 
@@ -412,6 +518,14 @@ def scalars_from_config(cfg: PCSConfig,
         deep_pre=deep_pre,        # (D1,) switch j+2's drain preset count
         deep_tag=deep_tag,        # (D1,) switch j+2's tag lookup latency
         deep_data=deep_data,      # (D1,) switch j+2's data access latency
+        # ---- serving-SLO drain tightening (DrainPolicy.latency_target_ns)
+        # None lowers to INF: no persist latency ever exceeds it, the
+        # running-over counter stays 0 and the tight predicate is always
+        # false — bit-exact with the default policy.
+        lat_target=min(pol.drain.latency_target_ns
+                       if pol.drain.latency_target_ns is not None else INF,
+                       INF),
+        lat_tol=float(pol.drain.latency_tol),
         # power-loss instant; INF (the engine's finite infinity) = never
         crash_at=min(cfg.crash_at_ns, INF),
     )

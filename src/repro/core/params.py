@@ -117,6 +117,17 @@ class DrainPolicy:
     longer evict a quiet tenant's Dirty entries.  ``low_water_drains`` /
     ``empty_slack`` are the keep-one-free heuristic knobs that used to
     be module constants (``RF_LOW_WATER_DRAINS`` / ``RF_EMPTY_SLACK``).
+
+    ``latency_target_ns`` is the serving-SLO closing of the loop: when
+    set, each tenant tracks the running fraction of its persists whose
+    ack latency exceeded the target, and while that fraction exceeds
+    ``latency_tol`` the tenant's drain-down runs *tight* — threshold 1,
+    preset 0 (drain everything ASAP), so a backed-up PB empties instead
+    of queueing the next tail persist behind a drain burst.  The running
+    fraction includes the persist being decided (a first persist over
+    target immediately tightens).  Lowers to two traced scalars
+    (``lat_target`` / ``lat_tol``); ``None`` lowers to the engine's
+    finite infinity and is bit-exact with the default policy.
     """
 
     threshold: float = DEFAULT_DRAIN_THRESHOLD
@@ -124,12 +135,19 @@ class DrainPolicy:
     per_tenant: bool = False
     low_water_drains: int = RF_LOW_WATER_DRAINS
     empty_slack: int = RF_EMPTY_SLACK
+    latency_target_ns: Optional[float] = None
+    latency_tol: float = 0.05
 
     def __post_init__(self) -> None:
         if not (0.0 < self.preset <= self.threshold <= 1.0):
             raise ValueError("require 0 < preset <= threshold <= 1")
         if self.low_water_drains < 0 or self.empty_slack < 0:
             raise ValueError("low_water_drains / empty_slack must be >= 0")
+        if self.latency_target_ns is not None and \
+                not self.latency_target_ns > 0:
+            raise ValueError("latency_target_ns must be > 0 (or None)")
+        if not 0.0 <= self.latency_tol < 1.0:
+            raise ValueError("latency_tol must be in [0, 1)")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -106,6 +106,16 @@ class PersistentBuffer:
         self._tenant_counts = (
             tenant_drain_counts(self.policy, config.n_pbe, config.n_tenants)
             if self.policy.drain.per_tenant else None)
+        # Serving-SLO drain tightening (DrainPolicy.latency_target_ns):
+        # the untimed oracle cannot compute persist latencies, so the
+        # driver passes a per-persist ``lat_over`` hint; the per-tenant
+        # running counters here are the engine's S_PERSIST_CNT /
+        # S_SLO_OVER twins, updated at persist *completion* (a stalled
+        # packet is counted once, when its retry lands — net of the
+        # stall decrement, exactly like the "persists" counter).
+        self._lat_target = self.policy.drain.latency_target_ns
+        self._lat_tol = self.policy.drain.latency_tol
+        self._slo_cnt: Dict[int, int] = {}
         self.pm = pm if pm is not None else PersistentMemory()
         self.entries: List[PBEntry] = []
         # Switch chain (pooling topologies): ``entries`` is hop 1, the
@@ -130,10 +140,13 @@ class PersistentBuffer:
         self._seq = 0
         self._version_clock = 0
         # Writes stalled at the PI buffer waiting for an Empty entry:
-        # (addr, data, tenant, claim_below) — `claim_below` (non-None
-        # for quota-parked packets) gates the claim on the tenant's own
-        # footprint shrinking below its park-time occupancy.
-        self.pi_stalled: List[Tuple[int, object, int, Optional[int]]] = []
+        # (addr, data, tenant, claim_below, lat_over) — `claim_below`
+        # (non-None for quota-parked packets) gates the claim on the
+        # tenant's own footprint shrinking below its park-time
+        # occupancy; `lat_over` preserves the driver's SLO hint across
+        # the re-park/replay cycle.
+        self.pi_stalled: List[
+            Tuple[int, object, int, Optional[int], Optional[bool]]] = []
         # Drains in flight: addr -> version sent (ack frees the entry).
         self.in_flight: Dict[int, int] = {}
         self.stats = {
@@ -145,6 +158,7 @@ class PersistentBuffer:
             "read_hits": 0,
             "read_misses": 0,
             "stalls": 0,
+            "slo_over": 0,     # persists over DrainPolicy.latency_target_ns
         }
         # Per-tenant accounting over the shared buffer: every event is
         # attributed to the tenant whose request triggered it (a policy
@@ -354,6 +368,14 @@ class PersistentBuffer:
             dirty = self._count(PBEState.DIRTY)
             thr, pre = (self.config.threshold_count,
                         self.config.preset_count)
+        # serving-SLO tightening (engine twin: the ``tight`` override in
+        # ``engine.policy.drain_threshold_preset``): while the trigger
+        # tenant's observed over-target fraction exceeds its tolerance,
+        # drain every in-scope Dirty entry ASAP (threshold 1, preset 0)
+        if (self._lat_target is not None
+                and self._tstats(tenant)["slo_over"]
+                > self._lat_tol * self._slo_cnt.get(tenant, 0)):
+            thr, pre = 1, 0
         k = rf_drain_count(dirty, empty, thr, pre,
                            pol.low_water_drains, pol.empty_slack)
         packets = []
@@ -367,9 +389,24 @@ class PersistentBuffer:
         if self.config.n_switches >= 2:
             self._forward_batch(packets, 2, tenant)
 
+    def _slo_note(self, tenant: int, lat_over: Optional[bool]) -> None:
+        """Record one *completed* persist's SLO outcome.
+
+        ``lat_over`` is the driver's timing hint (ack latency over
+        ``DrainPolicy.latency_target_ns``); the untimed oracle cannot
+        compute latencies itself.  The counters feed the tight override
+        in :meth:`_rf_drain_down` and the engine differential
+        (``S_PERSIST_CNT`` / ``S_SLO_OVER`` twins).
+        """
+        self._slo_cnt[tenant] = self._slo_cnt.get(tenant, 0) + 1
+        if lat_over:
+            self.stats["slo_over"] += 1
+            self._tstats(tenant)["slo_over"] += 1
+
     def _stall(self, addr: int, data: object, tenant: int, version: int,
                events: List[Event], retry: bool,
-               claim_below: Optional[int]) -> List[Event]:
+               claim_below: Optional[int],
+               lat_over: Optional[bool] = None) -> List[Event]:
         """Park the write at the PI buffer until an entry frees (V-D1).
 
         A *retry* (a previously stalled packet replayed by
@@ -384,7 +421,7 @@ class PersistentBuffer:
         engine's over-quota victim path (see :meth:`persist`).
         """
         ts = self._tstats(tenant)
-        self.pi_stalled.append((addr, data, tenant, claim_below))
+        self.pi_stalled.append((addr, data, tenant, claim_below, lat_over))
         self.stats["persists"] -= 1
         ts["persists"] -= 1
         self._version_clock -= 1
@@ -398,11 +435,17 @@ class PersistentBuffer:
     # ------------------------------------------------------------- persist
     def persist(self, addr: int, data: object,
                 tenant: int = 0, *, _retry: bool = False,
-                _claim_below: Optional[int] = None) -> List[Event]:
+                _claim_below: Optional[int] = None,
+                lat_over: Optional[bool] = None) -> List[Event]:
         """A persist (flush+fence) packet reaches the switch.
 
         ``tenant`` tags which host issued it (multi-tenant sharing of
         the switch); all events it triggers are billed to that tenant.
+        ``lat_over`` is the driver's SLO hint: whether this persist's
+        *timed* ack latency exceeded ``DrainPolicy.latency_target_ns``
+        (ignored — and irrelevant — when no target is set); it feeds the
+        tight drain-down override via :meth:`_slo_note` and is counted
+        once, at completion.
         ``_retry`` marks the replay of a stalled packet (internal, from
         :meth:`pm_ack`): it re-attempts allocation but neither starts
         another victim drain nor re-counts the stall.  ``_claim_below``
@@ -427,6 +470,7 @@ class PersistentBuffer:
         if self.config.scheme == Scheme.NOPB:
             # Volatile switch: the persist round-trips to PM.
             self.pm.write(addr, version, data)
+            self._slo_note(tenant, lat_over)
             self.stats["acks"] += 1
             self.stats["pm_writes"] += 1
             ts["acks"] += 1
@@ -443,6 +487,7 @@ class PersistentBuffer:
                 existing.data = data
                 existing.tenant = tenant
                 self._touch(existing)
+                self._slo_note(tenant, lat_over)
                 self.stats["coalesces"] += 1
                 self.stats["acks"] += 1
                 ts["coalesces"] += 1
@@ -476,7 +521,8 @@ class PersistentBuffer:
             if occ >= _claim_below:
                 # no own entry freed yet: keep waiting (silent re-park)
                 return self._stall(addr, data, tenant, version, events,
-                                   _retry, claim_below=_claim_below)
+                                   _retry, claim_below=_claim_below,
+                                   lat_over=lat_over)
         elif occ >= self.policy.alloc.quota_of(tenant):
             if not _retry:
                 victim = self._lru_dirty(owner=tenant)
@@ -487,7 +533,7 @@ class PersistentBuffer:
                     if self.config.n_switches >= 2:
                         self._forward_batch([pkt], 2, tenant)
             return self._stall(addr, data, tenant, version, events,
-                               _retry, claim_below=occ)
+                               _retry, claim_below=occ, lat_over=lat_over)
 
         # An in-flight (Drain) older version does NOT block the new persist:
         # the new version gets its own entry; the switch->PM path is FIFO,
@@ -504,7 +550,8 @@ class PersistentBuffer:
             # Whether we drained a victim or everything is already Drain,
             # the write must wait for an Empty entry (Section V-D1).
             return self._stall(addr, data, tenant, version, events,
-                               _retry, claim_below=_claim_below)
+                               _retry, claim_below=_claim_below,
+                               lat_over=lat_over)
 
         slot.addr = addr
         slot.version = version
@@ -512,6 +559,7 @@ class PersistentBuffer:
         slot.state = PBEState.DIRTY
         slot.tenant = tenant
         self._touch(slot)
+        self._slo_note(tenant, lat_over)
         self.stats["acks"] += 1
         ts["acks"] += 1
         self.hop_counts[0]["commits"] += 1
@@ -547,9 +595,9 @@ class PersistentBuffer:
         # still over quota) re-parks silently — one stall event and at
         # most one victim drain per original packet, like the engine.
         retries, self.pi_stalled = self.pi_stalled, []
-        for (a, d, tn, cb) in retries:
+        for (a, d, tn, cb, lo) in retries:
             events.extend(self.persist(a, d, tn, _retry=True,
-                                       _claim_below=cb))
+                                       _claim_below=cb, lat_over=lo))
         return events
 
     # ---------------------------------------------------------------- read

@@ -304,6 +304,11 @@ def _lu_trace(n_cores: int, n: int, block: int, contiguous: bool,
     and persists the pivot block, then every core's panel update re-reads
     the freshly flushed pivot lines — the cross-core read-after-persist
     pattern behind LU's ~20% RF hit rate.
+
+    ``seed`` jitters the dgemm compute gaps (exponential multiplier,
+    the same idiom as :func:`_signature_trace`), so ``lu_cont`` (seed 1)
+    and ``lu_non`` (seed 2) genuinely differ in timing; the op/address
+    stream itself is the deterministic loop nest.
     """
     rng = np.random.default_rng(seed)
     nb = n // block
@@ -360,7 +365,8 @@ def _lu_trace(n_cores: int, n: int, block: int, contiguous: bool,
         trailing = [(i, j) for i in range(k + 1, nb) for j in range(k + 1, nb)]
         for t_i, (bi, bj) in enumerate(trailing):
             s = streams[bj % n_cores]
-            s.compute(2800.0 if contiguous else 1500.0)  # dgemm arithmetic
+            s.compute((2800.0 if contiguous else 1500.0)
+                      * float(rng.exponential(1.0)))  # dgemm arithmetic
             for ln in block_lines(bi, k):
                 s.read_pm(int(ln))
             for ln in block_lines(k, bj):
@@ -371,7 +377,6 @@ def _lu_trace(n_cores: int, n: int, block: int, contiguous: bool,
             s.barrier()
         if budget <= 0:
             break
-        _ = rng
     return _pack(streams, name)
 
 
@@ -787,3 +792,172 @@ def make_trace(name: str, n_cores: int = 8, **kw) -> Trace:
     if name not in WORKLOADS:
         raise KeyError(f"unknown workload {name!r}; have {sorted(WORKLOADS)}")
     return WORKLOADS[name](n_cores=n_cores, **kw)
+
+
+# ===========================================================================
+# Serving-style offered load (open-loop arrival processes)
+# ===========================================================================
+# The workload generators above are *closed-loop*: each core computes,
+# then issues, so the issue rate adapts to service latency and a
+# saturated switch simply slows the workload down.  Serving traffic is
+# the opposite — requests arrive at an *offered* rate regardless of how
+# the system is doing, and the experienced tail latency explodes at the
+# saturation knee.  An :class:`ArrivalProcess` re-times an existing
+# workload trace: every compute gap is replaced by an interarrival
+# sample ``E * 1000 / rate(t)`` ns with ``E ~ Exp(1)`` and ``rate`` in
+# Mops/s per core, evaluated at the core's *nominal* arrival clock (the
+# open-loop schedule, independent of service times).  The result is
+# semi-open: arrivals pace the think time, but a core still blocks on
+# its in-flight persist, so the queue lives in the switch/PM resources
+# — exactly where the knee forms as the offered interarrival gap drops
+# below the persist service time.  Offered load thereby becomes a
+# sweepable *trace* axis of ``simulate_grid``, like ``crash_at_ns`` is
+# a config axis.
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals:
+    """Open-loop Poisson arrivals at a constant per-core offered load."""
+
+    rate_mops: float                 # million ops/s per core
+
+    def __post_init__(self) -> None:
+        if not self.rate_mops > 0:
+            raise ValueError("rate_mops must be > 0")
+
+    @property
+    def label(self) -> str:
+        return f"poisson{self.rate_mops:g}"
+
+    def rate_at(self, t_ns: float) -> float:
+        return self.rate_mops
+
+    def sample_gaps(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        # constant rate: the sequential loop in _sample_gaps reduces to
+        # e[i] * (1000 / rate) elementwise — vectorize it
+        return rng.exponential(1.0, n) * (1000.0 / self.rate_mops)
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstyArrivals:
+    """On-off (bursty) arrivals: rate ``burst``x higher during the on
+    phase, scaled so the *time-average* offered load is ``rate_mops``."""
+
+    rate_mops: float                 # time-average load, Mops/s per core
+    burst: float = 8.0               # on-phase / off-phase rate ratio
+    on_fraction: float = 0.25        # fraction of each period spent on
+    period_ns: float = 200_000.0
+    phase_ns: float = 0.0
+
+    def __post_init__(self) -> None:
+        if not self.rate_mops > 0:
+            raise ValueError("rate_mops must be > 0")
+        if not self.burst >= 1.0:
+            raise ValueError("burst must be >= 1")
+        if not 0.0 < self.on_fraction <= 1.0:
+            raise ValueError("on_fraction must be in (0, 1]")
+        if not self.period_ns > 0:
+            raise ValueError("period_ns must be > 0")
+
+    @property
+    def label(self) -> str:
+        return f"bursty{self.rate_mops:g}x{self.burst:g}"
+
+    def rate_at(self, t_ns: float) -> float:
+        f = self.on_fraction
+        # r_on * f + (r_on / burst) * (1 - f) == rate_mops
+        r_on = self.rate_mops * self.burst / (f * self.burst + (1.0 - f))
+        on = ((t_ns + self.phase_ns) % self.period_ns) < f * self.period_ns
+        return r_on if on else r_on / self.burst
+
+    def sample_gaps(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        return _sample_gaps(self, n, rng)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalArrivals:
+    """Sinusoidal rate profile (a compressed day): ``rate_mops * (1 +
+    amplitude * sin(2*pi*t/period))``, time-average ``rate_mops``."""
+
+    rate_mops: float                 # time-average load, Mops/s per core
+    amplitude: float = 0.5           # peak-to-mean swing, < 1
+    period_ns: float = 2_000_000.0
+    phase_ns: float = 0.0
+
+    def __post_init__(self) -> None:
+        if not self.rate_mops > 0:
+            raise ValueError("rate_mops must be > 0")
+        if not 0.0 <= self.amplitude < 1.0:
+            raise ValueError("amplitude must be in [0, 1)")
+        if not self.period_ns > 0:
+            raise ValueError("period_ns must be > 0")
+
+    @property
+    def label(self) -> str:
+        return f"diurnal{self.rate_mops:g}a{self.amplitude:g}"
+
+    def rate_at(self, t_ns: float) -> float:
+        w = 2.0 * np.pi * (t_ns + self.phase_ns) / self.period_ns
+        return self.rate_mops * (1.0 + self.amplitude * float(np.sin(w)))
+
+    def sample_gaps(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        return _sample_gaps(self, n, rng)
+
+
+def _sample_gaps(proc, n: int, rng: np.random.Generator) -> np.ndarray:
+    """Sequential interarrival sampling under a time-varying rate: each
+    gap is an Exp(1) draw scaled by the instantaneous rate at the
+    *nominal* arrival time (the open-loop clock the gaps themselves
+    accumulate — service times never feed back into it)."""
+    e = rng.exponential(1.0, n)
+    out = np.empty((n,), np.float64)
+    t = 0.0
+    for i in range(n):
+        g = e[i] * 1000.0 / proc.rate_at(t)
+        out[i] = g
+        t += g
+    return out
+
+
+def apply_arrivals(trace: Trace, arrivals, *, seed: int = 0,
+                   n_tenants: int = 1) -> Trace:
+    """Re-time ``trace`` under open-loop arrival processes.
+
+    Ops, addresses and lengths are untouched — only the compute gaps
+    are replaced, per core, by interarrival samples from the core's
+    tenant's :class:`ArrivalProcess`.  ``arrivals`` is one process (or
+    a bare rate in Mops/s per core, promoted to Poisson) applied to
+    every tenant, or a sequence of ``n_tenants`` processes mapped onto
+    cores via :func:`tenant_ids` — per-tenant rate profiles on a shared
+    switch.  Deterministic in ``seed`` (one substream per core).
+    """
+    procs = arrivals if isinstance(arrivals, (list, tuple)) else [arrivals]
+    procs = [PoissonArrivals(p) if isinstance(p, (int, float)) else p
+             for p in procs]
+    if len(procs) not in (1, n_tenants):
+        raise ValueError(f"need 1 or n_tenants={n_tenants} arrival "
+                         f"processes, got {len(procs)}")
+    tid = tenant_ids(trace.lengths, n_tenants)
+    gaps = np.array(trace.gaps, np.float32, copy=True)
+    for c in range(trace.n_cores):
+        n = int(trace.lengths[c])
+        if n <= 0:
+            continue
+        rng = np.random.default_rng([seed, c])
+        proc = procs[0] if len(procs) == 1 else procs[int(tid[c])]
+        gaps[c, :n] = proc.sample_gaps(n, rng).astype(np.float32)
+    label = "+".join(p.label for p in procs)
+    return Trace(ops=trace.ops, addrs=trace.addrs, gaps=gaps,
+                 lengths=trace.lengths, name=f"{trace.name}@{label}")
+
+
+def make_offered_load_trace(workload: str, arrivals, *, n_cores: int = 8,
+                            seed: int = 0,
+                            persist_budget: int = DEFAULT_PERSIST_BUDGET,
+                            n_tenants: int = 1, **kw) -> Trace:
+    """One-call serving composition: build ``workload``'s op/address
+    stream, then re-time it under ``arrivals`` (a process, a bare
+    Mops/s rate, or one process per tenant) — the offered-load axis of
+    ``benchmarks/fig_slo.py``."""
+    base = make_trace(workload, n_cores=n_cores,
+                      persist_budget=persist_budget, **kw)
+    return apply_arrivals(base, arrivals, seed=seed, n_tenants=n_tenants)

@@ -162,6 +162,66 @@ def test_differential_matrix_quota_policies_one_compile():
                        "default" if pol is None else str(pol.alloc)))
 
 
+def test_differential_matrix_latency_target_one_compile():
+    """Serving-SLO drain tightening (``DrainPolicy.latency_target_ns``)
+    vs the oracle twin.  The untimed oracle cannot compute ack
+    latencies, so the matrix only uses *extreme* targets where the
+    per-persist over/under outcome is timing-independent in the
+    prompt-ack fuzz regime: 1 ns (every timed ack is over, so
+    drain-down is tight from the very first persist) and 1e12 ns (no
+    ack is ever over, so the cell must behave exactly like the default
+    policy).  All three policies ride in ONE compiled grid; the
+    engine's ``slo_violations`` and histogram mass must match the
+    oracle's completion accounting per tenant, the huge-target column
+    must be bit-identical to the no-target column, and the
+    macro-stepped fast path must agree bit-exactly with the macro-off
+    control while the tight override is active."""
+    n_tenants, n_cores = 2, 4
+    seeds = list(range(4))
+    traces, scheds = zip(*[
+        fuzz_trace(s, n_cores=n_cores, n_slots=N_SLOTS, n_addrs=N_ADDRS,
+                   n_tenants=n_tenants, p_persist=0.7)
+        for s in seeds])
+    tight = PBPolicy(drain=DrainPolicy(latency_target_ns=1.0))
+    never = PBPolicy(drain=DrainPolicy(latency_target_ns=1e12))
+    crash_slots = (0, 11, 23, 36, N_SLOTS)
+    plan = [(scheme, k, PBES[ki % len(PBES)], pol)
+            for scheme in SCHEMES
+            for ki, k in enumerate(crash_slots)
+            for pol in (tight, never, None)]
+    configs = [PCSConfig(scheme=s, n_pbe=p, n_cores=n_cores,
+                         n_tenants=n_tenants,
+                         policy=pol).with_crash(fuzz_crash_ns(k))
+               for s, k, p, pol in plan]
+    c0 = compile_count()
+    cells = simulate_grid(list(traces), configs, max_pbe=max(PBES),
+                          bucket=BUCKET, track_addrs=N_ADDRS)
+    assert compile_count() - c0 == 1, (
+        "the {trace x scheme x crash-point x latency-target} matrix "
+        "must be one XLA program")
+    off = simulate_grid(list(traces), configs, max_pbe=max(PBES),
+                        bucket=BUCKET, track_addrs=N_ADDRS, macro=False)
+    for i, (tr, sched) in enumerate(zip(traces, scheds)):
+        core_tenant = tenant_ids(tr.lengths, n_tenants)
+        for j, (scheme, k, n_pbe, pol) in enumerate(plan):
+            oracle = oracle_replay(sched, k, scheme, n_pbe,
+                                   core_tenant=core_tenant,
+                                   n_tenants=n_tenants, policy=pol)
+            label = ("SLO", seeds[i], scheme.name, k, n_pbe,
+                     None if pol is None
+                     else pol.drain.latency_target_ns)
+            assert_cell_matches(cells[i][j], oracle, N_ADDRS, label=label)
+            _assert_simresults_identical(cells[i][j], off[i][j], label)
+    # a never-reached target must be indistinguishable from no target:
+    # plan interleaves (tight, never, None) per (scheme, crash) group
+    for i in range(len(seeds)):
+        for j in range(0, len(plan), 3):
+            _assert_simresults_identical(
+                cells[i][j + 1], cells[i][j + 2],
+                ("SLO-huge-vs-none", seeds[i], plan[j][0].name,
+                 plan[j][1]))
+
+
 def test_differential_matrix_switch_chains_one_compile():
     """Chained pooling topologies (per-switch PBs): the {trace x scheme
     x depth 1..3 x crash-point} matrix must be ONE XLA program (depth
@@ -299,6 +359,14 @@ def test_differential_macro_column_bit_exact():
         for j, (scheme, k, p, d) in enumerate(plan):
             _assert_simresults_identical(
                 on[i][j], off[i][j], (s, scheme.name, k, p, d))
+            # derived percentile outputs ride on the (bitwise-equal)
+            # histogram rows, but pin them too: the user-facing numbers
+            # must not depend on whether macro-stepping was on
+            for q in (0.50, 0.95, 0.99):
+                x = on[i][j].persist_lat_pct(q)
+                y = off[i][j].persist_lat_pct(q)
+                assert x == y or (np.isnan(x) and np.isnan(y)), (
+                    s, scheme.name, k, p, d, q, x, y)
 
     n_tenants, n_cores = 2, 4
     t_traces = [fuzz_trace(s, n_cores=n_cores, n_slots=N_SLOTS,

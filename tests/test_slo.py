@@ -1,0 +1,256 @@
+"""Serving-SLO telemetry: arrival processes, the per-persist latency
+histogram, percentile reconstruction and the latency-target drain
+policy.
+
+The histogram rides in the per-tenant ``MachineState.stats`` rows
+(``S_LAT_HIST0 .. S_LAT_HIST0 + N_LAT_BINS``), accumulated with the
+same expression at the persist handler and the macro fast path; these
+tests pin its mass accounting, the bin mapping, the percentile/mean
+reconstruction bounds, the open-loop arrival generators, and the
+``DrainPolicy(latency_target_ns=...)`` lowering (a never-reached
+target must be indistinguishable from no target; a tiny one must
+visibly tighten drain-down).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (BurstyArrivals, DiurnalArrivals, DrainPolicy,
+                        PBPolicy, PCSConfig, PoissonArrivals, Scheme,
+                        apply_arrivals, make_offered_load_trace, make_trace)
+from repro.core.engine import compile_count, simulate, simulate_grid
+from repro.core.engine.state import (LAT_HIST_MIN_NS, LAT_HIST_RATIO,
+                                     N_LAT_BINS, lat_bin, lat_hist_edges,
+                                     lat_hist_mean, lat_hist_percentile)
+
+SCHEMES = [Scheme.NOPB, Scheme.PB, Scheme.PB_RF]
+
+
+# ===========================================================================
+# Histogram bin layout and reconstruction helpers
+# ===========================================================================
+
+def test_lat_bin_layout():
+    """Bin 0 is the underflow bin; bin k >= 1 holds
+    [MIN * r^(k-1), MIN * r^k); the last bin is open."""
+    r = LAT_HIST_RATIO
+    assert int(lat_bin(0.0)) == 0
+    assert int(lat_bin(LAT_HIST_MIN_NS - 1.0)) == 0
+    assert int(lat_bin(LAT_HIST_MIN_NS)) == 1
+    assert int(lat_bin(LAT_HIST_MIN_NS * r * 0.999)) == 1
+    assert int(lat_bin(LAT_HIST_MIN_NS * r * 1.001)) == 2
+    assert int(lat_bin(1e12)) == N_LAT_BINS - 1
+    edges = lat_hist_edges()
+    assert len(edges) == N_LAT_BINS - 1
+    # every finite edge maps to the bin it opens
+    for k, e in enumerate(edges):
+        assert int(lat_bin(e * 1.0001)) == k + 1, (k, e)
+    # the span covers sub-us service latencies through ms-scale stalls
+    assert edges[0] == LAT_HIST_MIN_NS
+    assert edges[-1] > 1e6
+
+
+def test_percentiles_from_hist():
+    hist = np.zeros(N_LAT_BINS)
+    # empty histogram: percentiles and mean are NaN, never 0.0
+    assert math.isnan(lat_hist_percentile(hist, 0.50))
+    assert math.isnan(lat_hist_mean(hist))
+    # all mass in one bin: every percentile lands inside that bin and
+    # the mean is its geometric midpoint
+    edges = lat_hist_edges()
+    hist[5] = 100.0
+    lo, hi = edges[4], edges[5]
+    for q in (0.01, 0.50, 0.99):
+        p = lat_hist_percentile(hist, q)
+        assert lo <= p <= hi, (q, p, lo, hi)
+    assert lo <= lat_hist_mean(hist) <= hi
+    # two-bin split: the median sits in the upper bin once the lower
+    # holds less than half the mass, and percentiles are monotone in q
+    hist[:] = 0.0
+    hist[3], hist[10] = 40.0, 60.0
+    ps = [lat_hist_percentile(hist, q) for q in (0.10, 0.50, 0.95)]
+    assert ps == sorted(ps)
+    assert ps[0] <= edges[3]
+    assert edges[9] <= ps[1] <= edges[10]
+
+
+# ===========================================================================
+# Engine accumulation: mass, mean agreement, percentile surface
+# ===========================================================================
+
+def _small(workload="raytrace", budget=300):
+    return make_trace(workload, n_cores=4, persist_budget=budget)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_hist_mass_and_mean_agree(scheme):
+    """Histogram mass equals the persist count, and the histogram-
+    reconstructed mean matches S_PERSIST_SUM / S_PERSIST_CNT within the
+    sqrt(2) bin resolution (geometric mids are within r^(1/2) of any
+    point in their bin)."""
+    res = simulate(_small(), PCSConfig(scheme=scheme, n_cores=4))
+    assert res.lat_hist is not None
+    assert int(res.lat_hist.sum()) == res.persists > 0
+    approx = lat_hist_mean(res.lat_hist)
+    exact = res.persist_lat_ns
+    tol = math.sqrt(LAT_HIST_RATIO)          # one half-bin, ~19%
+    assert exact / tol <= approx <= exact * tol, (approx, exact)
+    # the percentile surface is monotone and brackets the mean's bin
+    p50, p95, p99 = (res.persist_lat_p50, res.persist_lat_p95,
+                     res.persist_lat_p99)
+    assert 0.0 < p50 <= p95 <= p99, (p50, p95, p99)
+
+
+def test_tenant_hist_rows_sum_to_total():
+    trace = make_trace("radiosity", n_cores=4, persist_budget=300)
+    res = simulate(trace, PCSConfig(scheme=Scheme.PB_RF, n_cores=4,
+                                    n_tenants=2))
+    rows = res.tenant_results()
+    assert len(rows) == 2
+    per_tenant = np.stack([r.lat_hist for r in rows])
+    assert np.array_equal(per_tenant.sum(axis=0), res.lat_hist)
+    for r in rows:
+        assert int(r.lat_hist.sum()) == r.persists
+
+
+# ===========================================================================
+# Open-loop arrival processes
+# ===========================================================================
+
+def test_arrivals_retime_only_gaps():
+    base = _small()
+    loaded = apply_arrivals(base, 2.0, seed=3)       # bare rate -> Poisson
+    assert np.array_equal(base.ops, loaded.ops)
+    assert np.array_equal(base.addrs, loaded.addrs)
+    assert np.array_equal(base.lengths, loaded.lengths)
+    assert not np.array_equal(base.gaps, loaded.gaps)
+    assert "poisson2" in loaded.name
+
+
+def test_arrivals_deterministic_and_seeded():
+    base = _small()
+    a = apply_arrivals(base, PoissonArrivals(4.0), seed=1)
+    b = apply_arrivals(base, PoissonArrivals(4.0), seed=1)
+    c = apply_arrivals(base, PoissonArrivals(4.0), seed=2)
+    assert np.array_equal(a.gaps, b.gaps)
+    assert not np.array_equal(a.gaps, c.gaps)
+
+
+@pytest.mark.parametrize("proc,tol", [
+    (PoissonArrivals(2.0), 0.10),
+    (BurstyArrivals(2.0, burst=8.0, on_fraction=0.25), 0.25),
+    (DiurnalArrivals(2.0, amplitude=0.5), 0.25),
+])
+def test_arrival_rate_accuracy(proc, tol):
+    """Long-run offered rate (Mops/s = 1000 / mean-gap-ns over the
+    nominal clock) matches the process's time-average rate."""
+    rng = np.random.default_rng(7)
+    gaps = proc.sample_gaps(20_000, rng)
+    assert (gaps > 0).all()
+    got = 1000.0 * len(gaps) / gaps.sum()
+    assert abs(got - proc.rate_mops) <= tol * proc.rate_mops, got
+
+
+def test_bursty_rates_straddle_the_mean():
+    proc = BurstyArrivals(2.0, burst=8.0, on_fraction=0.25)
+    assert proc.rate_at(0.0) > 2.0                  # on-phase
+    assert proc.rate_at(proc.period_ns * 0.9) < 2.0  # off-phase
+
+
+def test_per_tenant_arrival_processes():
+    trace = make_trace("raytrace", n_cores=4, persist_budget=400)
+    loaded = apply_arrivals(trace, [PoissonArrivals(0.5),
+                                    PoissonArrivals(8.0)],
+                            seed=0, n_tenants=2)
+    # tenant 0 = cores 0..1 (slow), tenant 1 = cores 2..3 (fast)
+    def mean_gap(c):
+        n = int(loaded.lengths[c])
+        return float(loaded.gaps[c, :n].mean())
+    assert mean_gap(0) > 4 * mean_gap(2)
+    with pytest.raises(ValueError):
+        apply_arrivals(trace, [PoissonArrivals(1.0)] * 3, n_tenants=2)
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError):
+        PoissonArrivals(0.0)
+    with pytest.raises(ValueError):
+        BurstyArrivals(1.0, burst=0.5)
+    with pytest.raises(ValueError):
+        DiurnalArrivals(1.0, amplitude=1.5)
+
+
+# ===========================================================================
+# Offered-load sweep: saturation raises the tail, one compiled program
+# ===========================================================================
+
+def test_offered_load_tail_rises_one_compile():
+    """Enough cores behind one switch (32) saturate the shared PBC/PM
+    at high offered load: the retention-heavy PB_RF scheme's P99
+    explodes while the op stream stays identical."""
+    rates = (0.25, 32.0)
+    traces = [make_offered_load_trace("raytrace", r, n_cores=32,
+                                      persist_budget=1600)
+              for r in rates]
+    configs = [PCSConfig(scheme=Scheme.PB_RF, n_cores=32)]
+    c0 = compile_count()
+    cells = simulate_grid(traces, configs, bucket=512)
+    assert compile_count() - c0 == 1, (
+        "the offered-load axis is a trace axis; the sweep must stay "
+        "one XLA program")
+    lo, hi = cells[0][0], cells[1][0]
+    assert lo.persists == hi.persists            # same op stream
+    # saturated arrivals queue at the shared PBC/PM: the tail explodes
+    assert hi.persist_lat_p99 > 1.5 * lo.persist_lat_p99, (
+        lo.persist_lat_p99, hi.persist_lat_p99)
+    assert lo.persist_lat_p50 <= lo.persist_lat_p95 <= lo.persist_lat_p99
+
+
+# ===========================================================================
+# Latency-target drain policy
+# ===========================================================================
+
+def test_latency_target_validation():
+    with pytest.raises(ValueError):
+        DrainPolicy(latency_target_ns=0.0)
+    with pytest.raises(ValueError):
+        DrainPolicy(latency_target_ns=-100.0)
+    with pytest.raises(ValueError):
+        DrainPolicy(latency_tol=1.0)
+
+
+def test_huge_target_is_identity():
+    """A target no ack ever exceeds must lower bit-exactly to the
+    default policy: ``tight`` never fires, S_SLO_OVER stays 0."""
+    trace = _small()
+    base = simulate(trace, PCSConfig(scheme=Scheme.PB_RF, n_cores=4))
+    slo = simulate(trace, PCSConfig(
+        scheme=Scheme.PB_RF, n_cores=4,
+        policy=PBPolicy(drain=DrainPolicy(latency_target_ns=1e12))))
+    assert slo.slo_violations == 0
+    for f in base.__dataclass_fields__:
+        x, y = getattr(base, f), getattr(slo, f)
+        if isinstance(x, np.ndarray):
+            assert np.array_equal(x, y), f
+        else:
+            assert x == y or (isinstance(x, float) and np.isnan(x)
+                              and np.isnan(y)), (f, x, y)
+
+
+def test_tiny_target_tightens_drains():
+    """An unreachable 1 ns target marks every persist over-SLO, so
+    drain-down runs tight (threshold 1, preset 0) from the first
+    persist — observably more PM write traffic / fewer coalesces than
+    the default lazy threshold on a coalescing-friendly workload."""
+    trace = make_trace("radiosity", n_cores=4, persist_budget=400)
+    base = simulate(trace, PCSConfig(scheme=Scheme.PB_RF, n_cores=4))
+    slo = simulate(trace, PCSConfig(
+        scheme=Scheme.PB_RF, n_cores=4,
+        policy=PBPolicy(drain=DrainPolicy(latency_target_ns=1.0))))
+    assert slo.slo_violations == slo.persists > 0
+    assert base.slo_violations == 0
+    assert (slo.pm_writes, slo.coalesces) != (base.pm_writes,
+                                              base.coalesces), (
+        "tight drain-down changed nothing observable")
+    assert slo.pm_writes >= base.pm_writes
