@@ -1,7 +1,13 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all test-fuzz bench-smoke bench bench-compare calibrate ci
+.PHONY: lint test test-all test-fuzz bench-smoke bench bench-compare calibrate ci
+
+# static invariant analysis (repro.analysis): retrace-hazard, mirror-site,
+# oracle-twin, dtype-packing and sweep-registry passes; writes the
+# findings summary to ANALYSIS.json and fails on any finding
+lint:
+	$(PYTHON) -m repro.analysis --fail-on-findings --json ANALYSIS.json
 
 # fast suite (<1 min): everything except the @slow big-model smokes and
 # exhaustive grids
@@ -36,13 +42,15 @@ bench:
 calibrate:
 	$(PYTHON) -m benchmarks._calibrate
 
-# CI lane: fast tests (including the depth differential's fast chain
-# matrix; the >=500-cell depth-4 matrix runs behind the `slow` marker in
-# `test-all`), then the smoke benchmarks + wall-clock regression diff
+# CI lane: static invariant analysis first (seconds; fails fast on a
+# broken contract), then fast tests (including the depth differential's
+# fast chain matrix; the >=500-cell depth-4 matrix runs behind the
+# `slow` marker in `test-all`), then the smoke benchmarks + wall-clock
+# regression diff
 # against the committed report (benchmarks/compare.py), then the
 # compile-count regression guard (the shared grid / recovery sweep /
 # tenant sweep / QoS sweep / chain depth sweep must each stay exactly
 # ONE XLA program, macro-stepping enabled, with per-sweep macro hit
 # rates recorded — see benchmarks/check_compiles.py)
-ci: test bench-compare
+ci: lint test bench-compare
 	$(PYTHON) -m benchmarks.check_compiles

@@ -1,0 +1,39 @@
+"""Single source of truth for the benchmark sweep telemetry names.
+
+Every one-program sweep records four keys into BENCH_engine.json —
+``<sweep>_wall_s``, ``<sweep>_compiles``, ``<sweep>_cells`` and
+``<sweep>_macro_hit``.  ``check_compiles`` derives its GUARDED /
+MACRO_KEYS tuples from this list, and the ``repro.analysis`` sweeps
+pass cross-checks it against the ``sweep_metrics.update(...)`` sites
+the figure scripts actually emit — adding a sweep without registering
+it here (or retiring one without removing it) fails ``make lint``.
+
+Keep this module a leaf: AST-parsed by the linter, imported by
+check_compiles; no engine imports.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+# sweep base names, one per one-XLA-program benchmark sweep
+SWEEPS: Tuple[str, ...] = (
+    "shared_grid",     # the {workload x scheme} grid (_shared.py)
+    "chain_sweep",     # {scheme x switch-depth x crash} (fig1_switch_depth)
+    "recovery_sweep",  # {workload x scheme x crash-point} (fig_recovery)
+    "tenant_sweep",    # {tenant-count x scheme} (fig_tenants)
+    "qos_sweep",       # mixed {scheme x policy} (fig_qos)
+    "slo_sweep",       # {offered-load x scheme x policy} (fig_slo)
+)
+
+# per-sweep telemetry key suffixes every sweep must emit
+SUFFIXES: Tuple[str, ...] = ("wall_s", "compiles", "cells", "macro_hit")
+
+
+def guarded() -> Tuple[str, ...]:
+    """Keys whose value must be exactly 1 (one XLA program per sweep)."""
+    return tuple(f"{s}_compiles" for s in SWEEPS)
+
+
+def macro_keys() -> Tuple[str, ...]:
+    """Keys holding each sweep's macro-step hit-rate fraction."""
+    return tuple(f"{s}_macro_hit" for s in SWEEPS)

@@ -29,14 +29,15 @@ from __future__ import annotations
 import json
 import sys
 
-GUARDED = ("shared_grid_compiles", "recovery_sweep_compiles",
-           "tenant_sweep_compiles", "qos_sweep_compiles",
-           "slo_sweep_compiles", "chain_sweep_compiles")
+from benchmarks._sweeps import guarded, macro_keys
+
+# both tuples derive from the one sweep-name list in benchmarks._sweeps;
+# repro.analysis cross-checks that list against the keys the figure
+# scripts actually emit
+GUARDED = guarded()
 
 # macro-stepping telemetry: every sweep must record its hit rate
-MACRO_KEYS = ("shared_grid_macro_hit", "recovery_sweep_macro_hit",
-              "tenant_sweep_macro_hit", "qos_sweep_macro_hit",
-              "slo_sweep_macro_hit", "chain_sweep_macro_hit")
+MACRO_KEYS = macro_keys()
 
 
 def check(report: dict) -> list:

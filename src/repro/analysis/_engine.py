@@ -1,0 +1,121 @@
+"""Abstract traces of the real engine cell for the jaxpr-based passes.
+
+One small exemplar cell exercises every traced axis: PB_RF over a
+2-switch chain (deep-hop rows live), 2 tenants with quotas + weighted
+victim, a tenant-scoped drain policy with a latency target, a finite
+crash point, durability tracking and macro-stepping.  Tracing it with
+``jax.make_jaxpr`` is seconds (no XLA compile), so the passes run at
+test speed.
+
+The trace arrays are tiny but cover every op kind — the handler
+dispatch is a ``lax.switch`` over all six handlers, so every handler
+body (and therefore every ``sc`` consumer) is traced regardless of
+which ops the exemplar trace actually issues.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def _example_inputs():
+    from repro.core.engine.state import scalars_from_config
+    from repro.core.params import (AllocPolicy, DrainPolicy, Op, PBPolicy,
+                                   PCSConfig, Scheme, MACRO_KMAX)
+    from repro.core.traces import plan_runs
+
+    cfg = PCSConfig(
+        scheme=Scheme.PB_RF, n_switches=2, pbe_per_hop=(8, 4), n_cores=4,
+        n_tenants=2, crash_at_ns=5.0e4,
+        policy=PBPolicy(
+            drain=DrainPolicy(per_tenant=True, latency_target_ns=450.0),
+            alloc=AllocPolicy(victim="weighted", tenant_quota=(4, 4))))
+    sc = scalars_from_config(cfg, n_tenants_max=2, n_deep_max=1)
+
+    C, L = 4, 16 + MACRO_KMAX
+    kinds = [Op.PERSIST, Op.PM_READ, Op.DRAM_READ, Op.DRAM_WRITE,
+             Op.COMPUTE, Op.PERSIST, Op.PM_READ, Op.BARRIER]
+    ops = np.zeros((C, L), np.int32)
+    addrs = np.zeros((C, L), np.int32)
+    gaps = np.zeros((C, L), np.float32)
+    for c in range(C):
+        for i in range(16):
+            ops[c, i] = int(kinds[i % len(kinds)])
+            addrs[c, i] = (c * 16 + i) % 8
+            gaps[c, i] = 10.0
+    lengths = np.full((C,), 16, np.int32)
+    mlen = plan_runs(ops, addrs, gaps, MACRO_KMAX)
+    statics = dict(max_pbe=8, n_steps=32, pm_banks=2, n_track=4,
+                   n_tenants_max=2, n_deep_max=1, macro=True)
+    # device arrays, as simulate_grid stages them: numpy closures would
+    # reject tracer indices during abstract tracing
+    import jax.numpy as jnp
+    buffers = tuple(jnp.asarray(b) for b in (ops, addrs, gaps, lengths,
+                                             mlen))
+    return buffers, statics, sc
+
+
+@functools.lru_cache(maxsize=2)
+def trace_engine(return_state: bool = False):
+    """``(closed_jaxpr, operand_names)`` of one exemplar engine cell.
+
+    ``operand_names`` aligns positionally with ``jaxpr.invars``:
+    ``"scheme"`` followed by the sorted ``sc`` keys (dict pytrees
+    flatten in sorted-key order).  Cached per flag — the retrace pass
+    wants the results-only program (dead telemetry prunes back to its
+    inputs), the dtype pass wants the final carry too.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.engine.step import scan_cell
+
+    (ops, addrs, gaps, lengths, mlen), statics, sc = _example_inputs()
+
+    def cell(scheme, sc):
+        return scan_cell(ops, addrs, gaps, lengths, scheme, sc,
+                         mlen=mlen, return_state=return_state, **statics)
+
+    with enable_x64():
+        sc_j = {k: jnp.asarray(v, jnp.float64) for k, v in sc.items()}
+        closed = jax.make_jaxpr(cell)(jnp.asarray(2, jnp.int32), sc_j)
+    names = ["scheme"] + sorted(sc_j)
+    if len(names) != len(closed.jaxpr.invars):
+        raise RuntimeError(
+            f"operand-name alignment broke: {len(names)} names vs "
+            f"{len(closed.jaxpr.invars)} invars")
+    return closed, names
+
+
+def scalar_keys() -> List[str]:
+    """Every key ``scalars_from_config`` lowers (the sweepable surface)."""
+    _, _, sc = _example_inputs()
+    return sorted(sc)
+
+
+def final_state_shapes() -> Dict[str, Tuple[str, Tuple[int, ...]]]:
+    """column -> (dtype, shape) of the scan carry AFTER a full cell run
+    (``jax.eval_shape``: abstract, no compile).  Catches a handler that
+    silently widens a packed column just as well as an init-time
+    regression — the carry must round-trip every step."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.engine.step import scan_cell
+
+    (ops, addrs, gaps, lengths, mlen), statics, sc = _example_inputs()
+
+    def final_state(scheme, sc):
+        out = scan_cell(ops, addrs, gaps, lengths, scheme, sc,
+                        mlen=mlen, return_state=True, **statics)
+        return out[-1]
+
+    with enable_x64():
+        sc_j = {k: jnp.asarray(v, jnp.float64) for k, v in sc.items()}
+        st = jax.eval_shape(final_state, jnp.asarray(2, jnp.int32), sc_j)
+    return {k: (str(v.dtype), tuple(v.shape))
+            for k, v in st._asdict().items()}

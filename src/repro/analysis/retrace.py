@@ -1,0 +1,189 @@
+"""Pass 1: retrace-hazard lint over the abstractly traced engine cell.
+
+The engine's one-XLA-program sweep property holds iff every sweepable
+config knob reaches the compiled program as a *traced operand*.  The
+classic regression — "someone turned a traced scalar back into a
+static" — replaces ``sc["x"]`` with a baked Python constant; results
+stay right for the traced value but every distinct config now
+recompiles, and ``check_compiles`` only notices after a full bench run.
+
+This pass catches it in seconds: trace ``scan_cell`` with
+``jax.make_jaxpr``, dead-code-eliminate the jaxpr against all outputs
+(``dce_jaxpr`` recurses through scan/while/cond), and require every
+lowered scalar's input var to survive — an unused invar means the
+program's results provably do not depend on that operand, i.e. the knob
+was baked or dropped.
+
+It also pins the declaration side: every ``PCSConfig`` / ``DrainPolicy``
+/ ``AllocPolicy`` dataclass field must be registered here as sweepable
+(mapping to the ``sc`` keys it lowers to) or explicitly static (with a
+reason), and every registered key must actually be emitted by
+``scalars_from_config`` — so adding a policy field without lowering it,
+or lowering a key without consuming it, both fail ``make lint``.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.common import Finding, find_line, rel
+
+# Sweepable fields: dataclass field -> the sc keys its value feeds.
+# Registering a field here is the "declared sweepable" contract of
+# ISSUE 8 / DESIGN.md — the keys must exist in scalars_from_config's
+# output AND survive DCE of the traced cell.
+SWEEPABLE_FIELDS: Dict[str, Tuple[str, ...]] = {
+    "PCSConfig.crash_at_ns": ("crash_at",),
+    "PCSConfig.n_tenants": ("n_tenants",),
+    "PCSConfig.n_switches": ("n_switches", "ow_cpu_pm", "ow_cpu_sw1",
+                             "ow_sw1_pm"),
+    "PCSConfig.n_pbe": ("n_pbe", "threshold_count", "preset_count",
+                        "tag_ns", "data_ns"),
+    "PCSConfig.pbe_per_hop": ("deep_pbe", "deep_thr", "deep_pre",
+                              "deep_tag", "deep_data"),
+    "PCSConfig.drain_threshold": ("threshold_count", "t_threshold"),
+    "PCSConfig.drain_preset": ("preset_count", "t_preset"),
+    "DrainPolicy.threshold": ("threshold_count", "t_threshold",
+                              "deep_thr"),
+    "DrainPolicy.preset": ("preset_count", "t_preset", "deep_pre"),
+    "DrainPolicy.per_tenant": ("drain_scope", "t_threshold", "t_preset"),
+    "DrainPolicy.low_water_drains": ("low_water",),
+    "DrainPolicy.empty_slack": ("empty_slack",),
+    "DrainPolicy.latency_target_ns": ("lat_target",),
+    "DrainPolicy.latency_tol": ("lat_tol",),
+    "AllocPolicy.victim": ("victim_weighted",),
+    "AllocPolicy.tenant_quota": ("quota", "share", "t_threshold",
+                                 "t_preset"),
+}
+
+# Statically-shaped / composite fields: changing one legitimately
+# recompiles (array shapes) or lowers through child fields.
+STATIC_FIELDS: Dict[str, str] = {
+    "PCSConfig.scheme": "traced separately as the scheme operand",
+    "PCSConfig.n_cores": "array shape (trace row count)",
+    "PCSConfig.pm_banks": "array shape (PM bank axis)",
+    "PCSConfig.policy": "composite; lowers via DrainPolicy/AllocPolicy",
+    "PCSConfig.latency": "composite; lowers via the latency scalar keys",
+}
+
+
+def _dce_unused(closed) -> List[bool]:
+    """Per-invar liveness after whole-program DCE (True = used)."""
+    from jax._src.interpreters import partial_eval as pe
+    jaxpr = closed.jaxpr
+    _, used_inputs = pe.dce_jaxpr(jaxpr, [True] * len(jaxpr.outvars))
+    return list(used_inputs)
+
+
+def check_traced(fn=None, args: Optional[tuple] = None,
+                 names: Optional[Sequence[str]] = None,
+                 anchors: Optional[Dict[str, Tuple[str, int]]] = None,
+                 closed=None) -> List[Finding]:
+    """Core retrace check: every named operand must survive DCE.
+
+    Either pass a pre-traced ``closed`` jaxpr + ``names`` (the real
+    engine path) or ``fn``/``args`` for the fixture corpus, where names
+    default to the sorted keys of a single dict argument.
+    """
+    import jax
+
+    if closed is None:
+        closed = jax.make_jaxpr(fn)(*args)
+        if names is None:
+            flat = []
+            for a in args:
+                if isinstance(a, dict):
+                    flat += sorted(a)
+                else:
+                    flat.append("arg")
+            names = flat
+    names = list(names)
+    if len(names) != len(closed.jaxpr.invars):
+        raise ValueError("operand names misaligned with jaxpr invars")
+    used = _dce_unused(closed)
+    findings = []
+    for name, live in zip(names, used):
+        if live:
+            continue
+        file, line = (anchors or {}).get(name, ("<traced>", 0))
+        findings.append(Finding(
+            file=file, line=line, rule="retrace-baked-static",
+            message=(f"traced operand {name!r} is dead in the step "
+                     "jaxpr: the program's results do not depend on it "
+                     "(a sweepable knob was baked into a Python "
+                     "constant, or its lowering is dead code)"),
+            suggestion=f"consume sc[{name!r}] in the traced step, or "
+                       "drop the lowering"))
+    return findings
+
+
+def _scalar_anchors() -> Dict[str, Tuple[str, int]]:
+    """sc key -> (file, line) of its ``key=`` in scalars_from_config."""
+    from repro.core.engine import state
+    src, start = inspect.getsourcelines(state.scalars_from_config)
+    file = rel(inspect.getsourcefile(state.scalars_from_config))
+    anchors = {}
+    for off, raw in enumerate(src):
+        stripped = raw.strip()
+        key = stripped.split("=", 1)[0].strip()
+        if "=" in stripped and key.isidentifier():
+            anchors.setdefault(key, (file, start + off))
+    return anchors
+
+
+def _field_anchor(cls, field: str) -> Tuple[str, int]:
+    src, start = inspect.getsourcelines(cls)
+    file = rel(inspect.getsourcefile(cls))
+    line = find_line([l.rstrip("\n") for l in src],
+                     rf"^\s*{field}\s*[:=]")
+    return file, start + (line - 1) if line else start
+
+
+def check_engine() -> List[Finding]:
+    """Run the retrace pass against the real engine cell."""
+    import dataclasses
+
+    from repro.analysis._engine import scalar_keys, trace_engine
+    from repro.core import params
+
+    findings: List[Finding] = []
+    anchors = _scalar_anchors()
+    keys = set(scalar_keys())
+
+    # 1. registry <-> lowering agreement
+    for field, targets in SWEEPABLE_FIELDS.items():
+        cls_name, fname = field.split(".")
+        cls = getattr(params, cls_name)
+        for key in targets:
+            if key not in keys:
+                file, line = _field_anchor(cls, fname)
+                findings.append(Finding(
+                    file=file, line=line, rule="retrace-missing-lowering",
+                    message=(f"sweepable field {field} is registered to "
+                             f"lower to sc[{key!r}], but "
+                             "scalars_from_config emits no such key"),
+                    suggestion="lower the field in scalars_from_config "
+                               "or fix the registry entry"))
+
+    # 2. every policy/config dataclass field is registered one way
+    for cls_name in ("PCSConfig", "DrainPolicy", "AllocPolicy"):
+        cls = getattr(params, cls_name)
+        for f in dataclasses.fields(cls):
+            qual = f"{cls_name}.{f.name}"
+            if qual in SWEEPABLE_FIELDS or qual in STATIC_FIELDS:
+                continue
+            file, line = _field_anchor(cls, f.name)
+            findings.append(Finding(
+                file=file, line=line, rule="retrace-unregistered-field",
+                message=(f"{qual} is neither registered as sweepable "
+                         "(SWEEPABLE_FIELDS) nor declared static "
+                         "(STATIC_FIELDS) in repro.analysis.retrace"),
+                suggestion="register the field with the sc keys it "
+                           "lowers to, or declare it static with a "
+                           "reason"))
+
+    # 3. the traced program consumes every lowered operand
+    closed, names = trace_engine(return_state=False)
+    findings += check_traced(closed=closed, names=names, anchors=anchors)
+    return findings

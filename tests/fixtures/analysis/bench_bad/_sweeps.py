@@ -1,0 +1,7 @@
+"""Sweep-registry fixture."""
+
+SWEEPS = (
+    "good_sweep",
+    "ghost_sweep",
+    "partial_sweep",
+)

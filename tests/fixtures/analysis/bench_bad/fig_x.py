@@ -1,0 +1,14 @@
+"""Emits one full sweep, one unregistered key, one partial sweep."""
+
+sweep_metrics = {}
+
+
+def run():
+    sweep_metrics.update(
+        good_sweep_wall_s=1.0,
+        good_sweep_compiles=1,
+        good_sweep_cells=3,
+        good_sweep_macro_hit=0.5,
+        rogue_sweep_compiles=1,
+        partial_sweep_wall_s=2.0,
+    )

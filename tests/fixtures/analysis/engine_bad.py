@@ -1,0 +1,5 @@
+"""Engine side of the twin fixture: consumes only ``alpha``."""
+
+
+def run(pol):
+    return pol.alpha + 1

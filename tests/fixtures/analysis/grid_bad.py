@@ -1,0 +1,11 @@
+"""Donation fixture: missing buffers and an undonated jit wrapper."""
+import functools
+
+import jax
+
+_DONATED = ("ops", "addrs")
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def run(ops, addrs, gaps, mlen, n):
+    return ops

@@ -1,0 +1,8 @@
+"""f32-leak fixture: demotes an f64 product to f32 at line 8."""
+import jax.numpy as jnp
+
+
+def leak(x):
+    # the demotion the dtype pass must flag
+    y = x * 2.0
+    return y.astype(jnp.float32)

@@ -1,0 +1,44 @@
+"""Seeded mirror-pass violations (AST-parsed only, never imported)."""
+import jax.numpy as jnp
+
+
+def site_a(x, y):
+    out = jnp.where(x > 1.0, x - y, 0.0)  # lint: mirror(pair)
+    return out
+
+
+def site_b(p, q):
+    ret = jnp.where(p > 1.0, p + q, 0.0)  # lint: mirror(pair)
+    return ret
+
+
+def site_c(a, b, st):
+    val = st.acc.at[a].add(b)  # lint: mirror(same)
+    return val
+
+
+def site_d(acc_cur, i, j):
+    acc_cur = acc_cur.at[i].add(j)  # lint: mirror(same)
+    return acc_cur
+
+
+def mystery_site(x):
+    y = x + 1  # lint: mirror(mystery)
+    return y
+
+
+def fam_a(acc):
+    return acc + S_ONE + S_TWO
+
+
+def fam_b(acc):
+    # lint: exempt(stats-columns, S_TWO): fixture-only column
+    return acc + S_ONE
+
+
+def fam_c(acc):
+    # lint: exempt(stats-columns, S_TWO)
+    return acc + S_ONE
+
+
+# lint: mirror(orphan)

@@ -1,0 +1,5 @@
+"""Oracle side of the twin fixture: consumes only ``beta``."""
+
+
+def run(pol):
+    return pol.beta + 1
