@@ -13,8 +13,8 @@ import time
 from typing import Dict, Tuple
 
 from repro.core import PCSConfig, Scheme, WORKLOADS, make_trace
-from repro.core.engine import (compile_count, last_macro_hit_rate,
-                               simulate_grid)
+from repro.core.engine import (compile_count, last_macro_abort_reasons,
+                               last_macro_hit_rate, simulate_grid)
 
 # full paper budget by default; BENCH_QUICK=1 runs a reduced grid fast
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
@@ -67,6 +67,7 @@ def _ensure_grid() -> None:
         grid_compiles=compile_count() - c0,
         grid_cells=len(names) * len(SCHEMES),
         grid_macro_hit=round(last_macro_hit_rate(), 4),
+        grid_macro_aborts=last_macro_abort_reasons(),
     )
     for i, n in enumerate(names):
         for j, s in enumerate(SCHEMES):

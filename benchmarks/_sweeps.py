@@ -23,6 +23,7 @@ SWEEPS: Tuple[str, ...] = (
     "tenant_sweep",    # {tenant-count x scheme} (fig_tenants)
     "qos_sweep",       # mixed {scheme x policy} (fig_qos)
     "slo_sweep",       # {offered-load x scheme x policy} (fig_slo)
+    "fabric_sweep",    # {scheme x leaves x placement x bp} (fig_fabric)
 )
 
 # per-sweep telemetry key suffixes every sweep must emit
@@ -37,3 +38,9 @@ def guarded() -> Tuple[str, ...]:
 def macro_keys() -> Tuple[str, ...]:
     """Keys holding each sweep's macro-step hit-rate fraction."""
     return tuple(f"{s}_macro_hit" for s in SWEEPS)
+
+
+def abort_keys() -> Tuple[str, ...]:
+    """Keys holding each sweep's macro abort-reason counter dict
+    (``engine.last_macro_abort_reasons()``: reason -> aborted windows)."""
+    return tuple(f"{s}_macro_aborts" for s in SWEEPS)

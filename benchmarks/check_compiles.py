@@ -29,15 +29,18 @@ from __future__ import annotations
 import json
 import sys
 
-from benchmarks._sweeps import guarded, macro_keys
+from benchmarks._sweeps import abort_keys, guarded, macro_keys
 
-# both tuples derive from the one sweep-name list in benchmarks._sweeps;
+# all tuples derive from the one sweep-name list in benchmarks._sweeps;
 # repro.analysis cross-checks that list against the keys the figure
 # scripts actually emit
 GUARDED = guarded()
 
-# macro-stepping telemetry: every sweep must record its hit rate
+# macro-stepping telemetry: every sweep must record its hit rate and
+# its abort-reason counters (why candidate windows fell back to the
+# scalar path: window / fabric / deep / interleave / guard)
 MACRO_KEYS = macro_keys()
+ABORT_KEYS = abort_keys()
 
 
 def check(report: dict) -> list:
@@ -59,6 +62,16 @@ def check(report: dict) -> list:
         elif not isinstance(v, (int, float)) or not 0.0 <= v <= 1.0:
             problems.append(f"{key} = {v!r}: macro hit rate must be a "
                             "fraction in [0, 1]")
+    for key in ABORT_KEYS:
+        v = report.get(key)
+        if v is None:
+            problems.append(f"{key}: missing from the report (macro "
+                            "abort-reason telemetry was dropped)")
+        elif (not isinstance(v, dict) or not v
+              or any(not isinstance(n, int) or n < 0
+                     for n in v.values())):
+            problems.append(f"{key} = {v!r}: abort counters must be a "
+                            "non-empty {reason: count >= 0} dict")
     return problems
 
 

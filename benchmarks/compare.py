@@ -11,7 +11,9 @@ real perf regression (e.g. a change that breaks the macro-step guards,
 widens the packed dtypes, or defeats the chunked early exit).  Keys
 that cannot be compared (no numeric baseline — e.g. a sweep new in this
 PR — or a non-positive wall time) are reported as loud ``warn:`` lines
-rather than silently dropped.
+rather than silently dropped, and their wall time is discounted from
+the ``total_wall_s`` comparison (a newly added figure grows the total
+legitimately; the per-sweep keys still gate every pre-existing sweep).
 
 Reports are only comparable at the same measurement budget: when the
 budget/bucket/smoke fields differ the comparison is skipped with a
@@ -62,6 +64,13 @@ def compare(fresh: dict, base: dict) -> tuple:
         return ([f"skip: budgets differ ({', '.join(mismatched)}); "
                  "ratios would compare different workloads"], [])
     lines, regressions = [], []
+    # a sweep new in this PR has no baseline to regress against, but its
+    # wall time still lands inside total_wall_s — discount it there so a
+    # legitimately added figure doesn't read as a whole-run regression
+    new_sweep_s = sum(
+        float(fresh[k]) for k in wall_keys(fresh)
+        if k != "total_wall_s"
+        and not isinstance(base.get(k), (int, float)))
     for k in wall_keys(fresh):
         f_v = float(fresh[k])
         b = base.get(k)
@@ -71,6 +80,10 @@ def compare(fresh: dict, base: dict) -> tuple:
                          "this PR)")
             continue
         b_v = float(b)
+        note = ""
+        if k == "total_wall_s" and new_sweep_s > 0:
+            f_v = max(f_v - new_sweep_s, 0.0)
+            note = f" (excl. {new_sweep_s:.1f}s of new sweeps)"
         if f_v <= 0 or b_v <= 0:
             lines.append(f"warn: {k} skipped — non-positive wall time "
                          f"(fresh={f_v}, base={b_v}) cannot be ratioed")
@@ -81,7 +94,7 @@ def compare(fresh: dict, base: dict) -> tuple:
             verdict = f"REGRESSION (> {THRESHOLD}x)"
             regressions.append(k)
         lines.append(f"{k}: {b_v:.3f}s -> {f_v:.3f}s "
-                     f"({speedup:.2f}x speedup) {verdict}")
+                     f"({speedup:.2f}x speedup) {verdict}{note}")
     return lines, regressions
 
 

@@ -29,7 +29,8 @@ import time
 import numpy as np
 
 from repro.core import Op, PCSConfig, Scheme, Trace, simulate_grid
-from repro.core.engine import compile_count, last_macro_hit_rate
+from repro.core.engine import (compile_count, last_macro_abort_reasons,
+                               last_macro_hit_rate)
 
 from benchmarks import _shared
 from benchmarks._shared import emit
@@ -99,6 +100,7 @@ def run(depths=None) -> list:
         chain_sweep_compiles=compile_count() - c0,
         chain_sweep_cells=len(configs),
         chain_sweep_macro_hit=round(last_macro_hit_rate(), 4),
+        chain_sweep_macro_aborts=last_macro_abort_reasons(),
     )
     base = next(r.persist_lat_ns for (k, n, c), r in zip(labels, cells)
                 if k == "nopb" and n == min(depths) and not c)

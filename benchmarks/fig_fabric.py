@@ -1,0 +1,145 @@
+"""Fabric figure: fan-out topologies, tenant placement, backpressure.
+
+Tree-structured switch pools (FabricTopology): N leaf switches — each
+the hop-1 ack point for its own tenants — fan into one shared spine in
+front of the PM banks.  The sweep holds the *total* leaf PBE capacity
+constant and varies how it is partitioned (1, 2, 4, 8 leaves), how the
+tenants are placed onto the leaves (packed blocks vs round-robin
+spread) and whether the spine's backpressure watermark defers leaf
+drain-downs (``bp_high``), plus a mid-run-crash replica of every cell
+for the per-leaf recovered-entry attribution (``SimResult.leaf_recovery``).
+
+The whole {scheme x leaves x placement x backpressure x crash} matrix
+is ONE mixed-topology ``simulate_grid`` call: ``n_leaves``, the
+placement map, the per-leaf slot partition, ``bp_high`` and the crash
+instant are all traced operands, so the figure costs a single XLA
+compilation (``fabric_sweep_compiles`` is guarded by
+``benchmarks/check_compiles.py``).  The 1-leaf column doubles as the
+chain anchor: it is bit-identical to the linear 2-hop chain
+(tests/test_crash_differential.py pins this).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (FabricTopology, Op, PCSConfig, Scheme, Trace,
+                        leaf_placement, simulate_grid)
+from repro.core.engine import (compile_count, last_macro_abort_reasons,
+                               last_macro_hit_rate)
+
+from benchmarks import _shared
+from benchmarks._shared import emit
+
+N_TENANTS = 8                      # one core per tenant
+LEAVES = (1, 2, 4, 8)
+TOTAL_LEAF_PBE = 16                # partitioned across the leaves
+SPINE_PBE = 8
+BP_HIGH = float(SPINE_PBE // 2)    # finite watermark column
+PB_SCHEMES = (("pb", Scheme.PB), ("pb_rf", Scheme.PB_RF))
+PLACEMENTS = ("packed", "spread")
+
+# telemetry of the one-program fabric sweep for BENCH_engine.json
+sweep_metrics: dict = {}
+
+
+def _probe_trace(n_ops: int, gap: float) -> Trace:
+    """Persist-heavy per-tenant streams over disjoint address blocks
+    (tenant isolation — the regime a leaf partition is built for), hot
+    enough that drain-downs and the spine fan-in actually engage."""
+    C, L = N_TENANTS, 2 * n_ops
+    ops = np.zeros((C, L), np.int32)
+    addrs = np.zeros((C, L), np.int32)
+    for c in range(C):
+        base = c << 16                     # disjoint per-tenant block
+        for i in range(n_ops):
+            ops[c, 2 * i] = int(Op.PERSIST)
+            addrs[c, 2 * i] = base + (i % 64)   # hot set: coalescing
+            ops[c, 2 * i + 1] = int(Op.PM_READ)
+            addrs[c, 2 * i + 1] = base + (1 << 10) + i
+    return Trace(ops=ops, addrs=addrs,
+                 gaps=np.full((C, L), gap, np.float32),
+                 lengths=np.full((C,), L, np.int32), name="fab_probe")
+
+
+def _fabric(n_leaves: int, mode: str,
+            bp_high=None) -> FabricTopology:
+    per = TOTAL_LEAF_PBE // n_leaves
+    return FabricTopology(n_leaves, (per,) * n_leaves, SPINE_PBE,
+                          leaf_placement(N_TENANTS, n_leaves, mode),
+                          bp_high=bp_high)
+
+
+def plan():
+    """(label, config) rows: {scheme x leaf-count x placement x
+    backpressure}, constant total leaf capacity.  At 1 leaf the spread
+    placement and the watermark are degenerate (identical cell /
+    rejected by validation), so only the packed/no-backpressure column
+    exists there — the chain anchor."""
+    labels, configs = [], []
+    for key, scheme in PB_SCHEMES:
+        for nl in LEAVES:
+            for mode in PLACEMENTS:
+                if nl == 1 and mode == "spread":
+                    continue
+                for bp in ((None, BP_HIGH) if nl >= 2 else (None,)):
+                    labels.append((key, nl, mode, bp, False))
+                    configs.append(PCSConfig(
+                        scheme=scheme, n_cores=N_TENANTS,
+                        n_tenants=N_TENANTS,
+                        fabric=_fabric(nl, mode, bp)))
+    return labels, configs
+
+
+def run() -> list:
+    n_ops = 150 if _shared.SMOKE else 1500
+    gap = 500.0
+    tr = _probe_trace(n_ops=n_ops, gap=gap)
+    labels, configs = plan()
+    # crashed replicas: power loss mid-run (half the nominal op span),
+    # a traced scalar — the replicas ride in the same program
+    crash_at = 0.5 * (2 * n_ops) * gap
+    for lab, cfg in list(zip(labels, configs)):
+        labels.append(lab[:-1] + (True,))
+        configs.append(cfg.with_crash(crash_at))
+    c0, t0 = compile_count(), time.time()
+    cells = simulate_grid([tr], configs, bucket=_shared.bucket())[0]
+    sweep_metrics.update(
+        fabric_sweep_wall_s=round(time.time() - t0, 3),
+        fabric_sweep_compiles=compile_count() - c0,
+        fabric_sweep_cells=len(configs),
+        fabric_sweep_macro_hit=round(last_macro_hit_rate(), 4),
+        fabric_sweep_macro_aborts=last_macro_abort_reasons(),
+    )
+    rows = []
+    for (key, nl, mode, bp, crashed), r in zip(labels, cells):
+        tag = f"{key}_l{nl}_{mode}" + ("_bp" if bp is not None else "")
+        if not crashed:
+            rows.append((f"fab_{tag}", round(r.persist_lat_ns, 1),
+                         f"p99={r.persist_lat_pct(0.99):.0f}ns"))
+            rows.append((f"fab_runtime_{tag}", round(r.runtime_ns, 0),
+                         "ns"))
+        elif r.leaf_recovery is not None:
+            # per-leaf recovered-entry attribution: which leaf held the
+            # surviving entries the crash left behind (placement skew)
+            for i, n in enumerate(r.leaf_recovery):
+                rows.append((f"fab_recov_{tag}_leaf{i}", int(n),
+                             "surviving_pbes"))
+            rows.append((f"fab_recov_{tag}_spine",
+                         r.hop_results()[1]["recovered"],
+                         "surviving_pbes"))
+        else:
+            # 1-leaf chain anchor: per-hop attribution only
+            for h in r.hop_results():
+                rows.append((f"fab_recov_{tag}_h{h['hop']}",
+                             h["recovered"], "surviving_pbes"))
+    return rows
+
+
+def main() -> None:
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,8 @@ import time
 
 from repro.core import (AllocPolicy, DrainPolicy, PBPolicy, PCSConfig,
                         Scheme, make_mixed_tenant_trace, simulate_grid)
-from repro.core.engine import compile_count, last_macro_hit_rate
+from repro.core.engine import (compile_count, last_macro_abort_reasons,
+                               last_macro_hit_rate)
 from repro.core.engine.state import S_PBCQ_SUM, S_PERSIST_CNT
 
 from benchmarks import _shared
@@ -81,6 +82,7 @@ def run() -> list:
         qos_sweep_compiles=compile_count() - c0,
         qos_sweep_cells=len(traces) * len(configs),
         qos_sweep_macro_hit=round(last_macro_hit_rate(), 4),
+        qos_sweep_macro_aborts=last_macro_abort_reasons(),
     )
     rows = []
     for (mkey, _, _), row in zip(MIXES, cells):

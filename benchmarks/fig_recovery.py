@@ -27,7 +27,8 @@ import math
 import time
 
 from repro.core import PCSConfig, Scheme, make_tenant_trace, simulate_grid
-from repro.core.engine import compile_count, last_macro_hit_rate, simulate_cells
+from repro.core.engine import (compile_count, last_macro_abort_reasons,
+                               last_macro_hit_rate, simulate_cells)
 
 from benchmarks import _shared
 from benchmarks._shared import emit, trace
@@ -107,6 +108,7 @@ def run() -> list:
         recovery_sweep_compiles=compile_count() - c0,
         recovery_sweep_cells=len(configs),
         recovery_sweep_macro_hit=round(last_macro_hit_rate(), 4),
+        recovery_sweep_macro_aborts=last_macro_abort_reasons(),
     )
     rows = []
     for (anchor, key, f), r in zip(keys, cells):

@@ -31,7 +31,8 @@ import time
 from repro.core import (BurstyArrivals, DrainPolicy, PBPolicy, PCSConfig,
                         PoissonArrivals, Scheme, make_offered_load_trace,
                         simulate_grid)
-from repro.core.engine import compile_count, last_macro_hit_rate
+from repro.core.engine import (compile_count, last_macro_abort_reasons,
+                               last_macro_hit_rate)
 
 from benchmarks import _shared
 
@@ -86,6 +87,7 @@ def run() -> list:
         slo_sweep_compiles=compile_count() - c0,
         slo_sweep_cells=len(traces) * len(configs),
         slo_sweep_macro_hit=round(last_macro_hit_rate(), 4),
+        slo_sweep_macro_aborts=last_macro_abort_reasons(),
     )
     rows = []
     p99_series = {ckey: [] for ckey, _, _ in CONFIGS}

@@ -28,8 +28,8 @@ import math
 import time
 
 from repro.core import PCSConfig, Scheme, make_tenant_trace
-from repro.core.engine import (compile_count, last_macro_hit_rate,
-                               simulate_cells)
+from repro.core.engine import (compile_count, last_macro_abort_reasons,
+                               last_macro_hit_rate, simulate_cells)
 from repro.core.engine.state import S_PBCQ_SUM, S_PERSIST_CNT
 
 from benchmarks import _shared
@@ -90,6 +90,7 @@ def run() -> list:
         tenant_sweep_compiles=compile_count() - c0,
         tenant_sweep_cells=len(configs),
         tenant_sweep_macro_hit=round(last_macro_hit_rate(), 4),
+        tenant_sweep_macro_aborts=last_macro_abort_reasons(),
     )
     rows = []
     for (key, t_cfg, hot), r in zip(keys, cells):

@@ -35,12 +35,13 @@ def main() -> None:
     # imported late so smoke mode is set before any trace is built
     from benchmarks import (ckpt_tier_bench, fig1_switch_depth, fig5_speedup,
                             fig6_latency, fig7_rf_rates, fig8_pbe_sweep,
-                            fig_qos, fig_recovery, fig_slo, fig_tenants,
-                            kernel_bench)
+                            fig_fabric, fig_qos, fig_recovery, fig_slo,
+                            fig_tenants, kernel_bench)
     from repro.core.engine import compile_count
 
     figures = (fig1_switch_depth, fig5_speedup, fig6_latency, fig7_rf_rates,
-               fig8_pbe_sweep, fig_recovery, fig_tenants, fig_qos, fig_slo)
+               fig8_pbe_sweep, fig_recovery, fig_tenants, fig_qos, fig_slo,
+               fig_fabric)
     extras = () if args.smoke else (ckpt_tier_bench, kernel_bench)
 
     rows, timings = [], {}
@@ -99,6 +100,8 @@ def main() -> None:
         **fig_qos.sweep_metrics,
         # telemetry of the {offered-load x scheme x policy} SLO sweep
         **fig_slo.sweep_metrics,
+        # telemetry of the {scheme x leaves x placement x bp} fabric sweep
+        **fig_fabric.sweep_metrics,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

@@ -1,9 +1,10 @@
 """Abstract traces of the real engine cell for the jaxpr-based passes.
 
 One small exemplar cell exercises every traced axis: PB_RF over a
-2-switch chain (deep-hop rows live), 2 tenants with quotas + weighted
-victim, a tenant-scoped drain policy with a latency target, a finite
-crash point, durability tracking and macro-stepping.  Tracing it with
+2-leaf fan-out fabric (deep-hop rows live for the spine, per-leaf PBC
+column live, finite backpressure watermark), 2 tenants with quotas +
+weighted victim, a tenant-scoped drain policy with a latency target, a
+finite crash point, durability tracking and macro-stepping.  Tracing it with
 ``jax.make_jaxpr`` is seconds (no XLA compile), so the passes run at
 test speed.
 
@@ -22,17 +23,24 @@ import numpy as np
 
 def _example_inputs():
     from repro.core.engine.state import scalars_from_config
-    from repro.core.params import (AllocPolicy, DrainPolicy, Op, PBPolicy,
-                                   PCSConfig, Scheme, MACRO_KMAX)
+    from repro.core.params import (AllocPolicy, DrainPolicy, FabricTopology,
+                                   Op, PBPolicy, PCSConfig, Scheme,
+                                   MACRO_KMAX)
     from repro.core.traces import plan_runs
 
+    # the 2-leaf fabric (finite backpressure watermark) keeps the fabric
+    # operands (n_leaves/leaf_of_t/leaf_base/bp_high) live under DCE and
+    # derives the same (8, 4) hop capacities as the old explicit chain
     cfg = PCSConfig(
-        scheme=Scheme.PB_RF, n_switches=2, pbe_per_hop=(8, 4), n_cores=4,
+        scheme=Scheme.PB_RF, n_cores=4,
         n_tenants=2, crash_at_ns=5.0e4,
+        fabric=FabricTopology(n_leaves=2, leaf_pbe=(4, 4), spine_pbe=4,
+                              placement=(0, 1), bp_high=3.0),
         policy=PBPolicy(
             drain=DrainPolicy(per_tenant=True, latency_target_ns=450.0),
             alloc=AllocPolicy(victim="weighted", tenant_quota=(4, 4))))
-    sc = scalars_from_config(cfg, n_tenants_max=2, n_deep_max=1)
+    sc = scalars_from_config(cfg, n_tenants_max=2, n_deep_max=1,
+                             n_leaves_max=2)
 
     C, L = 4, 16 + MACRO_KMAX
     kinds = [Op.PERSIST, Op.PM_READ, Op.DRAM_READ, Op.DRAM_WRITE,
@@ -48,7 +56,8 @@ def _example_inputs():
     lengths = np.full((C,), 16, np.int32)
     mlen = plan_runs(ops, addrs, gaps, MACRO_KMAX)
     statics = dict(max_pbe=8, n_steps=32, pm_banks=2, n_track=4,
-                   n_tenants_max=2, n_deep_max=1, macro=True)
+                   n_tenants_max=2, n_deep_max=1, n_leaves_max=2,
+                   macro=True)
     # device arrays, as simulate_grid stages them: numpy closures would
     # reject tracer indices during abstract tracing
     import jax.numpy as jnp

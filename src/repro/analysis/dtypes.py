@@ -47,6 +47,7 @@ EXPECTED_DTYPES: Dict[str, str] = {
     "dtag": "int32", "dstate": "int8", "dlru": "float64",
     "ddd": "float64", "dver": "int32", "downer": "int8",
     "dwt": "float64", "hpbc": "float64", "hop_stats": "float64",
+    "lpbc": "float64",
 }
 
 REQUIRED_DONATED = ("ops", "addrs", "gaps", "mlen")

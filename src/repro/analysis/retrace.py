@@ -55,6 +55,10 @@ SWEEPABLE_FIELDS: Dict[str, Tuple[str, ...]] = {
     "AllocPolicy.victim": ("victim_weighted",),
     "AllocPolicy.tenant_quota": ("quota", "share", "t_threshold",
                                  "t_preset"),
+    # fan-out fabric descriptor: lowers to the leaf-partition operands
+    # (engine.fabric) plus the spine backpressure watermark; a fabric
+    # also forces pbe_per_hop, so the deep_* keys co-vary via that field
+    "PCSConfig.fabric": ("n_leaves", "leaf_of_t", "leaf_base", "bp_high"),
 }
 
 # Statically-shaped / composite fields: changing one legitimately

@@ -10,26 +10,27 @@ Coupled layers (DESIGN.md §2):
 """
 from repro.core.engine import (SimResult, simulate, simulate_grid,
                                simulate_sweep)
-from repro.core.params import (AllocPolicy, DrainPolicy, LatencyProfile,
-                               Op, PBEState, PBPolicy, PCSConfig, Scheme)
+from repro.core.params import (AllocPolicy, DrainPolicy, FabricTopology,
+                               LatencyProfile, Op, PBEState, PBPolicy,
+                               PCSConfig, Scheme)
 from repro.core.semantics import (Event, EventKind, PersistentBuffer,
                                   PersistentMemory)
 from repro.core.traces import (BurstyArrivals, DiurnalArrivals,
                                PoissonArrivals, Trace, WORKLOADS,
                                apply_arrivals, compose_tenants,
-                               fuzz_crash_ns, fuzz_trace,
+                               fuzz_crash_ns, fuzz_trace, leaf_placement,
                                make_mixed_tenant_trace,
                                make_offered_load_trace, make_tenant_trace,
                                make_trace, tenant_ids)
 
 __all__ = [
-    "AllocPolicy", "DrainPolicy", "LatencyProfile", "Op", "PBEState",
-    "PBPolicy", "PCSConfig", "Scheme",
+    "AllocPolicy", "DrainPolicy", "FabricTopology", "LatencyProfile",
+    "Op", "PBEState", "PBPolicy", "PCSConfig", "Scheme",
     "Event", "EventKind", "PersistentBuffer", "PersistentMemory",
     "SimResult", "simulate", "simulate_grid", "simulate_sweep",
     "BurstyArrivals", "DiurnalArrivals", "PoissonArrivals",
     "Trace", "WORKLOADS", "apply_arrivals", "compose_tenants",
-    "fuzz_crash_ns", "fuzz_trace", "make_mixed_tenant_trace",
-    "make_offered_load_trace", "make_tenant_trace", "make_trace",
-    "tenant_ids",
+    "fuzz_crash_ns", "fuzz_trace", "leaf_placement",
+    "make_mixed_tenant_trace", "make_offered_load_trace",
+    "make_tenant_trace", "make_trace", "tenant_ids",
 ]

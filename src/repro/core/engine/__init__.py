@@ -12,15 +12,19 @@ pieces:
   * ``step``     — clock-merge step driver + the scan (compile counter)
   * ``macro``    — guarded macro-step mini-interpreter (homogeneous-run
                    speculation; bit-exact commit-or-abort)
+  * ``fabric``   — fan-out fabric helpers (leaf partition of the hop-1
+                   slot axis, spine backpressure signal)
   * ``grid``     — ``simulate_grid`` / ``simulate_cells`` batched
                    front-ends and the ``simulate`` / ``simulate_sweep``
                    compat wrappers
 """
-from repro.core.engine.grid import (last_macro_hit_rate,  # noqa: F401
+from repro.core.engine.grid import (last_macro_abort_reasons,  # noqa: F401
+                                    last_macro_hit_rate,
                                     simulate, simulate_cells,
                                     simulate_grid, simulate_sweep)
 from repro.core.engine.state import SimResult  # noqa: F401
 from repro.core.engine.step import compile_count  # noqa: F401
 
 __all__ = ["SimResult", "simulate", "simulate_cells", "simulate_grid",
-           "simulate_sweep", "compile_count", "last_macro_hit_rate"]
+           "simulate_sweep", "compile_count", "last_macro_hit_rate",
+           "last_macro_abort_reasons"]

@@ -180,10 +180,24 @@ def _place(sc, j, scheme, rows, hpbc_j, batch: Batch, hop_stats):
                        dtype=v.dtype)
 
     al = jnp.any(amat & gate[:, None], axis=0)
+    co_upd = jnp.any(co & gate[:, None], axis=0)
     tag1 = jnp.where(al, pick(batch.addr, 0), rows["dtag"][j])
     state1 = jnp.where(al, DIRTY, state0)
-    ver1 = jnp.where(upd, pick(batch.ver, 0), rows["dver"][j])
-    owner1 = jnp.where(upd, pick(batch.owner, 0), rows["downer"][j])
+    # Fan-in version ordering: with several leaves feeding this hop,
+    # drains for one line can arrive out of version order (leaf A's v5
+    # lands before leaf B's v3) — a coalesce keeps the *newest* of the
+    # arriving and resident versions, and the owner follows whichever
+    # version wins.  On a linear chain the per-hop per-line version
+    # stream is monotone, so max(arriving, resident) == arriving and
+    # this is bit-identical to the pre-fabric overwrite.
+    ver_in = pick(batch.ver, 0)
+    ver1 = jnp.where(al, ver_in,
+                     jnp.where(co_upd,
+                               jnp.maximum(ver_in, rows["dver"][j]),
+                               rows["dver"][j]))
+    keep_owner = co_upd & (rows["dver"][j] > ver_in)
+    owner1 = jnp.where(upd & ~keep_owner, pick(batch.owner, 0),
+                       rows["downer"][j])
     t_new = pick(commit, 0.0)
     lru1 = jnp.where(upd, t_new, rows["dlru"][j])
     wt1 = jnp.where(upd, t_new, rows["dwt"][j])

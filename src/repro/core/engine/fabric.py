@@ -1,0 +1,84 @@
+"""Fan-out fabric layer: leaf switches sharing one spine.
+
+A :class:`~repro.core.params.FabricTopology` lowers onto the existing
+chain machinery (``engine.chain``) rather than adding a second PB
+implementation: the leaves *partition the hop-1 slot axis* (leaf ``i``
+owns the contiguous slot window starting at ``sc["leaf_base"][i]``),
+and the spine is simply deep-hop row 0 — its occupancy-serialized
+``hpbc`` FIFO is exactly the fan-in contention point, because drains
+from every leaf serialize through it.
+
+Everything here is a pure mask/index helper over the traced operands
+``n_leaves`` / ``leaf_of_t`` / ``leaf_base`` / ``bp_high``
+(``state.scalars_from_config``), so a mixed {chain x fabric x
+placement} grid stays ONE XLA program:
+
+* ``slot_leaf`` maps each hop-1 slot to its owning leaf from the traced
+  base vector (non-fabric configs lower ``leaf_base = [0, INF, ...]``,
+  so every slot maps to leaf 0).
+* ``leaf_mask`` scopes hop-1 lookup/alloc/victim/drain to the issuing
+  tenant's leaf window; the ``n_leaves < 2`` bypass restores the global
+  hop-1 behaviour bit-exactly for chain cells sharing the grid.
+* ``spine_live`` is the spine PB's Dirty occupancy — the backpressure
+  signal ``params.spine_defer`` compares against ``bp_high``.
+
+The per-leaf PBC clocks live in ``MachineState.lpbc`` (shape ``(NL,)``
+with NL = grid-wide ``n_leaves_max`` when > 1, else 0): each leaf is a
+physically separate switch with its own PBC front, so their service
+clocks must not serialize against each other.  ``NL == 0`` skips every
+fabric branch at trace time — chain-only grids stay byte-identical to
+the pre-fabric engine (the same trick the deep-hop axis plays with
+``D == 0``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine.state import DIRTY
+
+
+def has_fabric(st) -> bool:
+    """Python-static: does this *grid* carry the fabric axis at all?"""
+    return st.lpbc.shape[0] > 0
+
+
+def leaf_of_tenant(sc, tenant):
+    """Traced leaf id of the issuing tenant (0 for non-fabric configs)."""
+    return sc["leaf_of_t"][tenant].astype(jnp.int32)
+
+
+def slot_leaf(sc, slot_ids):
+    """Owning leaf of each hop-1 slot, from the traced base vector.
+
+    ``leaf_base`` is cumulative capacity offsets padded with INF past
+    the config's leaf count, so the count of bases at-or-below a slot
+    id minus one is its leaf — and every slot of a non-fabric config
+    (bases ``[0, INF, ...]``) lands on leaf 0.
+    """
+    nl = sc["leaf_base"].shape[0]
+    below = slot_ids[:, None] >= sc["leaf_base"][None, :]
+    lf = jnp.sum(below, axis=1).astype(jnp.int32) - 1
+    return jnp.clip(lf, 0, nl - 1)
+
+
+def leaf_mask(sc, sl, my_leaf):
+    """Hop-1 slot mask scoping a tenant's PB operations to its leaf.
+
+    ``sl`` is :func:`slot_leaf`'s output.  The ``n_leaves < 2`` bypass
+    keeps chain cells (and 1-leaf fabrics) on the *global* hop-1
+    behaviour bit-exactly inside a mixed grid — and keeps the traced
+    ``n_leaves`` operand live so the retrace pass can see it.
+    """
+    return (sl == my_leaf) | (sc["n_leaves"] < 2.0)
+
+
+def spine_live(sc, dstate_row, slot_ids):
+    """Spine PB Dirty occupancy (entries) — the backpressure signal.
+
+    Counts live Dirty entries inside the spine's real capacity
+    (``deep_pbe[0]``; slots past it are structural padding).  Drain
+    (in-flight to PM) entries have already left the spine's accept
+    queue, so they do not push back on the leaves.
+    """
+    live = (slot_ids < sc["deep_pbe"][0]) & (dstate_row == DIRTY)
+    return jnp.sum(live.astype(jnp.float64))

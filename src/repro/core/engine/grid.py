@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.core.engine.macro import MACRO_ABORT_REASONS
 from repro.core.engine.state import (SimResult, result_from_stats,
                                      scalars_from_config)
 from repro.core.engine.step import scan_cell
@@ -43,8 +44,11 @@ from repro.core.traces import Trace, plan_runs
 _BUCKET = 16384
 
 # telemetry of the most recent grid/cells call: macro-executed trace
-# slots vs total trace slots (the benchmarks' macro_hit_rate source)
-_LAST_MACRO = {"macro_ops": 0, "total_ops": 0}
+# slots vs total trace slots (the benchmarks' macro_hit_rate source),
+# plus the per-reason counts of live macro windows that failed to
+# commit (MACRO_ABORT_REASONS order, summed over all cells)
+_LAST_MACRO = {"macro_ops": 0, "total_ops": 0,
+               "abort_reasons": [0] * len(MACRO_ABORT_REASONS)}
 
 
 def last_macro_hit_rate() -> float:
@@ -52,6 +56,15 @@ def last_macro_hit_rate() -> float:
     macro-steps (0.0 when macro was disabled or nothing ran)."""
     total = _LAST_MACRO["total_ops"]
     return (_LAST_MACRO["macro_ops"] / total) if total else 0.0
+
+
+def last_macro_abort_reasons() -> dict:
+    """Per-reason counts of live macro candidates the latest simulate_*
+    call failed to commit, keyed by ``MACRO_ABORT_REASONS`` name (all
+    zero when macro was disabled or nothing ran).  Emitted next to
+    ``*_macro_hit`` in BENCH_engine.json so a hit-rate regression can be
+    attributed to a guard instead of bisected blind."""
+    return dict(zip(MACRO_ABORT_REASONS, _LAST_MACRO["abort_reasons"]))
 
 
 def _pad_up(n: int, b: int = _BUCKET) -> int:
@@ -102,17 +115,23 @@ def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None,
     # lowers to the chain-free program (n_deep == 0)
     n_deep = max((len(c.hop_pbes) - 1 for c in configs), default=0)
     n_deep = max(n_deep, 0)
+    # the fabric leaf axis is a static shape too: 1 (no fabric cell in
+    # the grid) keeps the per-leaf PBC column empty and the whole fabric
+    # layer out of the traced program
+    n_leaves = max((c.fabric.n_leaves if c.fabric is not None else 1
+                    for c in configs), default=1)
     # policy lowering pads its per-tenant vectors to the grid-wide
     # n_tenants_max, so mixed tenant counts / policies stack into one
     # (K,) or (K, T) array per scalar and share the program
-    rows = [scalars_from_config(c, n_tenants_max, n_deep) for c in configs]
+    rows = [scalars_from_config(c, n_tenants_max, n_deep, n_leaves)
+            for c in configs]
     sc = {k: np.asarray([r[k] for r in rows], np.float64) for k in rows[0]}
     schemes = np.asarray([int(c.scheme) for c in configs], np.int32)
-    return sc, schemes, max_pbe, banks.pop(), n_deep
+    return sc, schemes, max_pbe, banks.pop(), n_deep, n_leaves
 
 
 _STATICS = ("max_pbe", "n_steps", "pm_banks", "n_track", "n_tenants_max",
-            "n_deep_max", "macro")
+            "n_deep_max", "n_leaves_max", "macro")
 _DONATED = ("ops", "addrs", "gaps", "mlen")
 
 
@@ -120,23 +139,25 @@ _DONATED = ("ops", "addrs", "gaps", "mlen")
                    donate_argnames=_DONATED)
 def _run_cell(ops, addrs, gaps, lengths, mlen, scheme, sc, *,
               max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
-              n_deep_max, macro):
+              n_deep_max, n_leaves_max, macro):
     # single-cell program: no batch axes, so `lax.switch` lowers to real
     # branches instead of vmap's execute-all-and-select
     return scan_cell(ops, addrs, gaps, lengths, scheme, sc,
                      max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
                      n_track=n_track, n_tenants_max=n_tenants_max,
-                     n_deep_max=n_deep_max, mlen=mlen, macro=macro)
+                     n_deep_max=n_deep_max, n_leaves_max=n_leaves_max,
+                     mlen=mlen, macro=macro)
 
 
 def _cell_fn(max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
-             n_deep_max, macro):
+             n_deep_max, n_leaves_max, macro):
     def cell(ops, addrs, gaps, lengths, mlen, scheme, sc):
         return scan_cell(ops, addrs, gaps, lengths, scheme, sc,
                          max_pbe=max_pbe, n_steps=n_steps,
                          pm_banks=pm_banks, n_track=n_track,
                          n_tenants_max=n_tenants_max,
-                         n_deep_max=n_deep_max, mlen=mlen, macro=macro)
+                         n_deep_max=n_deep_max, n_leaves_max=n_leaves_max,
+                         mlen=mlen, macro=macro)
     return cell
 
 
@@ -144,9 +165,9 @@ def _cell_fn(max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
                    donate_argnames=_DONATED)
 def _run_grid(ops, addrs, gaps, lengths, mlen, schemes, sc, *,
               max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
-              n_deep_max, macro):
+              n_deep_max, n_leaves_max, macro):
     cell = _cell_fn(max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
-                    n_deep_max, macro)
+                    n_deep_max, n_leaves_max, macro)
     over_cfg = jax.vmap(cell, in_axes=(None, None, None, None, None, 0, 0))
     over_tr = jax.vmap(over_cfg, in_axes=(0, 0, 0, 0, 0, None, None))
     return over_tr(ops, addrs, gaps, lengths, mlen, schemes, sc)
@@ -156,21 +177,26 @@ def _run_grid(ops, addrs, gaps, lengths, mlen, schemes, sc, *,
                    donate_argnames=_DONATED)
 def _run_cells(ops, addrs, gaps, lengths, mlen, schemes, sc, *,
                max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
-               n_deep_max, macro):
+               n_deep_max, n_leaves_max, macro):
     # flat pairing: one shared batch axis over traces AND configs
     cell = _cell_fn(max_pbe, n_steps, pm_banks, n_track, n_tenants_max,
-                    n_deep_max, macro)
+                    n_deep_max, n_leaves_max, macro)
     return jax.vmap(cell)(ops, addrs, gaps, lengths, mlen, schemes, sc)
 
 
 def _results_from(out, traces, configs, track_addrs, pairs: bool):
     (runtimes, stats, durable_ver, n_recov, recov_ns, recov_t,
-     hop_stats, recov_h, mops) = out
+     hop_stats, recov_h, recov_l, mops, maborts) = out
     _LAST_MACRO["macro_ops"] = int(np.sum(mops))
     _LAST_MACRO["total_ops"] = int(sum(t.total_ops for t in traces)
                                    * (1 if pairs else len(configs)))
+    _LAST_MACRO["abort_reasons"] = [
+        int(x) for x in np.sum(
+            np.asarray(maborts).reshape(-1, len(MACRO_ABORT_REASONS)),
+            axis=0)]
 
     def cell(i, j, k):
+        fab = configs[j].fabric
         return result_from_stats(
             float(runtimes[k]), stats[k],
             crash_at_ns=configs[j].crash_at_ns,
@@ -182,7 +208,9 @@ def _results_from(out, traces, configs, track_addrs, pairs: bool):
             tenant_recovery=recov_t[k],
             n_hops=len(configs[j].hop_pbes),
             hop_stats=hop_stats[k],
-            hop_recovery=recov_h[k])
+            hop_recovery=recov_h[k],
+            n_leaves=fab.n_leaves if fab is not None else 1,
+            leaf_recovery=recov_l[k])
     if pairs:
         return [cell(k, k, (k,)) for k in range(len(traces))]
     return [[cell(i, j, (i, j)) for j in range(len(configs))]
@@ -217,7 +245,7 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
     # static per-tenant stats row count; every config's rows beyond its
     # own n_tenants stay zero, so mixed tenant counts share one program
     n_tenants_max = max(c.n_tenants for c in configs)
-    sc_np, schemes, max_pbe, pm_banks, n_deep = _stack_configs(
+    sc_np, schemes, max_pbe, pm_banks, n_deep, n_leaves = _stack_configs(
         configs, max_pbe, n_tenants_max)
     single = len(traces) == 1 and len(configs) == 1
     with enable_x64(), warnings.catch_warnings():
@@ -235,7 +263,7 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 jnp.asarray(mlen[0]), jnp.asarray(schemes[0]), sc,
                 max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
                 n_track=track_addrs, n_tenants_max=n_tenants_max,
-                n_deep_max=n_deep, macro=macro)
+                n_deep_max=n_deep, n_leaves_max=n_leaves, macro=macro)
             out = tuple(np.asarray(o)[None, None] for o in out)
         else:
             sc = {k: jnp.asarray(v, jnp.float64) for k, v in sc_np.items()}
@@ -245,7 +273,7 @@ def simulate_grid(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
                 jnp.asarray(schemes), sc,
                 max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
                 n_track=track_addrs, n_tenants_max=n_tenants_max,
-                n_deep_max=n_deep, macro=macro)
+                n_deep_max=n_deep, n_leaves_max=n_leaves, macro=macro)
             out = tuple(np.asarray(o) for o in out)
     return _results_from(out, traces, configs, track_addrs, pairs=False)
 
@@ -280,7 +308,7 @@ def simulate_cells(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
     ops, addrs, gaps = ops[sel], addrs[sel], gaps[sel]
     lengths, mlen = lengths[sel], mlen[sel]
     n_tenants_max = max(c.n_tenants for c in configs)
-    sc_np, schemes, max_pbe, pm_banks, n_deep = _stack_configs(
+    sc_np, schemes, max_pbe, pm_banks, n_deep, n_leaves = _stack_configs(
         configs, max_pbe, n_tenants_max)
     with enable_x64(), warnings.catch_warnings():
         warnings.filterwarnings("ignore", message=".*[Dd]onat")
@@ -291,7 +319,7 @@ def simulate_cells(traces: Sequence[Trace], configs: Sequence[PCSConfig], *,
             jnp.asarray(schemes), sc,
             max_pbe=max_pbe, n_steps=n_steps, pm_banks=pm_banks,
             n_track=track_addrs, n_tenants_max=n_tenants_max,
-            n_deep_max=n_deep, macro=macro)
+            n_deep_max=n_deep, n_leaves_max=n_leaves, macro=macro)
         out = tuple(np.asarray(o) for o in out)
     return _results_from(out, traces, configs, track_addrs, pairs=True)
 

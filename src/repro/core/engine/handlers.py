@@ -20,7 +20,8 @@ from typing import Dict, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import chain, channels, policy
+from repro.core.engine import chain, channels, fabric, policy
+from repro.core.params import spine_defer
 from repro.core.engine.state import (DIRTY, DRAIN, EMPTY, INF, H_COALESCES,
                                      H_FWD_CNT, H_FWD_SUM, H_READ_HITS,
                                      MachineState, S_ACKED, S_COALESCES,
@@ -96,10 +97,23 @@ def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
         resp_dir = pm_start_dir + sc["nvm_read"] + ow
 
         state0 = policy.lazy_free(st.state, st.dd, t)
-        has, idx = policy.pb_lookup(st.tag, state0, ctx.slot_active, addr)
+        # Fabric: a read routes through the issuing tenant's own leaf
+        # switch — only that leaf's slot window is visible, and that
+        # leaf's PBC front serves it.  NL == 0 (chain-only grid) keeps
+        # the global window and the shared scalar clock, byte-identical.
+        NL = st.lpbc.shape[0]
+        if NL > 0:
+            my_leaf = fabric.leaf_of_tenant(sc, ctx.tenant)
+            leaf_act = ctx.slot_active & fabric.leaf_mask(
+                sc, fabric.slot_leaf(sc, ctx.slot_ids), my_leaf)
+            pbc_prev = st.lpbc[my_leaf]
+        else:
+            leaf_act = ctx.slot_active
+            pbc_prev = st.pbc_busy
+        has, idx = policy.pb_lookup(st.tag, state0, leaf_act, addr)
         # PI-buffer path: wait for the PBC (head-of-line blocking)
         arr = t + sc["ow_cpu_sw1"]
-        pbc_start = channels.pbc_start(st.pbc_busy, arr,
+        pbc_start = channels.pbc_start(pbc_prev, arr,
                                        sc["pbc_read_ns"] + sc["tag_ns"])
         st_i = state0[idx]
         dd_i = st.dd[idx]
@@ -135,8 +149,12 @@ def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
             jnp.where(deep_hit, st.pm_busy[bank],
                       pm_start_dir + sc["nvm_r_occ"])))
         pbc_busy2 = jnp.where(
-            has, channels.pbc_hold(st.pbc_busy, arr, sc["pbc_read_occ"]),
-            st.pbc_busy)
+            has, channels.pbc_hold(pbc_prev, arr, sc["pbc_read_occ"]),
+            pbc_prev)
+        if NL > 0:
+            pbc_kw = dict(lpbc=st.lpbc.at[my_leaf].set(pbc_busy2))
+        else:
+            pbc_kw = dict(pbc_busy=pbc_busy2)
         lru2 = st.lru.at[idx].set(jnp.where(has & served, t, st.lru[idx]))
         dlru3 = jnp.where(deep_hit, dlru2, st.dlru)
         hop_stats = st.hop_stats.at[0, H_READ_HITS].add(
@@ -152,8 +170,7 @@ def handle_pm_read(ctx: StepCtx, st: MachineState) -> MachineState:
                          has.astype(jnp.float64)]))
         return st._replace(clock=st.clock.at[ctx.c].set(resp), state=state0,
                            lru=lru2, dlru=dlru3, pm_busy=pm_busy2,
-                           pbc_busy=pbc_busy2, stats=stats,
-                           hop_stats=hop_stats)
+                           stats=stats, hop_stats=hop_stats, **pbc_kw)
 
     return jax.lax.switch(jnp.minimum(ctx.scheme, 1), [direct, via_pb], st)
 
@@ -175,10 +192,26 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
     crash = sc["crash_at"]
     bank = channels.bank_of(addr, ctx.n_banks)
     arr = t + sc["ow_cpu_sw1"]
-    pbc_start = channels.pbc_start(st.pbc_busy, arr,
+    # Fabric: the persist enters the issuing tenant's own leaf switch —
+    # lookup/alloc/victim/drain are scoped to that leaf's slot window,
+    # and that leaf's own PBC front serves the packet.  NL == 0 (no
+    # fabric anywhere in the grid) keeps the global window and the
+    # shared scalar clock, byte-identical to the chain engine; a chain
+    # cell *inside* a fabric grid gets the same via the n_leaves < 2
+    # mask bypass (every slot maps to leaf 0).
+    NL = st.lpbc.shape[0]
+    if NL > 0:
+        my_leaf = fabric.leaf_of_tenant(sc, ctx.tenant)
+        leaf_act = ctx.slot_active & fabric.leaf_mask(
+            sc, fabric.slot_leaf(sc, ctx.slot_ids), my_leaf)
+        pbc_prev = st.lpbc[my_leaf]
+    else:
+        leaf_act = ctx.slot_active
+        pbc_prev = st.pbc_busy
+    pbc_start = channels.pbc_start(pbc_prev, arr,
                                    sc["pbc_proc_ns"] + sc["tag_ns"])
     state1 = policy.lazy_free(st.state, st.dd, pbc_start)
-    match_dirty = ctx.slot_active & (st.tag == addr) & (state1 == DIRTY)
+    match_dirty = leaf_act & (st.tag == addr) & (state1 == DIRTY)
     has_dirty = jnp.any(match_dirty)
     idx = jnp.argmax(match_dirty)
 
@@ -199,7 +232,7 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
     occ = policy.tenant_occupancy(state1, ctx.slot_active, st.owner,
                                   st.stats.shape[0])
     (any_empty, empty_idx, any_dirty, victim_idx,
-     earliest_idx) = policy.select_slot(sc, state1, ctx.slot_active,
+     earliest_idx) = policy.select_slot(sc, state1, leaf_act,
                                         st.lru, st.dd, st.owner,
                                         ctx.tenant, occ)
 
@@ -280,13 +313,28 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
     # mirroring the oracle's PBEntry.tenant update)
     owner3 = st.owner.at[wslot].set(ctx.tenant.astype(st.owner.dtype))
 
+    # Backpressure-aware drain scheduling (fabric): while the spine PB's
+    # live occupancy — measured AFTER this op's victim leg landed, i.e.
+    # what the leaf's drain batch would actually meet — is at/above the
+    # topology's bp_high, the leaf's threshold/low-water drain-down
+    # defers (holds its Dirty entries) instead of piling more fan-in
+    # onto the congested spine.  Non-fabric configs lower bp_high = INF
+    # (never defer); victim drains and PB's drain-immediate are exempt
+    # (forward progress).
+    if D > 0 and NL > 0:
+        sp_live = fabric.spine_live(sc, rows_v["dstate"][0], ctx.slot_ids)
+        defer = spine_defer(sp_live, sc["bp_high"])
+    else:
+        defer = None
+
     # Both drain policies run (cheap relative to the chain legs); the
     # traced scheme bit picks each output elementwise, bit-exactly.
     state4_pb, dd4_pb, pmb2_pb, pw_pb = policy.drain_immediate(
         sc, bank, ctx.slot_ids, wslot, t_written, state3, dd3, pm_busy1)
     state4_rf, dd4_rf, pmb2_rf, pw_rf = policy.drain_threshold_preset(
-        sc, ctx.n_banks, ctx.slot_active, t_written, state3, tag3, lru3,
-        dd3, pm_busy1, owner=owner3, tenant=ctx.tenant, tight=tight)
+        sc, ctx.n_banks, leaf_act, t_written, state3, tag3, lru3,
+        dd3, pm_busy1, owner=owner3, tenant=ctx.tenant, tight=tight,
+        defer=defer)
     state4 = jnp.where(is_rf, state4_rf, state4_pb)
     dd4 = jnp.where(is_rf, dd4_rf, dd4_pb)
     pm_busy2 = jnp.where(is_rf, pmb2_rf, pmb2_pb)
@@ -373,8 +421,12 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
     # Only a genuine Empty-shortage stall (ta > pbc_start) holds the PI
     # front beyond the pipelined issue interval.
     pbc_free = jnp.maximum(
-        channels.pbc_hold(st.pbc_busy, arr, sc["pbc_occ_ns"]),
+        channels.pbc_hold(pbc_prev, arr, sc["pbc_occ_ns"]),
         jnp.where(is_coalesce | (ta <= pbc_start), 0.0, ta))
+    if NL > 0:
+        pbc_kw = dict(lpbc=st.lpbc.at[my_leaf].set(pbc_free))
+    else:
+        pbc_kw = dict(pbc_busy=pbc_free)
     # One fused scatter for every per-persist accumulator (all distinct
     # columns, so the sums are element-wise identical to chained adds —
     # the macro fast path stays bit-exact).  A persist committed into
@@ -390,7 +442,7 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
         hist_col])
     vals = jnp.stack([
         ((~is_coalesce) & (~any_empty)).astype(jnp.float64),
-        jnp.maximum(st.pbc_busy - arr, 0.0),
+        jnp.maximum(pbc_prev - arr, 0.0),
         ack - t,
         jnp.ones((), jnp.float64),
         over_now,
@@ -404,8 +456,8 @@ def _persist_with_buffer(ctx: StepCtx, st: MachineState) -> MachineState:
     return st._replace(clock=st.clock.at[ctx.c].set(ack), tag=tag5,
                        state=state5, lru=lru5, dd=dd5, ver=ver5,
                        owner=owner5, aver=aver3, pm_ver=pm_ver3,
-                       pm_busy=pm_busy3, pbc_busy=pbc_free, stats=stats,
-                       hop_stats=hop_stats, **chain_cols)
+                       pm_busy=pm_busy3, stats=stats,
+                       hop_stats=hop_stats, **pbc_kw, **chain_cols)
 
 
 def handle_persist(ctx: StepCtx, st: MachineState) -> MachineState:
@@ -487,21 +539,26 @@ def recovery_snapshot(st: MachineState, scheme, sc, slot_active,
     hop independently, and durability per address is the newest version
     held at any surviving hop (or PM).  Returns
     ``(durable_ver (A,) i32, n_recovered f64, recovery_ns f64,
-    recovered_per_tenant (T,) f64, recovered_per_hop (D+1,) f64)`` —
-    the last two attribute each surviving entry to its owning tenant
-    (recovery fairness, ROADMAP) and to the hop holding it (the chain
-    depth figure).
+    recovered_per_tenant (T,) f64, recovered_per_hop (D+1,) f64,
+    recovered_per_leaf (max(NL,1),) f64)`` — the last three attribute
+    each surviving entry to its owning tenant (recovery fairness,
+    ROADMAP), to the hop holding it (the chain depth figure), and —
+    for fan-out fabrics — to the leaf switch holding it (hop-1 slots
+    scattered by their leaf window; the spine's survivors are
+    ``per_hop[1]``).
     """
     crash = sc["crash_at"]
     A = st.pm_ver.shape[0]
     T = st.stats.shape[0]
     D = st.dtag.shape[0]
+    NL = max(st.lpbc.shape[0], 1)
     zero = jnp.asarray(0.0, jnp.float64)
     zero_t = jnp.zeros((T,), jnp.float64)
     zero_h = jnp.zeros((D + 1,), jnp.float64)
+    zero_l = jnp.zeros((NL,), jnp.float64)
 
     def nopb(_):
-        return st.pm_ver, zero, zero, zero_t, zero_h
+        return st.pm_ver, zero, zero, zero_t, zero_h, zero_l
 
     def pb(_):
         surviving = policy.surviving_entries(st.state, st.dd, slot_active,
@@ -511,6 +568,12 @@ def recovery_snapshot(st: MachineState, scheme, sc, slot_active,
             jnp.where(in_range, st.ver, 0))
         per_t = zero_t.at[jnp.clip(st.owner, 0, T - 1)].add(
             surviving.astype(jnp.float64))
+        if st.lpbc.shape[0] > 0:
+            sl = fabric.slot_leaf(sc, jnp.arange(st.tag.shape[0]))
+            per_leaf = zero_l.at[sl].add(surviving.astype(jnp.float64))
+        else:
+            per_leaf = zero_l.at[0].set(
+                jnp.sum(surviving.astype(jnp.float64)))
         B = n_banks
         banks = jnp.where(surviving, st.tag % B, 0)
         per_bank = jnp.zeros((B,), jnp.float64).at[banks].add(
@@ -539,6 +602,6 @@ def recovery_snapshot(st: MachineState, scheme, sc, slot_active,
             per_hop = per_hop.at[j + 1].set(nj)
         n_total = jnp.sum(per_hop)
         cost = policy.recovery_burst_cost(sc, per_bank, n_total)
-        return dv, n_total, cost, per_t, per_hop
+        return dv, n_total, cost, per_t, per_hop, per_leaf
 
     return jax.lax.switch(jnp.minimum(scheme, 1), [nopb, pb], None)

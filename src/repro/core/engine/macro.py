@@ -39,7 +39,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import channels, policy
+from repro.core.engine import channels, fabric, policy
 from repro.core.engine.state import (DIRTY, EMPTY, INF, H_FWD_CNT, H_FWD_SUM,
                                      S_ACKED, S_DURABLE, S_LAT_HIST0,
                                      S_PBCQ_SUM, S_PERSIST_CNT,
@@ -47,16 +47,30 @@ from repro.core.engine.state import (DIRTY, EMPTY, INF, H_FWD_CNT, H_FWD_SUM,
                                      S_READ_SUM, S_SLO_OVER, lat_bin)
 from repro.core.params import Op
 
+# Prioritized abort attribution for live candidate windows: each live op
+# at the head of a window that fails to commit counts under exactly the
+# *first* failing gate, in this order.  ``window`` = no eligible >= 2-op
+# run at the cursor; ``fabric`` = a multi-leaf fabric cell (the
+# mini-interpreter models neither leaf scoping nor spine backpressure);
+# ``deep`` = a >= 2-switch chain cell; ``interleave`` = another core
+# issues inside the window; ``guard`` = the in-window traced guard
+# conjunction cleared (PB hit, coalesce, drain-down fired, ...).  The
+# vector returned by :func:`macro_step` is summed across steps/cells by
+# ``engine.grid`` and surfaced via ``last_macro_abort_reasons()``.
+MACRO_ABORT_REASONS = ("window", "fabric", "deep", "interleave", "guard")
+
 
 def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
                valid, live, t_issue, i, *, kmax: int):
     """Candidate macro execution of up to ``kmax`` ops of core ``ctx.c``.
 
-    Returns ``(st_macro, use_macro, k_adv)``: the candidate state (only
-    meaningful where ``use_macro`` holds), whether either macro path
-    (live window or dead run) committed, and how many trace slots it
-    consumed.  The caller selects ``st_macro`` over the slot-step result
-    and advances the cursor by ``k_adv`` when ``use_macro`` is set.
+    Returns ``(st_macro, use_macro, k_adv, abort_vec)``: the candidate
+    state (only meaningful where ``use_macro`` holds), whether either
+    macro path (live window or dead run) committed, how many trace
+    slots it consumed, and the one-hot ``MACRO_ABORT_REASONS`` vector
+    (all-zero when the window committed or no live candidate existed).
+    The caller selects ``st_macro`` over the slot-step result and
+    advances the cursor by ``k_adv`` when ``use_macro`` is set.
     """
     sc = ctx.sc
     c = ctx.c
@@ -94,6 +108,22 @@ def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
     # chain cells (>= 2 switches) take the deep persist/read legs the
     # mini-interpreter does not model; their dead tails still collapse
     deep_ok = is_nopb | (sc["n_switches"] < 2.0)
+    # multi-leaf fabric cells additionally scope hop-1 state to the
+    # issuing tenant's leaf and may defer drains on spine backpressure —
+    # neither is modelled here (a fabric forces n_switches = 2, so
+    # deep_ok already aborts these; fab_ok attributes the abort)
+    fab_ok = is_nopb | (sc["n_leaves"] < 2.0)
+    # per-leaf PBC clocks: in a grid carrying the fabric axis the
+    # handlers serve hop-1 PBC time from lpbc[leaf(tenant)], so the
+    # mini-interpreter must read/write the same cell (the window's
+    # tenant — hence its leaf — is constant, and non-fabric cells
+    # lower leaf_of_t = 0)
+    NL = st.lpbc.shape[0]
+    if NL > 0:
+        my_leaf = fabric.leaf_of_tenant(sc, ctx.tenant)
+        pbc0 = st.lpbc[my_leaf]
+    else:
+        pbc0 = st.pbc_busy
 
     ow = sc["ow_cpu_pm"]
 
@@ -270,7 +300,7 @@ def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
                 stats_cur, hop_cur, guard, t_last), None
 
     carry0 = (st.clock[c], st.state, st.tag, st.lru, st.dd, st.ver,
-              st.owner, st.pm_busy, st.pbc_busy, st.pm_ver, st.aver,
+              st.owner, st.pm_busy, pbc0, st.pm_ver, st.aver,
               st.stats, st.hop_stats, jnp.asarray(True), t_issue)
     (clk, state_cur, tag_cur, lru_cur, dd_cur, ver_cur, owner_cur,
      pmb_cur, pbc_cur, pm_ver_cur, aver_cur, stats_cur, hop_cur,
@@ -280,17 +310,34 @@ def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
     # no other core may issue inside the window (strict: argmin ties
     # break by index, so equality must abort too)
     others_min = jnp.min(tsel.at[c].set(INF))
-    live_ok = (valid & live & (k_live >= 2) & deep_ok & guard
-               & (others_min > t_last))
+    no_ilv = others_min > t_last
+    live_ok = (valid & live & (k_live >= 2) & fab_ok & deep_ok & guard
+               & no_ilv)
 
+    # prioritized abort attribution (MACRO_ABORT_REASONS order): each
+    # live candidate that failed to commit counts exactly one reason
+    cand = valid & live
+    elig = cand & (k_live >= 2)
+    abort_vec = jnp.stack([
+        cand & (k_live < 2),
+        elig & ~fab_ok,
+        elig & fab_ok & ~deep_ok,
+        elig & fab_ok & deep_ok & ~no_ilv,
+        elig & fab_ok & deep_ok & no_ilv & ~guard,
+    ]).astype(jnp.int32)
+
+    if NL > 0:
+        pbc_kw = dict(lpbc=st.lpbc.at[my_leaf].set(pbc_cur))
+    else:
+        pbc_kw = dict(pbc_busy=pbc_cur)
     st_live = st._replace(
         clock=st.clock.at[c].set(clk), state=state_cur, tag=tag_cur,
         lru=lru_cur, dd=dd_cur, ver=ver_cur, owner=owner_cur,
         aver=aver_cur, pm_ver=pm_ver_cur, pm_busy=pmb_cur,
-        pbc_busy=pbc_cur, stats=stats_cur, hop_stats=hop_cur)
+        stats=stats_cur, hop_stats=hop_cur, **pbc_kw)
 
     use_macro = live_ok | dead_ok
     k_adv = jnp.where(live_ok, k_live, k_cap)
     st_macro = jax.tree_util.tree_map(
         lambda a, b: jnp.where(live_ok, a, b), st_live, st_dead)
-    return st_macro, use_macro, k_adv
+    return st_macro, use_macro, k_adv, abort_vec

@@ -160,7 +160,7 @@ def recovery_burst_cost(sc, per_bank, n):
 
 def drain_threshold_preset(sc, n_banks, slot_active, t_written,
                            state3, tag3, lru3, dd3, pm_busy1, *,
-                           owner, tenant, tight=None):
+                           owner, tenant, tight=None, defer=None):
     """PB_RF: threshold/preset drain-down over LRU Dirty entries.
 
     Traced twin of :func:`rf_drain_count` plus the per-bank burst
@@ -183,7 +183,15 @@ def drain_threshold_preset(sc, n_banks, slot_active, t_written,
     every in-scope Dirty entry ASAP so the next tail persist does not
     queue behind a full PB.  A never-true ``tight`` (no target set)
     selects the untightened counts and is bit-exact with ``tight=None``.
-    Returns (state4, dd4, pm_busy2, policy_writes).
+
+    ``defer`` (a traced bool, or None to skip) is the fabric's
+    backpressure override (``FabricTopology.bp_high``): while the
+    downstream spine FIFO is congested the whole drain-down — both the
+    threshold leg and the keep-one-free low-water leg — is deferred
+    (``k = 0``); the Dirty entries stay put and the next persist
+    re-evaluates.  A never-true ``defer`` (bp_high = INF) is bit-exact
+    with ``defer=None``.  Returns (state4, dd4, pm_busy2,
+    policy_writes).
     """
     B = n_banks
     scoped = sc["drain_scope"] > 0.0
@@ -203,6 +211,8 @@ def drain_threshold_preset(sc, n_banks, slot_active, t_written,
                       jnp.minimum(sc["low_water"], dirty_cnt),
                       0.0)
     k = jnp.maximum(k_thresh, k_low)
+    if defer is not None:
+        k = jnp.where(defer, 0.0, k)
     key = jnp.where(dirty_mask, lru3, INF)
     rank = jnp.argsort(jnp.argsort(key)).astype(jnp.float64)
     to_drain = (rank < k) & dirty_mask

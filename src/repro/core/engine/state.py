@@ -195,14 +195,21 @@ class MachineState(NamedTuple):
     hpbc: jnp.ndarray      # (D,)   f64  deep-hop PBC / inter-switch channel
                            #             next-free times
     hop_stats: jnp.ndarray  # (Hmax, N_HOP_STATS) f64 per-switch telemetry
+    # ---- fabric (fan-out) columns, NL = n_leaves_max when > 1 else 0 ----
+    # Each leaf switch owns its own PBC front: per-leaf next-free clocks
+    # replace the shared scalar ``pbc_busy`` (dead-carried) when the grid
+    # holds any multi-leaf fabric.  NL == 0 skips the fabric code at
+    # trace time, keeping chain-only grids byte-identical to PR 5.
+    lpbc: jnp.ndarray      # (NL,)  f64  per-leaf PBC next-free times
 
 
 def init_state(n_cores: int, max_pbe: int, pm_banks: int,
                n_track: int = 0, n_tenants_max: int = 1,
-               n_deep_max: int = 0) -> MachineState:
+               n_deep_max: int = 0, n_leaves_max: int = 1) -> MachineState:
     A = max(n_track, 1)
     T = max(n_tenants_max, 1)
     D = max(n_deep_max, 0)
+    NL = n_leaves_max if n_leaves_max > 1 else 0
     if T > 127:
         raise ValueError("n_tenants_max exceeds the int8 owner column")
     return MachineState(
@@ -230,6 +237,7 @@ def init_state(n_cores: int, max_pbe: int, pm_banks: int,
         dwt=jnp.zeros((D, max_pbe), jnp.float64),
         hpbc=jnp.zeros((D,), jnp.float64),
         hop_stats=jnp.zeros((D + 1, N_HOP_STATS), jnp.float64),
+        lpbc=jnp.zeros((NL,), jnp.float64),
     )
 
 
@@ -294,6 +302,12 @@ class SimResult:
     # (0 when no target is set — nothing is ever over +inf).
     lat_hist: "np.ndarray | None" = None      # (N_LAT_BINS,) f64 or None
     slo_violations: int = 0
+    # ---- fabric telemetry (fan-out topologies) -------------------------
+    # Surviving hop-1 PBEs per *leaf switch* at the crash instant (the
+    # per-node attribution of a fan-out recovery; the spine's survivors
+    # are ``hop_recovery[1]``).  ``None`` for chains / 1-leaf fabrics —
+    # so a 1-leaf fabric's SimResult is field-identical to the chain's.
+    leaf_recovery: "np.ndarray | None" = None  # (n_leaves,) i64 or None
 
     def persist_lat_pct(self, q: float) -> float:
         """Persist ack-latency quantile from the histogram (NaN when the
@@ -382,7 +396,9 @@ def result_from_stats(runtime: float, stats: np.ndarray, *,
                       tenant_recovery: "np.ndarray | None" = None,
                       n_hops: int = 0,
                       hop_stats: "np.ndarray | None" = None,
-                      hop_recovery: "np.ndarray | None" = None
+                      hop_recovery: "np.ndarray | None" = None,
+                      n_leaves: int = 1,
+                      leaf_recovery: "np.ndarray | None" = None
                       ) -> SimResult:
     """Build a SimResult from a stats vector or per-tenant stats matrix.
 
@@ -425,12 +441,17 @@ def result_from_stats(runtime: float, stats: np.ndarray, *,
                       if n_hops > 0 and hop_recovery is not None else None),
         lat_hist=tot[S_LAT_HIST0:S_LAT_HIST0 + N_LAT_BINS].copy(),
         slo_violations=int(tot[S_SLO_OVER]),
+        leaf_recovery=(
+            np.asarray(leaf_recovery, np.int64)[:n_leaves].copy()
+            if n_leaves > 1 and leaf_recovery is not None else None),
     )
 
 
 def scalars_from_config(cfg: PCSConfig,
                         n_tenants_max: int | None = None,
-                        n_deep_max: int = 0) -> Dict[str, "float | np.ndarray"]:
+                        n_deep_max: int = 0,
+                        n_leaves_max: int = 1
+                        ) -> Dict[str, "float | np.ndarray"]:
     """Lower one config to the dict of traced latency/policy scalars.
 
     The :class:`~repro.core.params.PBPolicy` on the config lowers here
@@ -450,6 +471,13 @@ def scalars_from_config(cfg: PCSConfig,
     # lower to size 0 — structurally inactive in a mixed-depth grid.
     D1 = max(n_deep_max, 1)
     hop_pbes = cfg.hop_pbes
+    if len(hop_pbes) - 1 > D1:
+        # silently truncating deep rows would lower a depth-N chain as a
+        # shallower one — right-shaped, quietly wrong results
+        raise ValueError(
+            f"config has {len(hop_pbes) - 1} deep hops but the grid's "
+            f"static deep-row bound is {D1} (n_deep_max={n_deep_max}); "
+            "stack the grid with the true max depth")
     deep_pbe = np.zeros((D1,), np.float64)
     deep_thr = np.ones((D1,), np.float64)
     deep_pre = np.zeros((D1,), np.float64)
@@ -460,11 +488,35 @@ def scalars_from_config(cfg: PCSConfig,
     deep_data = np.full((D1,), lat.pb_data_ns, np.float64)
     for j, (n_h, (thr_h, pre_h)) in enumerate(
             zip(hop_pbes[1:], hop_drain_counts(pol, hop_pbes)[1:])):
-        if j < D1:
-            deep_pbe[j] = float(n_h)
-            deep_thr[j], deep_pre[j] = float(thr_h), float(pre_h)
-            deep_tag[j] = lat.pb_tag_ns_for(n_h)
-            deep_data[j] = lat.pb_data_ns_for(n_h)
+        deep_pbe[j] = float(n_h)
+        deep_thr[j], deep_pre[j] = float(thr_h), float(pre_h)
+        deep_tag[j] = lat.pb_tag_ns_for(n_h)
+        deep_data[j] = lat.pb_data_ns_for(n_h)
+    # ---- fabric (fan-out) lowering -----------------------------------
+    # The tree descriptor lowers to a scalar leaf count, a per-tenant
+    # leaf map and the per-leaf slot-window bases.  Non-fabric configs
+    # lower to the degenerate values (1 leaf, everyone on leaf 0, base
+    # vector [0, INF, ...] so every slot maps to leaf 0, bp_high = INF),
+    # which the leaf masks neutralize — a chain cell inside a fabric
+    # grid runs the global hop-1 behaviour bit-exactly.
+    NL1 = max(n_leaves_max, 1)
+    fab = cfg.fabric
+    if fab is not None and fab.n_leaves > NL1:
+        raise ValueError(
+            f"config has {fab.n_leaves} leaves but the grid's static "
+            f"leaf bound is {NL1} (n_leaves_max={n_leaves_max}); "
+            "stack the grid with the true max leaf count")
+    leaf_of_t = np.zeros((T,), np.float64)
+    leaf_base = np.full((NL1,), INF, np.float64)
+    leaf_base[0] = 0.0
+    bp_high = INF
+    if fab is not None:
+        for t, lf in enumerate(fab.placement):
+            leaf_of_t[t] = float(lf)
+        for i, b in enumerate(fab.leaf_bases()):
+            leaf_base[i] = float(b)
+        if fab.bp_high is not None:
+            bp_high = min(float(fab.bp_high), INF)
     quota = np.full((T,), INF, np.float64)
     share = np.full((T,), INF, np.float64)
     t_thr = np.full((T,), float(cfg.threshold_count), np.float64)
@@ -518,6 +570,12 @@ def scalars_from_config(cfg: PCSConfig,
         deep_pre=deep_pre,        # (D1,) switch j+2's drain preset count
         deep_tag=deep_tag,        # (D1,) switch j+2's tag lookup latency
         deep_data=deep_data,      # (D1,) switch j+2's data access latency
+        # ---- fabric lowering (fan-out trees over the chain) -----------
+        n_leaves=float(fab.n_leaves) if fab is not None else 1.0,
+        leaf_of_t=leaf_of_t,      # (T,)   tenant t's leaf switch
+        leaf_base=leaf_base,      # (NL1,) first hop-1 slot of each leaf
+        bp_high=bp_high,          # spine Dirty occupancy that defers
+                                  # leaf drain-down (INF = never)
         # ---- serving-SLO drain tightening (DrainPolicy.latency_target_ns)
         # None lowers to INF: no persist latency ever exceeds it, the
         # running-over counter stays 0 and the tight predicate is always

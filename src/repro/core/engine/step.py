@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine.handlers import HANDLERS, StepCtx, recovery_snapshot
-from repro.core.engine.macro import macro_step
+from repro.core.engine.macro import MACRO_ABORT_REASONS, macro_step
 from repro.core.engine.state import INF, MachineState, init_state
 from repro.core.params import MACRO_KMAX, Op
 
@@ -71,20 +71,29 @@ def compile_count() -> int:
 def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
               max_pbe: int, n_steps: int, pm_banks: int, n_track: int = 0,
               n_tenants_max: int = 1, n_deep_max: int = 0,
+              n_leaves_max: int = 1,
               mlen=None, macro: bool = False,
               return_state: bool = False):
     """Simulate one (trace, config) cell.
 
     Returns ``(runtime, stats, durable_ver, n_recovered, recovery_ns,
-    recovered_per_tenant, hop_stats, recovered_per_hop, macro_ops)``,
-    plus the final :class:`MachineState` when ``return_state`` is set
-    (used by the padding-invariant tests).  ``scheme`` and every entry
-    of ``sc`` are traced scalars; only array shapes (core count C,
-    ``max_pbe``, ``pm_banks``, ``n_steps``, ``n_track``,
-    ``n_tenants_max``, ``n_deep_max``) are static.  ``n_deep_max`` is
+    recovered_per_tenant, hop_stats, recovered_per_hop,
+    recovered_per_leaf, macro_ops, macro_aborts)``, plus the final
+    :class:`MachineState` when ``return_state`` is set (used by the
+    padding-invariant tests).  ``scheme`` and every entry of ``sc`` are
+    traced scalars; only array shapes (core count C, ``max_pbe``,
+    ``pm_banks``, ``n_steps``, ``n_track``, ``n_tenants_max``,
+    ``n_deep_max``, ``n_leaves_max``) are static.  ``n_deep_max`` is
     the deep-hop row count of the switch chain (grid max depth minus
     one); 0 skips the chain code entirely at trace time, so depth-1
-    grids stay byte-identical to the pre-chain engine.
+    grids stay byte-identical to the pre-chain engine.  ``n_leaves_max``
+    plays the same role for the fan-out fabric axis (``engine.fabric``):
+    1 keeps the per-leaf PBC column empty and skips every fabric branch
+    at trace time; ``recovered_per_leaf`` then degenerates to a single
+    aggregate cell.  ``macro_aborts`` is the per-reason count of live
+    macro candidates that failed to commit
+    (:data:`~repro.core.engine.macro.MACRO_ABORT_REASONS` order, all
+    zero when ``macro`` is off).
 
     ``macro=True`` (static) enables the macro-stepping fast path;
     ``mlen`` is the (C, L) int8 run plan from
@@ -123,7 +132,7 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
     gaps64 = gaps.astype(jnp.float64)
 
     def step(carry, _):
-        st, mops = carry
+        st, mops, maborts = carry
         active = st.ptr < lengths
         idx = jnp.minimum(st.ptr, jnp.maximum(lengths - 1, 0))
         next_gap = gaps64[core_ids, idx]
@@ -150,13 +159,14 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
         st2 = jax.lax.switch(jnp.clip(op, 0, 5), branches, st)
 
         if use_macro:
-            st_m, took, k_m = macro_step(
+            st_m, took, k_m, ab_vec = macro_step(
                 ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
                 valid, live, t_issue, i, kmax=MACRO_KMAX)
             st2 = jax.tree_util.tree_map(
                 lambda a, b: jnp.where(took, a, b), st_m, st2)
             adv = jnp.where(took, k_m, 1)
             mops = mops + jnp.where(took, k_m, 0)
+            maborts = maborts + ab_vec
         else:
             took = jnp.asarray(False)
             adv = 1
@@ -182,18 +192,19 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
         clock = st2.clock.at[c].set(
             jnp.where(valid & ~live & ~took, t_issue, st2.clock[c]))
         return (st2._replace(clock=clock, ptr=ptr, blocked=blocked,
-                             bcount=bcount), mops), None
+                             bcount=bcount), mops, maborts), None
 
     def segment(carry, length):
         return jax.lax.scan(step, carry, None, length=length)[0]
 
     carry = (init_state(C, max_pbe, pm_banks, n_track, n_tenants_max,
-                        n_deep_max),
-             jnp.zeros((), jnp.int32))
+                        n_deep_max, n_leaves_max),
+             jnp.zeros((), jnp.int32),
+             jnp.zeros((len(MACRO_ABORT_REASONS),), jnp.int32))
     n_full, n_tail = divmod(n_steps, CHUNK)
     if n_full > 0:
         def more_work(loop):
-            k, (st, _mops) = loop
+            k, (st, _mops, _mab) = loop
             return (k < n_full) & jnp.any(st.ptr < lengths)
 
         def run_segment(loop):
@@ -204,14 +215,15 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
             more_work, run_segment, (jnp.asarray(0, jnp.int32), carry))
     if n_tail > 0:
         carry = segment(carry, n_tail)
-    final, mops = carry
+    final, mops, maborts = carry
     # a crashed run ends at the power loss: dead cores advanced their
     # clocks through never-executed ops, so cap at the crash instant
     runtime = jnp.max(jnp.where(final.clock < INF * 0.5,
                                 jnp.minimum(final.clock, sc["crash_at"]),
                                 0.0))
-    durable_ver, n_recov, recov_ns, recov_t, recov_h = recovery_snapshot(
+    (durable_ver, n_recov, recov_ns, recov_t, recov_h,
+     recov_l) = recovery_snapshot(
         final, scheme, sc, slot_active, pm_banks, n_track)
     out = (runtime, final.stats, durable_ver, n_recov, recov_ns, recov_t,
-           final.hop_stats, recov_h, mops)
+           final.hop_stats, recov_h, recov_l, mops, maborts)
     return out + (final,) if return_state else out

@@ -256,6 +256,98 @@ def tenant_drain_counts(policy: PBPolicy, n_pbe: int,
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class FabricTopology:
+    """Two-level fan-out fabric: leaf switches sharing one spine.
+
+    Real CXL pooling deployments are trees, not chains: many leaf
+    switches (each the ack point for its own hosts) fan into a shared
+    spine switch in front of the PM banks.  The descriptor is frozen
+    data, and — like :class:`PBPolicy` and ``crash_at_ns`` — lowers to
+    traced scalars/vectors (``engine.state.scalars_from_config``):
+    ``n_leaves`` + the per-tenant ``placement`` map + the per-leaf slot
+    partition + ``bp_high`` all reach the compiled program as operands,
+    so a {workload x scheme x topology x placement} sweep stays ONE XLA
+    program; only the grid-wide ``n_leaves`` maximum is a static shape.
+
+    ``leaf_pbe[i]`` is leaf ``i``'s PBE capacity; the leaves partition
+    one hop-1 slot axis (leaf ``i`` owns the contiguous slot window
+    starting at ``leaf_bases()[i]``), so the 1-leaf fabric is *exactly*
+    the linear chain.  ``spine_pbe`` is the spine switch's PB capacity
+    (hop 2 of the lowered chain).  ``placement[t]`` is tenant ``t``'s
+    leaf: a tenant's persists allocate/coalesce/victim/drain only
+    within its own leaf's slot window, and drains from all leaves merge
+    into the spine's occupancy-serialized FIFO (fan-in contention).
+
+    ``bp_high`` is the backpressure-aware drain-scheduling knob: when
+    the spine PB's live (Dirty) occupancy is at/above ``bp_high``
+    entries, every leaf's PB_RF threshold/low-water drain-down is
+    *deferred* (``spine_defer``) — leaves hold their Dirty entries
+    instead of piling more fan-in onto a congested spine.  Victim
+    drains (forward progress) and the PB scheme's drain-immediate are
+    exempt.  ``None`` lowers to the engine's finite infinity (never
+    defer) and requires nothing; a finite ``bp_high`` requires
+    ``n_leaves >= 2`` so a 1-leaf fabric is bit-identical to the chain
+    in every grid composition.
+    """
+
+    n_leaves: int = 1
+    leaf_pbe: Tuple[int, ...] = (16,)
+    spine_pbe: int = 16
+    placement: Tuple[int, ...] = (0,)   # tenant -> leaf
+    bp_high: Optional[float] = None     # spine Dirty occupancy, entries
+
+    def __post_init__(self) -> None:
+        if self.n_leaves < 1:
+            raise ValueError("n_leaves must be >= 1")
+        q = tuple(int(x) for x in self.leaf_pbe)
+        if len(q) != self.n_leaves:
+            raise ValueError(
+                f"leaf_pbe has {len(q)} entries for "
+                f"n_leaves={self.n_leaves}; need one per leaf")
+        if any(x < 1 for x in q):
+            raise ValueError("leaf_pbe entries must be >= 1")
+        object.__setattr__(self, "leaf_pbe", q)
+        if self.spine_pbe < 1:
+            raise ValueError("spine_pbe must be >= 1")
+        p = tuple(int(x) for x in self.placement)
+        if not p:
+            raise ValueError("placement needs at least one tenant entry")
+        if any(not 0 <= x < self.n_leaves for x in p):
+            raise ValueError(
+                f"placement entries must be leaf ids in [0, "
+                f"{self.n_leaves}); got {p}")
+        object.__setattr__(self, "placement", p)
+        if self.bp_high is not None:
+            if not self.bp_high > 0:
+                raise ValueError("bp_high must be > 0 (or None)")
+            if self.n_leaves < 2:
+                # a 1-leaf fabric must be bit-identical to the linear
+                # chain regardless of what else shares the grid
+                raise ValueError(
+                    "bp_high requires n_leaves >= 2: backpressure on a "
+                    "1-leaf fabric would diverge from the chain path")
+
+    def leaf_bases(self) -> Tuple[int, ...]:
+        """First hop-1 slot of each leaf's window (cumulative offsets)."""
+        bases, acc = [], 0
+        for n in self.leaf_pbe:
+            bases.append(acc)
+            acc += n
+        return tuple(bases)
+
+
+def spine_defer(spine_live, bp_high):
+    """Backpressure contract: leaf threshold/low-water drain-down defers
+    while the spine PB's live (Dirty) occupancy has reached ``bp_high``.
+
+    Single home of the comparison — the timed engine calls it with
+    traced f64 operands, the untimed oracle with Python scalars — so
+    the two layers cannot drift on the boundary (``>=``, not ``>``).
+    """
+    return spine_live >= bp_high
+
+
 class PBEState(enum.IntEnum):
     """Persistent Buffer Entry states (Section V-A)."""
 
@@ -402,9 +494,43 @@ class PCSConfig:
     # a crash-point sweep is just another stacked config axis: a
     # {workload x scheme x crash-point} grid stays one XLA program.
     crash_at_ns: float = math.inf
+    # Fan-out fabric topology (leaf switches sharing one spine).  ``None``
+    # keeps the linear chain.  When set, the tree lowers onto the chain
+    # machinery: ``n_switches`` is forced to 2 (leaves are hop 1, the
+    # spine is hop 2) and ``pbe_per_hop`` to ``(sum(leaf_pbe),
+    # spine_pbe)`` — the leaves partition the hop-1 slot axis.  The
+    # descriptor itself lowers to traced scalars/vectors
+    # (``n_leaves`` / ``leaf_of_t`` / ``leaf_base`` / ``bp_high``), so a
+    # mixed {chain x fabric x placement} grid stays one XLA program.
+    fabric: Optional[FabricTopology] = None
     latency: LatencyProfile = dataclasses.field(default_factory=LatencyProfile)
 
     def __post_init__(self) -> None:
+        if self.fabric is not None:
+            # Lower the tree onto the chain machinery BEFORE the chain
+            # checks below, so they validate the derived values.
+            if self.scheme == Scheme.NOPB:
+                raise ValueError(
+                    "fabric is meaningless under NOPB: a volatile "
+                    "fabric has no persistent buffers to place")
+            if len(self.fabric.placement) != self.n_tenants:
+                raise ValueError(
+                    f"fabric.placement has {len(self.fabric.placement)} "
+                    f"entries for n_tenants={self.n_tenants}; need "
+                    "exactly one leaf id per tenant")
+            derived = (sum(self.fabric.leaf_pbe), self.fabric.spine_pbe)
+            if self.n_switches not in (1, 2):
+                raise ValueError(
+                    "a fabric is a two-level tree (leaves + spine, "
+                    "n_switches=2); leave n_switches at its default")
+            object.__setattr__(self, "n_switches", 2)
+            if self.pbe_per_hop is not None and \
+                    tuple(int(x) for x in self.pbe_per_hop) != derived:
+                raise ValueError(
+                    f"pbe_per_hop={self.pbe_per_hop} disagrees with the "
+                    f"fabric's derived {derived} (sum of leaf_pbe, "
+                    "spine_pbe); drop pbe_per_hop — the fabric owns it")
+            object.__setattr__(self, "pbe_per_hop", derived)
         if self.n_pbe < 1:
             raise ValueError("n_pbe must be >= 1")
         if self.n_switches < 0:

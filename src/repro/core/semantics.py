@@ -55,6 +55,7 @@ class PBEntry:
     state: PBEState
     lru: int  # stamp of last use (higher = more recent)
     tenant: int = 0  # last tenant (host) that wrote this entry
+    leaf: int = 0  # owning leaf switch (fan-out fabric; 0 for chains)
 
 
 class PersistentMemory:
@@ -130,6 +131,20 @@ class PersistentBuffer:
         self.n_hops = len(self._hop_pbes)
         self.hops: List[List[PBEntry]] = [
             [] for _ in self._hop_pbes[1:]]
+        # Fan-out fabric (FabricTopology): hop 1 splits into per-leaf
+        # switch pools — each tenant's persists/reads see only its
+        # leaf's entries and capacity — while every leaf's drains merge
+        # into the shared hop-2 spine (``hops[0]``), the fan-in point.
+        # ``bp_high`` is the spine's Dirty-occupancy watermark: at/over
+        # it, leaf drain-downs defer (victim drains are exempt — they
+        # make room for an ack the CPU is already waiting on).  Without
+        # a fabric everything lives on leaf 0 with the full n_pbe, so
+        # every scoped path degenerates to the chain behaviour.
+        fab = config.fabric
+        self._n_leaves = fab.n_leaves if fab is not None else 1
+        self._leaf_pbe = fab.leaf_pbe if fab is not None else (config.n_pbe,)
+        self._placement = fab.placement if fab is not None else None
+        self._bp_high = fab.bp_high if fab is not None else None
         self._hop_drain = (hop_drain_counts(self.policy, self._hop_pbes)
                           if self.n_hops else [])
         # per-switch telemetry rows (engine twin: MachineState.hop_stats)
@@ -180,11 +195,21 @@ class PersistentBuffer:
         self._lru_clock += 1
         e.lru = self._lru_clock
 
-    def _find(self, addr: int) -> Optional[PBEntry]:
-        """Newest live entry for addr (a Dirty entry supersedes Drain)."""
+    def _leaf_of(self, tenant: int) -> int:
+        """Leaf switch serving ``tenant`` (0 without a fabric)."""
+        if self._placement is None:
+            return 0
+        return (self._placement[tenant]
+                if 0 <= tenant < len(self._placement) else 0)
+
+    def _find(self, addr: int, leaf: int = 0) -> Optional[PBEntry]:
+        """Newest live entry for addr on ``leaf`` (Dirty supersedes
+        Drain).  Leaves are physically separate switches, so a lookup
+        never sees another leaf's entries."""
         best: Optional[PBEntry] = None
         for e in self.entries:
-            if e.addr == addr and e.state != PBEState.EMPTY:
+            if (e.addr == addr and e.state != PBEState.EMPTY
+                    and e.leaf == leaf):
                 if best is None or e.version > best.version:
                     best = e
         return best
@@ -192,21 +217,26 @@ class PersistentBuffer:
     def _count(self, state: PBEState) -> int:
         return sum(1 for e in self.entries if e.state == state)
 
-    def _alloc_slot(self) -> Optional[PBEntry]:
-        """Return an Empty entry, materializing the fixed capacity lazily."""
+    def _alloc_slot(self, leaf: int = 0) -> Optional[PBEntry]:
+        """Return an Empty entry of ``leaf``, materializing the leaf's
+        fixed capacity lazily (entries never migrate between leaves —
+        the engine's slot windows are a static partition)."""
         for e in self.entries:
-            if e.state == PBEState.EMPTY:
+            if e.state == PBEState.EMPTY and e.leaf == leaf:
                 return e
-        if len(self.entries) < self.config.n_pbe:
+        if (sum(1 for e in self.entries if e.leaf == leaf)
+                < self._leaf_pbe[leaf]):
             e = PBEntry(addr=-1, version=-1, data=None,
-                        state=PBEState.EMPTY, lru=0)
+                        state=PBEState.EMPTY, lru=0, leaf=leaf)
             self.entries.append(e)
             return e
         return None
 
-    def _lru_dirty(self, owner: Optional[int] = None) -> Optional[PBEntry]:
+    def _lru_dirty(self, owner: Optional[int] = None,
+                   leaf: Optional[int] = None) -> Optional[PBEntry]:
         dirty = [e for e in self.entries if e.state == PBEState.DIRTY
-                 and (owner is None or e.tenant == owner)]
+                 and (owner is None or e.tenant == owner)
+                 and (leaf is None or e.leaf == leaf)]
         if not dirty:
             return None
         return min(dirty, key=lambda e: e.lru)
@@ -217,12 +247,16 @@ class PersistentBuffer:
         return sum(1 for e in self.entries
                    if e.state != PBEState.EMPTY and e.tenant == tenant)
 
-    def _pick_victim(self, tenant: int) -> Optional[PBEntry]:
+    def _pick_victim(self, tenant: int,
+                     leaf: int = 0) -> Optional[PBEntry]:
         """No-Empty victim under the AllocPolicy (engine twin:
         ``engine.policy.select_slot``'s dirty mask).
 
         ``victim="weighted"`` prefers the LRU Dirty entry of a tenant
-        at/over its share; falls back to the global LRU Dirty entry.
+        at/over its share; falls back to the LRU Dirty entry.  Both
+        searches see only ``leaf``'s entries (the engine scopes the
+        dirty mask with ``fabric.leaf_mask``); the share accounting
+        stays global, like the engine's ``tenant_occupancy``.
         """
         pol = self.policy.alloc
         if pol.victim == "weighted":
@@ -231,11 +265,12 @@ class PersistentBuffer:
                 if e.state != PBEState.EMPTY:
                     occ[e.tenant] = occ.get(e.tenant, 0) + 1
             hot = [e for e in self.entries if e.state == PBEState.DIRTY
+                   and e.leaf == leaf
                    and occ.get(e.tenant, 0) >= pol.share_of(
                        e.tenant, self.config.n_pbe, self.config.n_tenants)]
             if hot:
                 return min(hot, key=lambda e: e.lru)
-        return self._lru_dirty()
+        return self._lru_dirty(leaf=leaf)
 
     # --------------------------------------------------------------- drain
     def _start_drain(self, e: PBEntry, events: List[Event],
@@ -300,10 +335,15 @@ class PersistentBuffer:
                       if x.addr == addr and x.state == PBEState.DIRTY),
                      None)
             if e is not None:
-                # same-line versions travel in order, so a coalesce
-                # always installs a newer version
-                assert ver >= e.version
-                e.version, e.data, e.tenant = ver, data, owner
+                # fan-in max-version coalesce: within one leaf (and in a
+                # linear chain) same-line versions travel in order, so
+                # the arriving packet always wins; across leaves an
+                # older version can arrive *after* a newer one already
+                # sitting in the spine, and must not roll it back — the
+                # resident copy keeps its version/data/owner (engine
+                # twin: ``chain._place``'s max-version rule)
+                if ver >= e.version:
+                    e.version, e.data, e.tenant = ver, data, owner
                 self._touch(e)
                 hc["commits"] += 1
                 hc["coalesces"] += 1
@@ -350,22 +390,38 @@ class PersistentBuffer:
         """
         if self.config.scheme != Scheme.PB_RF:
             return
+        # backpressure-aware scheduling (FabricTopology.bp_high): while
+        # the downstream spine FIFO sits at/over its Dirty watermark,
+        # the whole leaf drain-down — threshold and low-water legs —
+        # defers; the Dirty entries stay put and the next persist
+        # re-evaluates (engine twin: the ``defer`` override in
+        # ``engine.policy.drain_threshold_preset``)
+        if (self._bp_high is not None and self.hops
+                and sum(1 for e in self.hops[0]
+                        if e.state == PBEState.DIRTY) >= self._bp_high):
+            return
         pol = self.policy.drain
-        empty = self.config.n_pbe - sum(
-            1 for e in self.entries if e.state != PBEState.EMPTY)
+        leaf = self._leaf_of(tenant)
+        # the drain-down runs on the trigger tenant's *leaf* switch: it
+        # sees that leaf's Dirty entries and Empty pool only (engine
+        # twin: ``leaf_act`` as the policy's slot mask)
+        empty = self._leaf_pbe[leaf] - sum(
+            1 for e in self.entries
+            if e.state != PBEState.EMPTY and e.leaf == leaf)
         if pol.per_tenant:
             # tenant-scoped drain-down: the trigger's Dirty count against
             # *its* counts (quota / fair-share anchored), draining only
             # its own LRU Dirty entries — a noisy tenant can no longer
             # evict a quiet tenant's Dirty entries.  The keep-one-free
-            # heuristic still watches the shared Empty pool.
+            # heuristic still watches the leaf's Empty pool.
             scope = tenant
             dirty = sum(1 for e in self.entries
                         if e.state == PBEState.DIRTY and e.tenant == tenant)
             thr, pre = self._tenant_counts[tenant]
         else:
             scope = None
-            dirty = self._count(PBEState.DIRTY)
+            dirty = sum(1 for e in self.entries
+                        if e.state == PBEState.DIRTY and e.leaf == leaf)
             thr, pre = (self.config.threshold_count,
                         self.config.preset_count)
         # serving-SLO tightening (engine twin: the ``tight`` override in
@@ -380,7 +436,7 @@ class PersistentBuffer:
                            pol.low_water_drains, pol.empty_slack)
         packets = []
         for _ in range(k):
-            victim = self._lru_dirty(owner=scope)
+            victim = self._lru_dirty(owner=scope, leaf=leaf)
             if victim is None:
                 break
             packets.append(self._start_drain(victim, events, tenant))
@@ -479,7 +535,8 @@ class PersistentBuffer:
                                 self._next_seq()))
             return events
 
-        existing = self._find(addr)
+        leaf = self._leaf_of(tenant)
+        existing = self._find(addr, leaf)
         if existing is not None and existing.state == PBEState.DIRTY:
             if self.config.scheme == Scheme.PB_RF:
                 # Write coalescing: newer version absorbs the older one.
@@ -525,7 +582,7 @@ class PersistentBuffer:
                                    lat_over=lat_over)
         elif occ >= self.policy.alloc.quota_of(tenant):
             if not _retry:
-                victim = self._lru_dirty(owner=tenant)
+                victim = self._lru_dirty(owner=tenant, leaf=leaf)
                 if victim is not None:
                     pkt = self._start_drain(victim, events, tenant)
                     # chain: the victim leg travels ahead of the entry
@@ -539,10 +596,10 @@ class PersistentBuffer:
         # the new version gets its own entry; the switch->PM path is FIFO,
         # so same-address drains reach PM in version order (Section IV-A
         # write order without blocking the ack).
-        slot = self._alloc_slot()
+        slot = self._alloc_slot(leaf)
         if slot is None:
             if not _retry:
-                victim = self._pick_victim(tenant)
+                victim = self._pick_victim(tenant, leaf)
                 if victim is not None:
                     pkt = self._start_drain(victim, events, tenant)
                     if self.config.n_switches >= 2:
@@ -605,7 +662,7 @@ class PersistentBuffer:
              tenant: int = 0) -> Tuple[Optional[object], Event]:
         """A read request reaches the switch; returns (data, event)."""
         ts = self._tstats(tenant)
-        e = self._find(addr)
+        e = self._find(addr, self._leaf_of(tenant))
         if e is not None and e.state in (PBEState.DIRTY, PBEState.DRAIN):
             # PBCS routes to PI; PBC serves from the buffer (V-D3).  Under
             # PB the entry is in Drain: serving from PB is still correct
@@ -712,9 +769,30 @@ class PersistentBuffer:
         return [sum(1 for e in hop if e.state != PBEState.EMPTY)
                 for hop in [self.entries, *self.hops]][:self.n_hops]
 
+    def leaf_surviving(self) -> List[int]:
+        """Live (non-Empty) hop-1 PBEs per leaf switch — the fabric's
+        per-leaf crash attribution (engine twin:
+        ``SimResult.leaf_recovery``).  Sums to ``hop_surviving()[0]``;
+        spine survivors are ``hop_surviving()[1]``."""
+        out = [0] * self._n_leaves
+        for e in self.entries:
+            if e.state != PBEState.EMPTY:
+                out[e.leaf] += 1
+        return out
+
     # ------------------------------------------------------------ invariant
     def check_invariants(self) -> None:
-        """The paper's three correctness criteria, checkable at any time."""
+        """The paper's three correctness criteria, checkable at any time.
+
+        Under a multi-leaf fabric the *global-ordering* forms are
+        genuinely weaker — two leaves are independent switches, so a
+        newer version can reach PM through one leaf while an older copy
+        of the same line is still live on another — and the affected
+        checks scope to a leaf (or are skipped where no leaf-local form
+        exists).  End-to-end safety then rests on the PM device's
+        stale-write rejection, which the property tests pin.
+        """
+        multi_leaf = self._n_leaves >= 2
         # (c) crash consistency, internal form: a Dirty entry is by
         #     definition the latest-and-only copy, so PM must never hold a
         #     version newer than a live Dirty entry.  (An older *Drain*
@@ -722,40 +800,56 @@ class PersistentBuffer:
         #     out of order; recovery re-drains it and PM rejects the stale
         #     write, so nothing is lost.)  The external form — "no acked
         #     version is ever lost" — is asserted by the property tests,
-        #     which track acks outside the buffer.
-        for e in self.entries:
-            if e.state != PBEState.DIRTY:
-                continue
-            rec = self.pm.read(e.addr)
-            if rec is not None and rec[0] > e.version:
-                raise AssertionError(
-                    f"PM holds newer version than live Dirty PB entry for "
-                    f"addr={e.addr}: pm={rec[0]} pb={e.version}")
-        # (b) write order: at most one Dirty entry per address, and every
-        #     Drain entry for an address is strictly older than its Dirty
-        #     entry (versions drain toward PM in order).
-        dirty = [e.addr for e in self.entries if e.state == PBEState.DIRTY]
+        #     which track acks outside the buffer.  With >= 2 leaves
+        #     another leaf's drain may legitimately land a newer version
+        #     in PM, so the check has no leaf-local form and is skipped.
+        if not multi_leaf:
+            for e in self.entries:
+                if e.state != PBEState.DIRTY:
+                    continue
+                rec = self.pm.read(e.addr)
+                if rec is not None and rec[0] > e.version:
+                    raise AssertionError(
+                        f"PM holds newer version than live Dirty PB entry "
+                        f"for addr={e.addr}: pm={rec[0]} pb={e.version}")
+        # (b) write order: at most one Dirty entry per (leaf, address),
+        #     and every Drain entry for an address is strictly older than
+        #     its *same-leaf* Dirty entry (versions drain toward PM in
+        #     order within each leaf's FIFO; across leaves no order is
+        #     promised).
+        dirty = [(e.leaf, e.addr) for e in self.entries
+                 if e.state == PBEState.DIRTY]
         if len(dirty) != len(set(dirty)):
-            raise AssertionError("duplicate Dirty PB entries for one address")
-        newest_dirty = {e.addr: e.version for e in self.entries
+            raise AssertionError(
+                "duplicate Dirty PB entries for one (leaf, address)")
+        newest_dirty = {(e.leaf, e.addr): e.version for e in self.entries
                         if e.state == PBEState.DIRTY}
         for e in self.entries:
             if (e.state == PBEState.DRAIN
-                    and e.addr in newest_dirty
-                    and e.version >= newest_dirty[e.addr]):
+                    and (e.leaf, e.addr) in newest_dirty
+                    and e.version >= newest_dirty[(e.leaf, e.addr)]):
                 raise AssertionError(
-                    f"Drain entry not older than Dirty for addr={e.addr}")
+                    f"Drain entry not older than Dirty for addr={e.addr} "
+                    f"on leaf {e.leaf}")
         # Switch-chain forms of (b) and (c): per hop at most one Dirty
         # entry per address; versions strictly decrease with depth (an
         # entry only moves down the chain, and coalescing keeps the
         # newest at the shallowest hop holding the line); PM never holds
-        # a version newer than any live Dirty entry at any hop.
-        newest_by_addr: Dict[int, int] = dict(newest_dirty)
+        # a version newer than any live Dirty entry at any hop.  The
+        # per-hop uniqueness holds under fan-in too (the spine's
+        # max-version coalesce keeps one Dirty per address), but the
+        # cross-layer orderings do not — a slow leaf's old Dirty line
+        # may coexist with a newer spine/PM copy — so those scope to
+        # single-leaf topologies.
+        newest_by_addr: Dict[int, int] = {
+            a: v for (_lf, a), v in newest_dirty.items()}
         for s, hop in enumerate(self.hops, start=2):
             hop_dirty = [e.addr for e in hop if e.state == PBEState.DIRTY]
             if len(hop_dirty) != len(set(hop_dirty)):
                 raise AssertionError(
                     f"duplicate Dirty entries for one address at hop {s}")
+            if multi_leaf:
+                continue
             for e in hop:
                 if e.state != PBEState.DIRTY:
                     continue

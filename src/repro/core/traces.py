@@ -569,6 +569,30 @@ def tenant_ids(lengths, n_tenants: int) -> np.ndarray:
     return np.minimum(tid, n_tenants - 1).astype(np.int32)
 
 
+def leaf_placement(n_tenants: int, n_leaves: int,
+                   mode: str = "packed") -> tuple:
+    """Tenant -> leaf placement vector for a fan-out fabric.
+
+    ``"packed"`` fills leaves with contiguous balanced tenant blocks
+    (tenant ``t`` on leaf ``floor(t * n_leaves / n_tenants)``) —
+    neighbours share a leaf switch, maximizing per-leaf contention and
+    leaving far leaves idle.  ``"spread"`` round-robins tenants across
+    the leaves — per-leaf load is even, spine fan-in pressure is
+    maximal.  The two are the benchmark sweep's placement axis
+    (``benchmarks/fig_fabric.py``); both are valid
+    ``FabricTopology.placement`` values for any ``n_tenants >=
+    n_leaves`` and degenerate to all-zeros at one leaf.
+    """
+    if n_tenants < 1 or n_leaves < 1:
+        raise ValueError("leaf_placement wants n_tenants, n_leaves >= 1")
+    if mode == "packed":
+        return tuple((t * n_leaves) // n_tenants
+                     for t in range(n_tenants))
+    if mode == "spread":
+        return tuple(t % n_leaves for t in range(n_tenants))
+    raise ValueError(f"unknown placement mode: {mode!r}")
+
+
 def compose_tenants(tenant_traces: List[Trace], *,
                     addr_stride: int | None = None,
                     shared_lines: int = 0,

@@ -42,7 +42,7 @@ def _counts_from(stats, scheme, victim_stalls):
 
 def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
                   n_tenants=1, policy=None, n_switches=1,
-                  pbe_per_hop=None):
+                  pbe_per_hop=None, fabric=None):
     """Replay schedule slots ``<= crash_slot``, then crash + recover.
 
     Acks are delivered promptly (all in-flight drains complete between
@@ -58,12 +58,17 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
     with the *same* policy on its config.  ``n_switches`` /
     ``pbe_per_hop`` select a chained pooling topology: the returned
     ``hop_surviving`` / ``hop_counts`` rows must match the engine's
-    per-hop recovery attribution and telemetry exactly.
+    per-hop recovery attribution and telemetry exactly.  ``fabric`` (a
+    ``FabricTopology``) selects a fan-out tree instead: it forces the
+    derived 2-hop shape (leaves + spine), and the returned
+    ``leaf_surviving`` row must match the engine's per-leaf recovery
+    attribution (``SimResult.leaf_recovery``).
     """
     pb = PersistentBuffer(PCSConfig(
         scheme=scheme, n_pbe=n_pbe, n_tenants=n_tenants, policy=policy,
-        n_switches=n_switches,
-        pbe_per_hop=(None if scheme == Scheme.NOPB else pbe_per_hop)))
+        n_switches=n_switches, fabric=fabric,
+        pbe_per_hop=(None if scheme == Scheme.NOPB or fabric is not None
+                     else pbe_per_hop)))
     # SLO hint for the untimed oracle: the differential only exercises
     # *extreme* latency targets (<= 1 ns: every timed ack is over; huge:
     # none is), so the per-persist over/under outcome is decidable
@@ -72,6 +77,13 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
         else None
     lat_over = lat_target is not None and lat_target <= 1.0
     aver = collections.defaultdict(int)   # per-address issued versions
+    # under a multi-leaf fabric the hop-1 PB is leaf-partitioned: a read
+    # from a *different* leaf than the newest persist cannot be forwarded
+    # the leaf-private copy — it legitimately serves PM's durable version.
+    # Track the newest persist's leaf so the read contract can tell the
+    # two regimes apart (same-leaf reads keep the strict newest rule).
+    multi_leaf = fabric is not None and fabric.n_leaves >= 2
+    last_leaf = {}                        # addr -> leaf of newest persist
     pending = []
     victim_stalls = collections.defaultdict(int)
     reads = []
@@ -83,6 +95,8 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
         tenant = int(core_tenant[core]) if core_tenant is not None else 0
         if op == int(Op.PERSIST):
             aver[addr] += 1
+            if multi_leaf:
+                last_leaf[addr] = fabric.placement[tenant]
             events = pb.persist(addr, (addr, aver[addr]), tenant=tenant,
                                 lat_over=lat_over)
             victim_stalls[tenant] += sum(
@@ -91,7 +105,9 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
                         if e.kind == EventKind.DRAIN_SENT]
         else:
             data, _ev = pb.read(addr, tenant=tenant)
-            reads.append((addr, data, aver[addr]))
+            same_leaf = (not multi_leaf or addr not in last_leaf
+                         or last_leaf[addr] == fabric.placement[tenant])
+            reads.append((addr, data, aver[addr], same_leaf))
         while pending:
             a, v = pending.pop(0)
             events = pb.pm_ack(a, v)
@@ -118,6 +134,7 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
             if e.state.name != "EMPTY":
                 tenant_surviving[e.tenant] += 1
     hop_surviving = pb.hop_surviving()
+    leaf_surviving = pb.leaf_surviving()
     hop_counts = [dict(hc) for hc in pb.hop_counts]
     pb.crash()
     pb.recover()
@@ -131,7 +148,8 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
     return dict(durable=durable, counts=counts, reads=reads,
                 issued=dict(aver), tenant_counts=tenant_counts,
                 tenant_surviving=tenant_surviving,
-                hop_surviving=hop_surviving, hop_counts=hop_counts)
+                hop_surviving=hop_surviving, hop_counts=hop_counts,
+                leaf_surviving=leaf_surviving)
 
 
 def assert_cell_matches(res, oracle, n_addrs, label=""):
@@ -177,6 +195,20 @@ def assert_cell_matches(res, oracle, n_addrs, label=""):
             assert got_row == want_h, (label, "hop", h + 1, got_row,
                                        want_h)
 
+    # per-leaf recovery attribution over a fan-out fabric: the engine's
+    # leaf_recovery vector (non-None iff >= 2 leaves) must equal the
+    # oracle's per-leaf survivor counts, which partition hop 1's total
+    if res.leaf_recovery is not None:
+        got_ls = [int(x) for x in res.leaf_recovery]
+        assert got_ls == oracle["leaf_surviving"], (
+            label, "per-leaf survivors", got_ls, oracle["leaf_surviving"])
+        assert sum(got_ls) == oracle["hop_surviving"][0], (
+            label, "leaf/hop partition", got_ls, oracle["hop_surviving"])
+    else:
+        assert len(oracle["leaf_surviving"]) <= 1, (
+            label, "engine dropped leaf attribution",
+            oracle["leaf_surviving"])
+
     # per-tenant accounting over the shared switch must agree row by row
     if res.n_tenants > 1:
         t_rows = res.tenant_results()
@@ -205,12 +237,23 @@ def assert_cell_matches(res, oracle, n_addrs, label=""):
         assert got[a] <= issued.get(a, 0), (label, "resurrected", a)
 
     # read forwarding: every value served was the newest at read time
-    # and is one recovery preserves (never a discarded version)
-    for addr, data, newest in oracle["reads"]:
+    # and is one recovery preserves (never a discarded version).  Under
+    # a multi-leaf fabric a cross-leaf read (the newest persist landed
+    # on another leaf's private PB window) legitimately misses the
+    # reader's leaf and serves a durable-or-older version instead — but
+    # it must never invent a version (> issued) and never serve one
+    # recovery discards.
+    for addr, data, newest, same_leaf in oracle["reads"]:
         if newest == 0:
             assert data is None, (label, "read invented data", addr)
             continue
-        assert data is not None and data == (addr, newest), (
-            label, "stale read", addr, data, newest)
-        assert durable.get(addr, 0) >= data[1], (
-            label, "forwarded value discarded by recovery", addr)
+        if same_leaf:
+            assert data is not None and data == (addr, newest), (
+                label, "stale read", addr, data, newest)
+        elif data is not None:
+            assert data[0] == addr and 1 <= data[1] <= newest, (
+                label, "cross-leaf read invented a version", addr, data,
+                newest)
+        if data is not None:
+            assert durable.get(addr, 0) >= data[1], (
+                label, "forwarded value discarded by recovery", addr)

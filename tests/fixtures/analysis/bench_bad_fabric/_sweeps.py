@@ -1,0 +1,5 @@
+"""Sweep-registry fixture: the fabric sweep is NOT registered."""
+
+SWEEPS = (
+    "chain_sweep",
+)

@@ -162,6 +162,18 @@ def test_sweeps_fixture():
     assert len(findings) == 3
 
 
+def test_sweeps_fixture_unregistered_fabric():
+    """A figure script emitting the full fabric_sweep_* telemetry
+    without registering the sweep must produce exactly one
+    sweep-unregistered finding — the guard that keeps fabric_sweep
+    under check_compiles' one-XLA-program watch."""
+    findings = sweeps.check(bench_dir=FIX / "bench_bad_fabric")
+    assert [f.rule for f in findings] == ["sweep-unregistered"]
+    assert "'fabric_sweep'" in findings[0].message
+    assert findings[0].file == rel(
+        FIX / "bench_bad_fabric" / "fig_fabric.py")
+
+
 # ----------------------------------------------------- comment grammar
 def test_marker_and_exemption_parsing():
     lines = ["x = 1  # lint: mirror(g-1)",

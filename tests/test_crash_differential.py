@@ -33,8 +33,9 @@ import numpy as np
 import pytest
 
 from _crash_driver import assert_cell_matches, oracle_replay
-from repro.core import (AllocPolicy, DrainPolicy, PBPolicy, PCSConfig,
-                        Scheme, fuzz_crash_ns, fuzz_trace, tenant_ids)
+from repro.core import (AllocPolicy, DrainPolicy, FabricTopology, PBPolicy,
+                        PCSConfig, Scheme, fuzz_crash_ns, fuzz_trace,
+                        leaf_placement, tenant_ids)
 from repro.core.engine import compile_count, simulate, simulate_grid
 
 try:
@@ -319,6 +320,135 @@ def test_differential_matrix_switch_chains_big():
                                    n_tenants=n_tenants, n_switches=2)
             assert_cell_matches(t_cells[i][j], oracle, N_ADDRS,
                                 label=("CHAIN-T2", i, scheme.name, k))
+
+
+def test_differential_matrix_fabric_one_compile():
+    """Fan-out fabric topologies (leaves + spine) vs the leaf-aware
+    oracle: the {trace x scheme x topology x placement x crash-point}
+    matrix — plain 2-hop chain, 1-leaf fabric, 2-leaf packed/spread,
+    2-leaf with a finite backpressure watermark and a 4-leaf tree, all
+    with the same total leaf capacity — must be ONE XLA program, with
+    exact agreement on the durable state, the per-tenant rows, the
+    per-hop rows AND the per-leaf recovery attribution
+    (``SimResult.leaf_recovery``) at every crash point.  Pins two
+    identities on top: the 1-leaf fabric column is bit-identical to the
+    explicit chain column, and the macro-stepped grid is bit-identical
+    to the macro-off control."""
+    n_tenants, n_cores = 4, 4
+    seeds = list(range(3))
+    traces, scheds = zip(*[
+        fuzz_trace(s, n_cores=n_cores, n_slots=N_SLOTS, n_addrs=N_ADDRS,
+                   n_tenants=n_tenants, p_persist=0.7)
+        for s in seeds])
+    # all topologies keep sum(leaf_pbe) == 8 and spine_pbe == 4, so the
+    # chain control below is the exact 1-leaf/None lowering target
+    fabrics = [
+        None,                                          # explicit chain
+        FabricTopology(1, (8,), 4, (0,) * n_tenants),  # 1-leaf == chain
+        FabricTopology(2, (4, 4), 4, leaf_placement(n_tenants, 2,
+                                                    "packed")),
+        FabricTopology(2, (4, 4), 4, leaf_placement(n_tenants, 2,
+                                                    "spread")),
+        FabricTopology(2, (4, 4), 4, leaf_placement(n_tenants, 2,
+                                                    "packed"),
+                       bp_high=2.0),
+        FabricTopology(4, (2, 2, 2, 2), 4, leaf_placement(n_tenants, 4,
+                                                          "spread")),
+    ]
+    schemes = [Scheme.PB, Scheme.PB_RF]   # NOPB + fabric raises
+    crash_slots = (0, 11, 23, 36, N_SLOTS)
+    plan = [(s, k, fab) for s in schemes for k in crash_slots
+            for fab in fabrics]
+    configs = [
+        (PCSConfig(scheme=s, n_pbe=8, n_cores=n_cores,
+                   n_tenants=n_tenants, n_switches=2,
+                   pbe_per_hop=(8, 4)).with_crash(fuzz_crash_ns(k))
+         if fab is None else
+         PCSConfig(scheme=s, n_cores=n_cores, n_tenants=n_tenants,
+                   fabric=fab).with_crash(fuzz_crash_ns(k)))
+        for s, k, fab in plan]
+    c0 = compile_count()
+    cells = simulate_grid(list(traces), configs, max_pbe=8,
+                          bucket=BUCKET, track_addrs=N_ADDRS)
+    assert compile_count() - c0 == 1, (
+        "the mixed {trace x scheme x topology x placement x crash-point}"
+        " fabric matrix must be one XLA program")
+    off = simulate_grid(list(traces), configs, max_pbe=8,
+                        bucket=BUCKET, track_addrs=N_ADDRS, macro=False)
+    for i, (tr, sched) in enumerate(zip(traces, scheds)):
+        core_tenant = tenant_ids(tr.lengths, n_tenants)
+        for j, (scheme, k, fab) in enumerate(plan):
+            if fab is None:
+                oracle = oracle_replay(sched, k, scheme, 8,
+                                       core_tenant=core_tenant,
+                                       n_tenants=n_tenants,
+                                       n_switches=2, pbe_per_hop=(8, 4))
+            else:
+                oracle = oracle_replay(sched, k, scheme, 8,
+                                       core_tenant=core_tenant,
+                                       n_tenants=n_tenants, fabric=fab)
+            label = ("FAB", seeds[i], scheme.name, k,
+                     None if fab is None else
+                     (fab.n_leaves, fab.placement, fab.bp_high))
+            assert_cell_matches(cells[i][j], oracle, N_ADDRS, label=label)
+            _assert_simresults_identical(cells[i][j], off[i][j], label)
+            # the engine must attribute recovery per leaf exactly when
+            # the topology has >= 2 leaves, and never otherwise
+            want_leaf = fab is not None and fab.n_leaves >= 2
+            assert (cells[i][j].leaf_recovery is not None) == want_leaf, \
+                label
+    # plan is fabric-innermost: each group of len(fabrics) shares one
+    # (scheme, crash) pair, so chain (index 0) and the 1-leaf fabric
+    # (index 1) must be bit-identical cells
+    for i in range(len(seeds)):
+        for j in range(0, len(plan), len(fabrics)):
+            _assert_simresults_identical(
+                cells[i][j], cells[i][j + 1],
+                ("FAB-1leaf-vs-chain", seeds[i], plan[j][0].name,
+                 plan[j][1]))
+
+
+def test_fabric_validation_rejects_malformed():
+    """Construction-time validation (no silent mis-lowering): malformed
+    fabric descriptors, fabric/chain conflicts and grids stacked with
+    too-small static bounds must all raise — never truncate."""
+    from repro.core.engine.state import scalars_from_config
+
+    with pytest.raises(ValueError, match="leaf_pbe"):
+        FabricTopology(n_leaves=2, leaf_pbe=(4,), spine_pbe=4,
+                       placement=(0, 1))
+    with pytest.raises(ValueError, match="placement"):
+        FabricTopology(n_leaves=2, leaf_pbe=(4, 4), spine_pbe=4,
+                       placement=(0, 2))
+    with pytest.raises(ValueError, match="bp_high"):
+        FabricTopology(n_leaves=1, leaf_pbe=(8,), spine_pbe=4,
+                       placement=(0,), bp_high=2.0)
+    fab2 = FabricTopology(2, (4, 4), 4, (0, 1))
+    with pytest.raises(ValueError, match="NOPB"):
+        PCSConfig(scheme=Scheme.NOPB, n_cores=2, n_tenants=2, fabric=fab2)
+    with pytest.raises(ValueError, match="one leaf id per tenant"):
+        PCSConfig(scheme=Scheme.PB_RF, n_cores=4, n_tenants=3,
+                  fabric=fab2)
+    with pytest.raises(ValueError, match="fabric owns it"):
+        PCSConfig(scheme=Scheme.PB_RF, n_cores=2, n_tenants=2,
+                  fabric=fab2, n_switches=2, pbe_per_hop=(5, 4))
+    with pytest.raises(ValueError, match="two-level tree"):
+        PCSConfig(scheme=Scheme.PB_RF, n_cores=2, n_tenants=2,
+                  fabric=fab2, n_switches=3)
+    # the derived lowering is visible: 2 hops, (sum(leaf_pbe), spine)
+    cfg = PCSConfig(scheme=Scheme.PB_RF, n_cores=2, n_tenants=2,
+                    fabric=fab2)
+    assert (cfg.n_switches, cfg.pbe_per_hop, cfg.n_pbe) == (2, (8, 4), 8)
+    # static grid bounds reject instead of truncating (a dropped deep
+    # row / leaf would lower a different topology with the right shape)
+    with pytest.raises(ValueError, match="leaf bound"):
+        scalars_from_config(cfg, n_tenants_max=2, n_deep_max=1,
+                            n_leaves_max=1)
+    deep = PCSConfig(scheme=Scheme.PB_RF, n_switches=3,
+                     pbe_per_hop=(2, 2, 2))
+    with pytest.raises(ValueError, match="deep-row bound"):
+        scalars_from_config(deep, n_tenants_max=1, n_deep_max=1,
+                            n_leaves_max=1)
 
 
 def _assert_simresults_identical(a, b, label):
