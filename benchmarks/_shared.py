@@ -53,6 +53,34 @@ def trace(name: str):
     return _traces[name]
 
 
+def timed_sweep(run_fn):
+    """Honest cold/warm timing split for a one-program sweep.
+
+    Runs ``run_fn`` twice: the cold call pays the XLA compile(s) plus
+    one execution, the warm call re-executes the already-compiled
+    program.  Returns ``(cold_result, metrics)`` where ``wall_s`` is
+    the warm (steady-state run) wall clock and ``compile_s`` the
+    cold-minus-warm difference — BENCH_engine.json records compile
+    latency *next to* the run component instead of inside it, so a
+    compile-cache hit cannot mask a runtime regression and a compiler
+    regression shows up in ``*_compile_s`` rather than vanishing into
+    run noise (``compare.py`` gates only the ``*_wall_s`` keys).
+    """
+    c0, t0 = compile_count(), time.time()
+    out = run_fn()
+    cold = time.time() - t0
+    t1 = time.time()
+    run_fn()
+    warm = time.time() - t1
+    return out, dict(
+        wall_s=round(warm, 3),
+        compile_s=round(max(cold - warm, 0.0), 3),
+        compiles=compile_count() - c0,
+        macro_hit=round(last_macro_hit_rate(), 4),
+        macro_aborts=last_macro_abort_reasons(),
+    )
+
+
 def _ensure_grid() -> None:
     """Run the full mixed-scheme {workload x scheme} grid once."""
     if grid_metrics:
@@ -60,14 +88,15 @@ def _ensure_grid() -> None:
     names = list(WORKLOADS)
     traces = [trace(n) for n in names]
     configs = [PCSConfig(scheme=s) for s in SCHEMES]
-    c0, t0 = compile_count(), time.time()
-    cells = simulate_grid(traces, configs, bucket=bucket())
+    cells, m = timed_sweep(
+        lambda: simulate_grid(traces, configs, bucket=bucket()))
     grid_metrics.update(
-        grid_wall_s=round(time.time() - t0, 3),
-        grid_compiles=compile_count() - c0,
+        grid_wall_s=m["wall_s"],
+        grid_compile_s=m["compile_s"],
+        grid_compiles=m["compiles"],
         grid_cells=len(names) * len(SCHEMES),
-        grid_macro_hit=round(last_macro_hit_rate(), 4),
-        grid_macro_aborts=last_macro_abort_reasons(),
+        grid_macro_hit=m["macro_hit"],
+        grid_macro_aborts=m["macro_aborts"],
     )
     for i, n in enumerate(names):
         for j, s in enumerate(SCHEMES):

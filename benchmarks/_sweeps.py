@@ -1,7 +1,9 @@
 """Single source of truth for the benchmark sweep telemetry names.
 
-Every one-program sweep records four keys into BENCH_engine.json —
-``<sweep>_wall_s``, ``<sweep>_compiles``, ``<sweep>_cells`` and
+Every one-program sweep records five keys into BENCH_engine.json —
+``<sweep>_wall_s`` (warm run), ``<sweep>_compile_s`` (XLA compile
+latency, recorded separately so a compile-cache hit can't mask a run
+regression), ``<sweep>_compiles``, ``<sweep>_cells`` and
 ``<sweep>_macro_hit``.  ``check_compiles`` derives its GUARDED /
 MACRO_KEYS tuples from this list, and the ``repro.analysis`` sweeps
 pass cross-checks it against the ``sweep_metrics.update(...)`` sites
@@ -24,10 +26,19 @@ SWEEPS: Tuple[str, ...] = (
     "qos_sweep",       # mixed {scheme x policy} (fig_qos)
     "slo_sweep",       # {offered-load x scheme x policy} (fig_slo)
     "fabric_sweep",    # {scheme x leaves x placement x bp} (fig_fabric)
+    "dynamic_sweep",   # {rate x strategy x crash} epoched (fig_dynamic)
 )
 
 # per-sweep telemetry key suffixes every sweep must emit
-SUFFIXES: Tuple[str, ...] = ("wall_s", "compiles", "cells", "macro_hit")
+SUFFIXES: Tuple[str, ...] = ("wall_s", "compile_s", "compiles", "cells",
+                             "macro_hit")
+
+# macro abort-reason names, one per row of the engine's one-hot abort
+# vector.  Duplicated from engine.macro.MACRO_ABORT_REASONS so this
+# module stays a leaf (no engine import); tests/test_epoch_schedules.py
+# pins the two tuples equal.
+ABORT_REASONS: Tuple[str, ...] = ("window", "fabric", "deep",
+                                  "epoch_boundary", "interleave", "guard")
 
 
 def guarded() -> Tuple[str, ...]:

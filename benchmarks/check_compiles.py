@@ -5,8 +5,8 @@ crash-point x tenant-count x policy x switch-depth} grid lowering to a
 single XLA compilation — is a load-bearing perf invariant (DESIGN.md
 §3).  ``make ci`` runs this after ``bench-smoke``: if the shared grid,
 the recovery sweep, the tenant sweep, the mixed-policy QoS sweep, the
-offered-load SLO sweep or the switch-chain depth sweep ever compiles
-more than once (e.g.
+offered-load SLO sweep, the fabric sweep, the epoched dynamic sweep or
+the switch-chain depth sweep ever compiles more than once (e.g.
 someone turns a traced scalar — the chain depth, a per-hop capacity or
 a lowered PBPolicy field — back into a static), the build fails loudly
 instead of the trajectory silently absorbing a multi-compile
@@ -29,7 +29,7 @@ from __future__ import annotations
 import json
 import sys
 
-from benchmarks._sweeps import abort_keys, guarded, macro_keys
+from benchmarks._sweeps import ABORT_REASONS, abort_keys, guarded, macro_keys
 
 # all tuples derive from the one sweep-name list in benchmarks._sweeps;
 # repro.analysis cross-checks that list against the keys the figure
@@ -38,7 +38,9 @@ GUARDED = guarded()
 
 # macro-stepping telemetry: every sweep must record its hit rate and
 # its abort-reason counters (why candidate windows fell back to the
-# scalar path: window / fabric / deep / interleave / guard)
+# scalar path: window / fabric / deep / epoch_boundary / interleave /
+# guard); the counter dict must carry EXACTLY that reason set, so a new
+# abort reason (or a dropped one) can't ship without its telemetry
 MACRO_KEYS = macro_keys()
 ABORT_KEYS = abort_keys()
 
@@ -67,11 +69,12 @@ def check(report: dict) -> list:
         if v is None:
             problems.append(f"{key}: missing from the report (macro "
                             "abort-reason telemetry was dropped)")
-        elif (not isinstance(v, dict) or not v
+        elif (not isinstance(v, dict) or set(v) != set(ABORT_REASONS)
               or any(not isinstance(n, int) or n < 0
                      for n in v.values())):
             problems.append(f"{key} = {v!r}: abort counters must be a "
-                            "non-empty {reason: count >= 0} dict")
+                            "{reason: count >= 0} dict over exactly "
+                            f"{sorted(ABORT_REASONS)}")
     return problems
 
 

@@ -24,14 +24,10 @@ costs a single XLA compilation (``chain_sweep_compiles`` is guarded by
 from __future__ import annotations
 
 import math
-import time
 
 import numpy as np
 
 from repro.core import Op, PCSConfig, Scheme, Trace, simulate_grid
-from repro.core.engine import (compile_count, last_macro_abort_reasons,
-                               last_macro_hit_rate)
-
 from benchmarks import _shared
 from benchmarks._shared import emit
 
@@ -93,14 +89,16 @@ def run(depths=None) -> list:
             labels.append((key, n_sw, True))
             configs.append(PCSConfig(scheme=scheme, n_switches=n_sw)
                            .with_crash(crash_at))
-    c0, t0 = compile_count(), time.time()
-    cells = simulate_grid([tr], configs, bucket=_shared.bucket())[0]
+    cells, m = _shared.timed_sweep(
+        lambda: simulate_grid([tr], configs, bucket=_shared.bucket()))
+    cells = cells[0]
     sweep_metrics.update(
-        chain_sweep_wall_s=round(time.time() - t0, 3),
-        chain_sweep_compiles=compile_count() - c0,
+        chain_sweep_wall_s=m["wall_s"],
+        chain_sweep_compile_s=m["compile_s"],
+        chain_sweep_compiles=m["compiles"],
         chain_sweep_cells=len(configs),
-        chain_sweep_macro_hit=round(last_macro_hit_rate(), 4),
-        chain_sweep_macro_aborts=last_macro_abort_reasons(),
+        chain_sweep_macro_hit=m["macro_hit"],
+        chain_sweep_macro_aborts=m["macro_aborts"],
     )
     base = next(r.persist_lat_ns for (k, n, c), r in zip(labels, cells)
                 if k == "nopb" and n == min(depths) and not c)

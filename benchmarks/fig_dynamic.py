@@ -1,0 +1,129 @@
+"""Dynamic re-provisioning figure: epoched schedules under diurnal load.
+
+Three provisioning strategies for the same 2-leaf PB_RF pool serving
+four tenants whose offered load oscillates (the diurnal arrival process
+from the SLO work): a **static** baseline (fixed quotas, fixed
+placement), a **scheduled quota step** (tenant 0's share grows at the
+mid-run shift while the cold tenants shrink), and a **mid-run
+migration** (the tenant->leaf placement map flips at the same instant,
+moving every tenant onto the other leaf).  Epoch boundaries, per-epoch
+quota rows and per-epoch placement rows are all traced operands
+(DESIGN.md §7), so the whole {arrival-rate x strategy x crash} matrix
+is ONE ``simulate_grid`` call — ``dynamic_sweep_compiles`` is guarded
+by ``benchmarks/check_compiles.py``.
+
+Rows: P50/P95/P99 persist tails per {rate x strategy} (does the quota
+step / migration buy tail latency under the load swing?), plus per-leaf
+recovered-entry attribution on the crashed replicas — the migration
+column's crash lands *after* the placement flip, so its surviving
+entries recover split across BOTH leaves (drain-at-issue contract:
+entries persist where they were issued), which is the observable
+difference vs the static column.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import (AllocPolicy, DiurnalArrivals, FabricTopology,
+                        PBPolicy, PCSConfig, Schedule, Scheme,
+                        leaf_placement, make_offered_load_trace,
+                        simulate_grid)
+
+from benchmarks import _shared
+
+WORKLOAD = "raytrace"
+N_TENANTS = 4
+N_CORES = 4                        # one core per tenant
+LEAF_PBE = (4, 4)
+SPINE_PBE = 4
+
+# offered load axis, Mops/s per core (time-average; the diurnal process
+# swings around it)
+RATES_FULL = (0.5, 2.0, 8.0)
+RATES_SMOKE = (0.5, 8.0)
+
+# telemetry of the {rate x strategy x crash} dynamic sweep
+sweep_metrics: dict = {}
+
+
+def _configs(bound_ns: float, crash_ns: float):
+    """(label, config) rows: three strategies x {live, crashed}."""
+    place0 = leaf_placement(N_TENANTS, 2, "packed")
+    place1 = tuple(1 - p for p in place0)          # hot-leaf flip
+    quota0 = (2, 2, 2, 2)
+    quota1 = (4, 2, 1, 1)          # tenant 0 heats up at the shift
+    fab_static = FabricTopology(2, LEAF_PBE, SPINE_PBE, place0)
+    fab_migrate = FabricTopology(
+        2, LEAF_PBE, SPINE_PBE, Schedule((bound_ns,), (place0, place1)))
+    strategies = (
+        ("static",
+         PBPolicy(alloc=AllocPolicy(tenant_quota=quota0)), fab_static),
+        ("quota_sched",
+         PBPolicy(alloc=AllocPolicy(
+             tenant_quota=Schedule((bound_ns,), (quota0, quota1)))),
+         fab_static),
+        ("migrate",
+         PBPolicy(alloc=AllocPolicy(tenant_quota=quota0)), fab_migrate),
+    )
+    labels, configs = [], []
+    for key, pol, fab in strategies:
+        for crashed in (False, True):
+            labels.append((key, crashed))
+            cfg = PCSConfig(scheme=Scheme.PB_RF, n_cores=N_CORES,
+                            n_tenants=N_TENANTS, policy=pol, fabric=fab)
+            configs.append(cfg.with_crash(crash_ns) if crashed else cfg)
+    return labels, configs
+
+
+def run() -> list:
+    rates = RATES_SMOKE if _shared.SMOKE else RATES_FULL
+    budget = max(_shared.BUDGET // 4, 150)
+    traces = [make_offered_load_trace(
+                  WORKLOAD, DiurnalArrivals(r), n_cores=N_CORES,
+                  persist_budget=budget)
+              for r in rates]
+    # the schedule boundary sits at the midpoint of the longest trace's
+    # nominal op span (the diurnal shift) and the crash replicas die at
+    # 3/4 — past the flip, so migration recovery shows both leaves.
+    # Both instants are traced operands: they never split the program.
+    span = max(float(np.max(tr.gaps.sum(axis=1))) for tr in traces)
+    labels, configs = _configs(bound_ns=0.5 * span, crash_ns=0.75 * span)
+    cells, m = _shared.timed_sweep(
+        lambda: simulate_grid(traces, configs, bucket=_shared.bucket()))
+    sweep_metrics.update(
+        dynamic_sweep_wall_s=m["wall_s"],
+        dynamic_sweep_compile_s=m["compile_s"],
+        dynamic_sweep_compiles=m["compiles"],
+        dynamic_sweep_cells=len(traces) * len(configs),
+        dynamic_sweep_macro_hit=m["macro_hit"],
+        dynamic_sweep_macro_aborts=m["macro_aborts"],
+    )
+    rows = []
+    for rate, row in zip(rates, cells):
+        for (key, crashed), r in zip(labels, row):
+            tag = f"{key}_{rate:g}"
+            if not crashed:
+                if math.isnan(r.persist_lat_p50):
+                    continue        # zero-traffic cell: no percentiles
+                rows.append((f"dyn_p50_{tag}",
+                             round(r.persist_lat_p50, 1), "ns"))
+                rows.append((f"dyn_p95_{tag}",
+                             round(r.persist_lat_p95, 1), "ns"))
+                rows.append((f"dyn_p99_{tag}",
+                             round(r.persist_lat_p99, 1), "ns"))
+            elif r.leaf_recovery is not None:
+                # issue-time leaf attribution of the crash survivors
+                for i, n in enumerate(r.leaf_recovery):
+                    rows.append((f"dyn_recov_{tag}_leaf{i}", int(n),
+                                 "surviving_pbes"))
+    return rows
+
+
+def main() -> None:
+    _shared.emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -20,14 +20,10 @@ chain anchor: it is bit-identical to the linear 2-hop chain
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core import (FabricTopology, Op, PCSConfig, Scheme, Trace,
                         leaf_placement, simulate_grid)
-from repro.core.engine import (compile_count, last_macro_abort_reasons,
-                               last_macro_hit_rate)
 
 from benchmarks import _shared
 from benchmarks._shared import emit
@@ -103,14 +99,16 @@ def run() -> list:
     for lab, cfg in list(zip(labels, configs)):
         labels.append(lab[:-1] + (True,))
         configs.append(cfg.with_crash(crash_at))
-    c0, t0 = compile_count(), time.time()
-    cells = simulate_grid([tr], configs, bucket=_shared.bucket())[0]
+    cells, m = _shared.timed_sweep(
+        lambda: simulate_grid([tr], configs, bucket=_shared.bucket()))
+    cells = cells[0]
     sweep_metrics.update(
-        fabric_sweep_wall_s=round(time.time() - t0, 3),
-        fabric_sweep_compiles=compile_count() - c0,
+        fabric_sweep_wall_s=m["wall_s"],
+        fabric_sweep_compile_s=m["compile_s"],
+        fabric_sweep_compiles=m["compiles"],
         fabric_sweep_cells=len(configs),
-        fabric_sweep_macro_hit=round(last_macro_hit_rate(), 4),
-        fabric_sweep_macro_aborts=last_macro_abort_reasons(),
+        fabric_sweep_macro_hit=m["macro_hit"],
+        fabric_sweep_macro_aborts=m["macro_aborts"],
     )
     rows = []
     for (key, nl, mode, bp, crashed), r in zip(labels, cells):

@@ -20,12 +20,9 @@ programs (the ``qos_sweep_compiles`` guard in ``make ci`` pins this).
 from __future__ import annotations
 
 import math
-import time
 
 from repro.core import (AllocPolicy, DrainPolicy, PBPolicy, PCSConfig,
                         Scheme, make_mixed_tenant_trace, simulate_grid)
-from repro.core.engine import (compile_count, last_macro_abort_reasons,
-                               last_macro_hit_rate)
 from repro.core.engine.state import S_PBCQ_SUM, S_PERSIST_CNT
 
 from benchmarks import _shared
@@ -75,14 +72,15 @@ def run() -> list:
                 scheme=scheme, n_tenants=N_TENANTS,
                 n_cores=N_TENANTS * CORES_PER_TENANT, policy=pol))
             keys.append((skey, pkey))
-    c0, t0 = compile_count(), time.time()
-    cells = simulate_grid(traces, configs, bucket=_shared.bucket())
+    cells, m = _shared.timed_sweep(
+        lambda: simulate_grid(traces, configs, bucket=_shared.bucket()))
     sweep_metrics.update(
-        qos_sweep_wall_s=round(time.time() - t0, 3),
-        qos_sweep_compiles=compile_count() - c0,
+        qos_sweep_wall_s=m["wall_s"],
+        qos_sweep_compile_s=m["compile_s"],
+        qos_sweep_compiles=m["compiles"],
         qos_sweep_cells=len(traces) * len(configs),
-        qos_sweep_macro_hit=round(last_macro_hit_rate(), 4),
-        qos_sweep_macro_aborts=last_macro_abort_reasons(),
+        qos_sweep_macro_hit=m["macro_hit"],
+        qos_sweep_macro_aborts=m["macro_aborts"],
     )
     rows = []
     for (mkey, _, _), row in zip(MIXES, cells):

@@ -24,11 +24,9 @@ first switch), and all of them are durable.
 from __future__ import annotations
 
 import math
-import time
 
 from repro.core import PCSConfig, Scheme, make_tenant_trace, simulate_grid
-from repro.core.engine import (compile_count, last_macro_abort_reasons,
-                               last_macro_hit_rate, simulate_cells)
+from repro.core.engine import simulate_cells
 
 from benchmarks import _shared
 from benchmarks._shared import emit, trace
@@ -101,14 +99,16 @@ def run() -> list:
                 scheme=scheme, n_tenants=TENANTS,
                 n_cores=TENANTS * TENANT_CORES).with_crash(f * t_end))
             keys.append(("tenants", key, f))
-    c0, t0 = compile_count(), time.time()
-    cells = simulate_cells(cell_traces, configs, bucket=_shared.bucket())
+    cells, m = _shared.timed_sweep(
+        lambda: simulate_cells(cell_traces, configs,
+                               bucket=_shared.bucket()))
     sweep_metrics.update(
-        recovery_sweep_wall_s=round(time.time() - t0, 3),
-        recovery_sweep_compiles=compile_count() - c0,
+        recovery_sweep_wall_s=m["wall_s"],
+        recovery_sweep_compile_s=m["compile_s"],
+        recovery_sweep_compiles=m["compiles"],
         recovery_sweep_cells=len(configs),
-        recovery_sweep_macro_hit=round(last_macro_hit_rate(), 4),
-        recovery_sweep_macro_aborts=last_macro_abort_reasons(),
+        recovery_sweep_macro_hit=m["macro_hit"],
+        recovery_sweep_macro_aborts=m["macro_aborts"],
     )
     rows = []
     for (anchor, key, f), r in zip(keys, cells):

@@ -26,13 +26,10 @@ compose with the traced config axes for free (the
 from __future__ import annotations
 
 import math
-import time
 
 from repro.core import (BurstyArrivals, DrainPolicy, PBPolicy, PCSConfig,
                         PoissonArrivals, Scheme, make_offered_load_trace,
                         simulate_grid)
-from repro.core.engine import (compile_count, last_macro_abort_reasons,
-                               last_macro_hit_rate)
 
 from benchmarks import _shared
 
@@ -80,14 +77,15 @@ def run() -> list:
         persist_budget=budget))
     configs = [PCSConfig(scheme=s, n_cores=N_CORES, policy=pol)
                for _, s, pol in CONFIGS]
-    c0, t0 = compile_count(), time.time()
-    cells = simulate_grid(traces, configs, bucket=_shared.bucket())
+    cells, m = _shared.timed_sweep(
+        lambda: simulate_grid(traces, configs, bucket=_shared.bucket()))
     sweep_metrics.update(
-        slo_sweep_wall_s=round(time.time() - t0, 3),
-        slo_sweep_compiles=compile_count() - c0,
+        slo_sweep_wall_s=m["wall_s"],
+        slo_sweep_compile_s=m["compile_s"],
+        slo_sweep_compiles=m["compiles"],
         slo_sweep_cells=len(traces) * len(configs),
-        slo_sweep_macro_hit=round(last_macro_hit_rate(), 4),
-        slo_sweep_macro_aborts=last_macro_abort_reasons(),
+        slo_sweep_macro_hit=m["macro_hit"],
+        slo_sweep_macro_aborts=m["macro_aborts"],
     )
     rows = []
     p99_series = {ckey: [] for ckey, _, _ in CONFIGS}

@@ -25,11 +25,9 @@ Reported per (scheme, T):
 from __future__ import annotations
 
 import math
-import time
 
 from repro.core import PCSConfig, Scheme, make_tenant_trace
-from repro.core.engine import (compile_count, last_macro_abort_reasons,
-                               last_macro_hit_rate, simulate_cells)
+from repro.core.engine import simulate_cells
 from repro.core.engine.state import S_PBCQ_SUM, S_PERSIST_CNT
 
 from benchmarks import _shared
@@ -83,14 +81,16 @@ def run() -> list:
             scheme=scheme, n_tenants=t_hot,
             n_cores=t_hot * CORES_PER_TENANT))
         keys.append((key, t_hot, True))
-    c0, t0 = compile_count(), time.time()
-    cells = simulate_cells(cell_traces, configs, bucket=_shared.bucket())
+    cells, m = _shared.timed_sweep(
+        lambda: simulate_cells(cell_traces, configs,
+                               bucket=_shared.bucket()))
     sweep_metrics.update(
-        tenant_sweep_wall_s=round(time.time() - t0, 3),
-        tenant_sweep_compiles=compile_count() - c0,
+        tenant_sweep_wall_s=m["wall_s"],
+        tenant_sweep_compile_s=m["compile_s"],
+        tenant_sweep_compiles=m["compiles"],
         tenant_sweep_cells=len(configs),
-        tenant_sweep_macro_hit=round(last_macro_hit_rate(), 4),
-        tenant_sweep_macro_aborts=last_macro_abort_reasons(),
+        tenant_sweep_macro_hit=m["macro_hit"],
+        tenant_sweep_macro_aborts=m["macro_aborts"],
     )
     rows = []
     for (key, t_cfg, hot), r in zip(keys, cells):

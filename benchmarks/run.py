@@ -7,7 +7,9 @@
 ``--smoke`` runs each figure script on a tiny trace and writes
 machine-readable ``BENCH_engine.json`` (per-figure wall time, the shared
 grid's wall time and XLA compile count) so the engine perf trajectory is
-tracked across PRs.
+tracked across PRs.  Each sweep's wall time is the WARM re-run
+(``*_wall_s``); XLA compile latency is recorded separately as
+``*_compile_s`` so a compile-cache hit can't mask a run regression.
 """
 from __future__ import annotations
 
@@ -35,13 +37,13 @@ def main() -> None:
     # imported late so smoke mode is set before any trace is built
     from benchmarks import (ckpt_tier_bench, fig1_switch_depth, fig5_speedup,
                             fig6_latency, fig7_rf_rates, fig8_pbe_sweep,
-                            fig_fabric, fig_qos, fig_recovery, fig_slo,
-                            fig_tenants, kernel_bench)
+                            fig_dynamic, fig_fabric, fig_qos, fig_recovery,
+                            fig_slo, fig_tenants, kernel_bench)
     from repro.core.engine import compile_count
 
     figures = (fig1_switch_depth, fig5_speedup, fig6_latency, fig7_rf_rates,
                fig8_pbe_sweep, fig_recovery, fig_tenants, fig_qos, fig_slo,
-               fig_fabric)
+               fig_fabric, fig_dynamic)
     extras = () if args.smoke else (ckpt_tier_bench, kernel_bench)
 
     rows, timings = [], {}
@@ -82,6 +84,10 @@ def main() -> None:
         "smoke": args.smoke,
         "budget": _shared.BUDGET,
         "bucket": _shared.bucket(),
+        # measurement methodology marker: *_wall_s is the WARM re-run,
+        # *_compile_s the cold-warm delta (benchmarks.compare refuses to
+        # ratio reports measured under a different convention)
+        "timing": "cold_warm_split",
         "total_wall_s": round(time.time() - t_start, 2),
         "compile_count": compile_count(),
         "figures_wall_s": timings,
@@ -102,6 +108,8 @@ def main() -> None:
         **fig_slo.sweep_metrics,
         # telemetry of the {scheme x leaves x placement x bp} fabric sweep
         **fig_fabric.sweep_metrics,
+        # telemetry of the epoched {rate x strategy x crash} dynamic sweep
+        **fig_dynamic.sweep_metrics,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

@@ -24,23 +24,35 @@ import numpy as np
 def _example_inputs():
     from repro.core.engine.state import scalars_from_config
     from repro.core.params import (AllocPolicy, DrainPolicy, FabricTopology,
-                                   Op, PBPolicy, PCSConfig, Scheme,
-                                   MACRO_KMAX)
+                                   Op, PBPolicy, PCSConfig, Schedule,
+                                   Scheme, MACRO_KMAX)
     from repro.core.traces import plan_runs
 
     # the 2-leaf fabric (finite backpressure watermark) keeps the fabric
     # operands (n_leaves/leaf_of_t/leaf_base/bp_high) live under DCE and
-    # derives the same (8, 4) hop capacities as the old explicit chain
+    # derives the same (8, 4) hop capacities as the old explicit chain;
+    # every schedulable knob is a 2-EPOCH Schedule (one shared boundary)
+    # so DCE proves the epoch_bounds vector and the stacked per-epoch
+    # rows feed the results, not just epoch 0's slice
+    bound = 2.5e4
     cfg = PCSConfig(
         scheme=Scheme.PB_RF, n_cores=4,
         n_tenants=2, crash_at_ns=5.0e4,
         fabric=FabricTopology(n_leaves=2, leaf_pbe=(4, 4), spine_pbe=4,
-                              placement=(0, 1), bp_high=3.0),
+                              placement=Schedule((bound,),
+                                                 ((0, 1), (1, 0))),
+                              bp_high=3.0),
         policy=PBPolicy(
-            drain=DrainPolicy(per_tenant=True, latency_target_ns=450.0),
-            alloc=AllocPolicy(victim="weighted", tenant_quota=(4, 4))))
+            drain=DrainPolicy(
+                per_tenant=True,
+                threshold=Schedule((bound,), (0.75, 0.5)),
+                preset=0.25,
+                latency_target_ns=Schedule((bound,), (450.0, 300.0))),
+            alloc=AllocPolicy(victim="weighted",
+                              tenant_quota=Schedule((bound,),
+                                                    ((4, 4), (3, 5))))))
     sc = scalars_from_config(cfg, n_tenants_max=2, n_deep_max=1,
-                             n_leaves_max=2)
+                             n_leaves_max=2, n_epochs_max=2)
 
     C, L = 4, 16 + MACRO_KMAX
     kinds = [Op.PERSIST, Op.PM_READ, Op.DRAM_READ, Op.DRAM_WRITE,

@@ -59,6 +59,16 @@ SWEEPABLE_FIELDS: Dict[str, Tuple[str, ...]] = {
     # (engine.fabric) plus the spine backpressure watermark; a fabric
     # also forces pbe_per_hop, so the deep_* keys co-vary via that field
     "PCSConfig.fabric": ("n_leaves", "leaf_of_t", "leaf_base", "bp_high"),
+    # epoched schedules (params.Schedule): the shared boundary vector
+    # lowers to the one epoch_bounds operand; each epoch's values lower
+    # through the wrapped knob into the EPOCH_KEYS rows the per-op
+    # selection (engine.step.resolve_epoch_sc) indexes.  The exemplar
+    # cell is 2-epoch, so DCE proves both the boundary vector and the
+    # stacked rows stay live.
+    "Schedule.boundaries_ns": ("epoch_bounds",),
+    "Schedule.values": ("threshold_count", "preset_count", "quota",
+                        "share", "t_threshold", "t_preset", "deep_thr",
+                        "deep_pre", "lat_target", "leaf_of_t"),
 }
 
 # Statically-shaped / composite fields: changing one legitimately
@@ -144,10 +154,43 @@ def _field_anchor(cls, field: str) -> Tuple[str, int]:
     return file, start + (line - 1) if line else start
 
 
-def check_engine() -> List[Finding]:
-    """Run the retrace pass against the real engine cell."""
+def check_registered_fields(classes: Sequence[type],
+                            sweepable: Optional[Dict[str, Tuple[str, ...]]]
+                            = None,
+                            static: Optional[Dict[str, str]] = None
+                            ) -> List[Finding]:
+    """Every dataclass field of ``classes`` is registered one way.
+
+    The declaration-side half of the retrace contract, standalone so
+    the fixture corpus can run it against a params-like module: a field
+    missing from both registries — the classic "added a schedule knob,
+    forgot to declare how it lowers" slip — fires
+    ``retrace-unregistered-field``.
+    """
     import dataclasses
 
+    sweepable = SWEEPABLE_FIELDS if sweepable is None else sweepable
+    static = STATIC_FIELDS if static is None else static
+    findings: List[Finding] = []
+    for cls in classes:
+        for f in dataclasses.fields(cls):
+            qual = f"{cls.__name__}.{f.name}"
+            if qual in sweepable or qual in static:
+                continue
+            file, line = _field_anchor(cls, f.name)
+            findings.append(Finding(
+                file=file, line=line, rule="retrace-unregistered-field",
+                message=(f"{qual} is neither registered as sweepable "
+                         "(SWEEPABLE_FIELDS) nor declared static "
+                         "(STATIC_FIELDS) in repro.analysis.retrace"),
+                suggestion="register the field with the sc keys it "
+                           "lowers to, or declare it static with a "
+                           "reason"))
+    return findings
+
+
+def check_engine() -> List[Finding]:
+    """Run the retrace pass against the real engine cell."""
     from repro.analysis._engine import scalar_keys, trace_engine
     from repro.core import params
 
@@ -170,22 +213,10 @@ def check_engine() -> List[Finding]:
                     suggestion="lower the field in scalars_from_config "
                                "or fix the registry entry"))
 
-    # 2. every policy/config dataclass field is registered one way
-    for cls_name in ("PCSConfig", "DrainPolicy", "AllocPolicy"):
-        cls = getattr(params, cls_name)
-        for f in dataclasses.fields(cls):
-            qual = f"{cls_name}.{f.name}"
-            if qual in SWEEPABLE_FIELDS or qual in STATIC_FIELDS:
-                continue
-            file, line = _field_anchor(cls, f.name)
-            findings.append(Finding(
-                file=file, line=line, rule="retrace-unregistered-field",
-                message=(f"{qual} is neither registered as sweepable "
-                         "(SWEEPABLE_FIELDS) nor declared static "
-                         "(STATIC_FIELDS) in repro.analysis.retrace"),
-                suggestion="register the field with the sc keys it "
-                           "lowers to, or declare it static with a "
-                           "reason"))
+    # 2. every policy/config/schedule dataclass field is registered
+    findings += check_registered_fields(
+        [getattr(params, n)
+         for n in ("PCSConfig", "DrainPolicy", "AllocPolicy", "Schedule")])
 
     # 3. the traced program consumes every lowered operand
     closed, names = trace_engine(return_state=False)

@@ -11,8 +11,9 @@ after a full run.  This pass AST-parses both sides and diffs them:
   * ``sweep-unregistered`` — a ``sweep_metrics.update(...)`` site emits
     a base name missing from the registry;
   * ``sweep-stale`` — the registry names a sweep no script emits;
-  * ``sweep-missing-key`` — a sweep emits only some of the four
-    required suffixes (wall_s / compiles / cells / macro_hit).
+  * ``sweep-missing-key`` — a sweep emits only some of the five
+    required suffixes (wall_s / compile_s / compiles / cells /
+    macro_hit).
 
 ``_shared.py`` is the one special case: it records ``grid_*`` into
 ``grid_metrics`` and ``run.py`` re-prefixes those to ``shared_grid_*``,
@@ -28,7 +29,7 @@ from repro.analysis.common import Finding, rel, REPO_ROOT
 
 _BENCH = REPO_ROOT / "benchmarks"
 _REGISTRY = "_sweeps.py"
-_SUFFIXES = ("wall_s", "compiles", "cells", "macro_hit")
+_SUFFIXES = ("wall_s", "compile_s", "compiles", "cells", "macro_hit")
 
 
 def _registered(bench_dir: Path) -> Tuple[Dict[str, int], int]:

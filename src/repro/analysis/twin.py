@@ -136,7 +136,12 @@ def check_policy_fields(
         oracle_paths = [_SEMANTICS]
     if fields is None:
         fields = {}
-        for cls in (params.DrainPolicy, params.AllocPolicy):
+        # Schedule rides with the policies: both sides must consume its
+        # boundary vector (engine: the epoch_bounds lowering via
+        # PCSConfig.epoch_boundaries; oracle: epoch_at) AND its values
+        # (both through params.resolve_epoch / epoch_value)
+        for cls in (params.DrainPolicy, params.AllocPolicy,
+                    params.Schedule):
             _, lines = read_source(_PARAMS)
             for f in dataclasses.fields(cls):
                 line = find_line(lines, rf"^\s*{f.name}\s*[:=]") or 1

@@ -12,7 +12,7 @@ from repro.core.engine import (SimResult, simulate, simulate_grid,
                                simulate_sweep)
 from repro.core.params import (AllocPolicy, DrainPolicy, FabricTopology,
                                LatencyProfile, Op, PBEState, PBPolicy,
-                               PCSConfig, Scheme)
+                               PCSConfig, Schedule, Scheme)
 from repro.core.semantics import (Event, EventKind, PersistentBuffer,
                                   PersistentMemory)
 from repro.core.traces import (BurstyArrivals, DiurnalArrivals,
@@ -25,7 +25,7 @@ from repro.core.traces import (BurstyArrivals, DiurnalArrivals,
 
 __all__ = [
     "AllocPolicy", "DrainPolicy", "FabricTopology", "LatencyProfile",
-    "Op", "PBEState", "PBPolicy", "PCSConfig", "Scheme",
+    "Op", "PBEState", "PBPolicy", "PCSConfig", "Schedule", "Scheme",
     "Event", "EventKind", "PersistentBuffer", "PersistentMemory",
     "SimResult", "simulate", "simulate_grid", "simulate_sweep",
     "BurstyArrivals", "DiurnalArrivals", "PoissonArrivals",

@@ -120,10 +120,17 @@ def _stack_configs(configs: Sequence[PCSConfig], max_pbe: int | None,
     # layer out of the traced program
     n_leaves = max((c.fabric.n_leaves if c.fabric is not None else 1
                     for c in configs), default=1)
+    # the epoch axis is a static shape shared grid-wide: a schedule-free
+    # grid lowers the flat single-epoch dict (byte-identical program),
+    # while any scheduled config promotes every config's EPOCH_KEYS rows
+    # to the grid-wide epoch bound (static configs broadcast their one
+    # row; short schedules clamp to their last epoch)
+    n_epochs = max((c.n_epochs for c in configs), default=1)
     # policy lowering pads its per-tenant vectors to the grid-wide
     # n_tenants_max, so mixed tenant counts / policies stack into one
     # (K,) or (K, T) array per scalar and share the program
-    rows = [scalars_from_config(c, n_tenants_max, n_deep, n_leaves)
+    rows = [scalars_from_config(c, n_tenants_max, n_deep, n_leaves,
+                                n_epochs_max=n_epochs)
             for c in configs]
     sc = {k: np.asarray([r[k] for r in rows], np.float64) for k in rows[0]}
     schemes = np.asarray([int(c.scheme) for c in configs], np.int32)

@@ -52,16 +52,22 @@ from repro.core.params import Op
 # *first* failing gate, in this order.  ``window`` = no eligible >= 2-op
 # run at the cursor; ``fabric`` = a multi-leaf fabric cell (the
 # mini-interpreter models neither leaf scoping nor spine backpressure);
-# ``deep`` = a >= 2-switch chain cell; ``interleave`` = another core
-# issues inside the window; ``guard`` = the in-window traced guard
-# conjunction cleared (PB hit, coalesce, drain-down fired, ...).  The
-# vector returned by :func:`macro_step` is summed across steps/cells by
-# ``engine.grid`` and surfaced via ``last_macro_abort_reasons()``.
-MACRO_ABORT_REASONS = ("window", "fabric", "deep", "interleave", "guard")
+# ``deep`` = a >= 2-switch chain cell; ``epoch_boundary`` = the window
+# straddles an epoch boundary of a scheduled config (the
+# mini-interpreter replays every op under the head op's epoch, so a
+# mid-window epoch switch must fall back to the slot-at-a-time path);
+# ``interleave`` = another core issues inside the window; ``guard`` =
+# the in-window traced guard conjunction cleared (PB hit, coalesce,
+# drain-down fired, ...).  The vector returned by :func:`macro_step` is
+# summed across steps/cells by ``engine.grid`` and surfaced via
+# ``last_macro_abort_reasons()``.
+MACRO_ABORT_REASONS = ("window", "fabric", "deep", "epoch_boundary",
+                       "interleave", "guard")
 
 
 def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
-               valid, live, t_issue, i, *, kmax: int):
+               valid, live, t_issue, i, *, kmax: int,
+               next_epoch_bound=None):
     """Candidate macro execution of up to ``kmax`` ops of core ``ctx.c``.
 
     Returns ``(st_macro, use_macro, k_adv, abort_vec)``: the candidate
@@ -71,6 +77,16 @@ def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
     (all-zero when the window committed or no live candidate existed).
     The caller selects ``st_macro`` over the slot-step result and
     advances the cursor by ``k_adv`` when ``use_macro`` is set.
+
+    ``next_epoch_bound`` is the first epoch boundary strictly after the
+    head op's issue time in an epoch-scheduled grid (``INF`` inside the
+    last epoch), or ``None`` for single-epoch grids.  ``ctx.sc`` is the
+    epoch-resolved view at the head op's issue time; the window commits
+    only when its last issue time still precedes the boundary, i.e.
+    every replayed op provably shares the head op's epoch (the
+    ``epoch_boundary`` abort reason counts the windows this rejects).
+    Dead runs are exempt: dead ops touch no policy state, so an epoch
+    switch inside a collapsed post-crash stream changes nothing.
     """
     sc = ctx.sc
     c = ctx.c
@@ -311,8 +327,15 @@ def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
     # break by index, so equality must abort too)
     others_min = jnp.min(tsel.at[c].set(INF))
     no_ilv = others_min > t_last
-    live_ok = (valid & live & (k_live >= 2) & fab_ok & deep_ok & guard
-               & no_ilv)
+    # epoch-scheduled grids: the whole window must live in the head
+    # op's epoch (boundary instants belong to the *next* epoch, so the
+    # last issue time must be strictly below the next boundary)
+    if next_epoch_bound is None:
+        ep_ok = jnp.asarray(True)
+    else:
+        ep_ok = t_last < next_epoch_bound
+    live_ok = (valid & live & (k_live >= 2) & fab_ok & deep_ok & ep_ok
+               & guard & no_ilv)
 
     # prioritized abort attribution (MACRO_ABORT_REASONS order): each
     # live candidate that failed to commit counts exactly one reason
@@ -322,8 +345,9 @@ def macro_step(ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
         cand & (k_live < 2),
         elig & ~fab_ok,
         elig & fab_ok & ~deep_ok,
-        elig & fab_ok & deep_ok & ~no_ilv,
-        elig & fab_ok & deep_ok & no_ilv & ~guard,
+        elig & fab_ok & deep_ok & ~ep_ok,
+        elig & fab_ok & deep_ok & ep_ok & ~no_ilv,
+        elig & fab_ok & deep_ok & ep_ok & no_ilv & ~guard,
     ]).astype(jnp.int32)
 
     if NL > 0:

@@ -29,10 +29,21 @@ from typing import Dict, NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.params import (PBEState, PCSConfig, hop_drain_counts,
-                               tenant_drain_counts)
+from repro.core.params import (PBEState, PCSConfig, epoch_value,
+                               hop_drain_counts, preset_count, resolve_epoch,
+                               tenant_drain_counts, threshold_count)
 
 INF = 1e30
+
+# Epoched-schedule lowering (DESIGN §7): the sc keys that gain a leading
+# (E,) epoch axis when any config in the grid carries a Schedule.  The
+# engine resolves them per op at its issue clock (``step.resolve_epoch_sc``)
+# before any handler/policy/macro code consumes them, so every downstream
+# expression — including the mirror-marked sites — sees the same shapes
+# as a static grid.  Everything else in the sc dict is epoch-invariant.
+EPOCH_KEYS = ("threshold_count", "preset_count", "quota", "share",
+              "t_threshold", "t_preset", "deep_thr", "deep_pre",
+              "lat_target", "leaf_of_t")
 
 # statistics vector layout
 S_PERSIST_SUM = 0
@@ -450,7 +461,8 @@ def result_from_stats(runtime: float, stats: np.ndarray, *,
 def scalars_from_config(cfg: PCSConfig,
                         n_tenants_max: int | None = None,
                         n_deep_max: int = 0,
-                        n_leaves_max: int = 1
+                        n_leaves_max: int = 1,
+                        n_epochs_max: int = 1
                         ) -> Dict[str, "float | np.ndarray"]:
     """Lower one config to the dict of traced latency/policy scalars.
 
@@ -462,10 +474,29 @@ def scalars_from_config(cfg: PCSConfig,
     policy} grid stays one XLA program.  Rows past the config's own
     tenant count are padding: quota/share are INF (never over) and the
     drain counts fall back to the global values (never selected).
+
+    Epoched schedules (DESIGN §7): when the grid-wide epoch bound
+    ``n_epochs_max`` is > 1, every :data:`EPOCH_KEYS` entry gains a
+    leading ``(E,)`` axis — row ``e`` is the knob resolved during epoch
+    ``e`` (``params.resolve_epoch``; static knobs broadcast, schedules
+    shorter than the bound hold their final value) — plus the config's
+    shared ``epoch_bounds`` vector, INF-padded like ``leaf_base`` so a
+    static config inside a scheduled grid never leaves epoch 0.  At the
+    default bound of 1 the dict is byte-identical to the pre-schedule
+    lowering (no ``epoch_bounds`` key, no epoch axes), so existing
+    grids recompile nothing.
     """
     lat = cfg.latency
     pol = cfg.policy
     T = max(n_tenants_max or cfg.n_tenants, 1)
+    E1 = max(n_epochs_max, 1)
+    if cfg.n_epochs > E1:
+        # silently clamping epochs would run a scheduled config under a
+        # truncated schedule — right-shaped, quietly wrong results
+        raise ValueError(
+            f"config has {cfg.n_epochs} epochs but the grid's static "
+            f"epoch bound is {E1} (n_epochs_max={n_epochs_max}); "
+            "stack the grid with the true max epoch count")
     # per-hop chain lowering: row j describes switch j+2 (deep hops only;
     # hop 1 keeps the legacy scalars).  Rows past the config's own depth
     # lower to size 0 — structurally inactive in a mixed-depth grid.
@@ -479,17 +510,13 @@ def scalars_from_config(cfg: PCSConfig,
             f"static deep-row bound is {D1} (n_deep_max={n_deep_max}); "
             "stack the grid with the true max depth")
     deep_pbe = np.zeros((D1,), np.float64)
-    deep_thr = np.ones((D1,), np.float64)
-    deep_pre = np.zeros((D1,), np.float64)
     # per-hop CACTI-scaled tag/data lookup latencies: a small deep hop
     # must not be billed at hop 1's capacity-scaled cost (rows past the
     # config's depth keep a finite filler; they are never selected)
     deep_tag = np.full((D1,), lat.pb_tag_ns, np.float64)
     deep_data = np.full((D1,), lat.pb_data_ns, np.float64)
-    for j, (n_h, (thr_h, pre_h)) in enumerate(
-            zip(hop_pbes[1:], hop_drain_counts(pol, hop_pbes)[1:])):
+    for j, n_h in enumerate(hop_pbes[1:]):
         deep_pbe[j] = float(n_h)
-        deep_thr[j], deep_pre[j] = float(thr_h), float(pre_h)
         deep_tag[j] = lat.pb_tag_ns_for(n_h)
         deep_data[j] = lat.pb_data_ns_for(n_h)
     # ---- fabric (fan-out) lowering -----------------------------------
@@ -506,36 +533,69 @@ def scalars_from_config(cfg: PCSConfig,
             f"config has {fab.n_leaves} leaves but the grid's static "
             f"leaf bound is {NL1} (n_leaves_max={n_leaves_max}); "
             "stack the grid with the true max leaf count")
-    leaf_of_t = np.zeros((T,), np.float64)
     leaf_base = np.full((NL1,), INF, np.float64)
     leaf_base[0] = 0.0
     bp_high = INF
     if fab is not None:
-        for t, lf in enumerate(fab.placement):
-            leaf_of_t[t] = float(lf)
         for i, b in enumerate(fab.leaf_bases()):
             leaf_base[i] = float(b)
         if fab.bp_high is not None:
             bp_high = min(float(fab.bp_high), INF)
-    quota = np.full((T,), INF, np.float64)
-    share = np.full((T,), INF, np.float64)
-    t_thr = np.full((T,), float(cfg.threshold_count), np.float64)
-    t_pre = np.full((T,), float(cfg.preset_count), np.float64)
-    for t, (thr, pre) in enumerate(
-            tenant_drain_counts(pol, cfg.n_pbe, cfg.n_tenants)):
-        quota[t] = min(pol.alloc.quota_of(t), INF)
-        share[t] = min(pol.alloc.share_of(t, cfg.n_pbe, cfg.n_tenants), INF)
-        t_thr[t], t_pre[t] = float(thr), float(pre)
-    return dict(
+
+    def rows_at(epoch: int) -> Dict[str, "float | np.ndarray"]:
+        """The epoch-dependent operand rows (every :data:`EPOCH_KEYS`
+        entry), resolved during ``epoch``.  Epoch 0 of a static config
+        reproduces the pre-schedule lowering bit-for-bit."""
+        pol_e = resolve_epoch(pol, epoch)
+        thr_cnt = float(threshold_count(cfg.n_pbe, pol_e.drain.threshold))
+        pre_cnt = float(preset_count(cfg.n_pbe, pol_e.drain.preset))
+        deep_thr = np.ones((D1,), np.float64)
+        deep_pre = np.zeros((D1,), np.float64)
+        for j, (thr_h, pre_h) in enumerate(
+                hop_drain_counts(pol_e, hop_pbes)[1:]):
+            deep_thr[j], deep_pre[j] = float(thr_h), float(pre_h)
+        leaf_of_t = np.zeros((T,), np.float64)
+        if fab is not None:
+            for t, lf in enumerate(epoch_value(fab.placement, epoch)):
+                leaf_of_t[t] = float(lf)
+        quota = np.full((T,), INF, np.float64)
+        share = np.full((T,), INF, np.float64)
+        t_thr = np.full((T,), thr_cnt, np.float64)
+        t_pre = np.full((T,), pre_cnt, np.float64)
+        for t, (thr, pre) in enumerate(
+                tenant_drain_counts(pol_e, cfg.n_pbe, cfg.n_tenants)):
+            quota[t] = min(pol_e.alloc.quota_of(t), INF)
+            share[t] = min(pol_e.alloc.share_of(t, cfg.n_pbe,
+                                                cfg.n_tenants), INF)
+            t_thr[t], t_pre[t] = float(thr), float(pre)
+        lt = pol_e.drain.latency_target_ns
+        return dict(
+            threshold_count=thr_cnt,
+            preset_count=pre_cnt,
+            quota=quota,
+            share=share,
+            t_threshold=t_thr,
+            t_preset=t_pre,
+            deep_thr=deep_thr,        # (D1,) switch j+2's threshold count
+            deep_pre=deep_pre,        # (D1,) switch j+2's preset count
+            # None lowers to INF: no persist latency ever exceeds it,
+            # the running-over counter stays 0 and the tight predicate
+            # is always false — bit-exact with the default policy.
+            lat_target=min(lt if lt is not None else INF, INF),
+            leaf_of_t=leaf_of_t,      # (T,)   tenant t's leaf switch
+        )
+
+    ep0 = rows_at(0)
+    sc = dict(
         n_pbe=float(cfg.n_pbe),
         n_tenants=float(cfg.n_tenants),
-        threshold_count=float(cfg.threshold_count),
-        preset_count=float(cfg.preset_count),
+        threshold_count=ep0["threshold_count"],
+        preset_count=ep0["preset_count"],
         # declarative PBPolicy lowering (scalars + per-tenant vectors)
-        quota=quota,
-        share=share,
-        t_threshold=t_thr,
-        t_preset=t_pre,
+        quota=ep0["quota"],
+        share=ep0["share"],
+        t_threshold=ep0["t_threshold"],
+        t_preset=ep0["t_preset"],
         drain_scope=1.0 if pol.drain.per_tenant else 0.0,
         victim_weighted=1.0 if pol.alloc.victim == "weighted" else 0.0,
         low_water=float(pol.drain.low_water_drains),
@@ -566,24 +626,38 @@ def scalars_from_config(cfg: PCSConfig,
         hop_ns=lat.hop_ns(),
         link_ns=lat.link_ns,
         deep_pbe=deep_pbe,        # (D1,) switch j+2's PBE capacity
-        deep_thr=deep_thr,        # (D1,) switch j+2's drain threshold count
-        deep_pre=deep_pre,        # (D1,) switch j+2's drain preset count
+        deep_thr=ep0["deep_thr"],
+        deep_pre=ep0["deep_pre"],
         deep_tag=deep_tag,        # (D1,) switch j+2's tag lookup latency
         deep_data=deep_data,      # (D1,) switch j+2's data access latency
         # ---- fabric lowering (fan-out trees over the chain) -----------
         n_leaves=float(fab.n_leaves) if fab is not None else 1.0,
-        leaf_of_t=leaf_of_t,      # (T,)   tenant t's leaf switch
+        leaf_of_t=ep0["leaf_of_t"],
         leaf_base=leaf_base,      # (NL1,) first hop-1 slot of each leaf
         bp_high=bp_high,          # spine Dirty occupancy that defers
                                   # leaf drain-down (INF = never)
         # ---- serving-SLO drain tightening (DrainPolicy.latency_target_ns)
-        # None lowers to INF: no persist latency ever exceeds it, the
-        # running-over counter stays 0 and the tight predicate is always
-        # false — bit-exact with the default policy.
-        lat_target=min(pol.drain.latency_target_ns
-                       if pol.drain.latency_target_ns is not None else INF,
-                       INF),
+        lat_target=ep0["lat_target"],
         lat_tol=float(pol.drain.latency_tol),
         # power-loss instant; INF (the engine's finite infinity) = never
         crash_at=min(cfg.crash_at_ns, INF),
     )
+    if E1 == 1:
+        # static grid: byte-identical to the pre-schedule lowering — no
+        # epoch axes, no epoch_bounds operand, nothing recompiles
+        return sc
+    # ---- epoched-schedule lowering (DESIGN §7) -----------------------
+    # Every EPOCH_KEYS entry gains a leading (E,) axis; the config's
+    # shared boundary vector is INF-padded to the grid bound, so a
+    # static (or shorter-schedule) config can never be selected past
+    # its real epochs — INF <= t_issue is false for every finite clock.
+    rows = [ep0] + [rows_at(e) for e in range(1, E1)]
+    for k in EPOCH_KEYS:
+        sc[k] = np.stack([np.asarray(r[k], np.float64) for r in rows])
+    eb = np.full((E1 - 1,), INF, np.float64)
+    for i, b in enumerate(cfg.epoch_boundaries):
+        eb[i] = min(float(b), INF)
+    sc.update(
+        epoch_bounds=eb,          # (E-1,) shared epoch-boundary vector
+    )
+    return sc

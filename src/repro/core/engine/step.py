@@ -48,7 +48,8 @@ import jax.numpy as jnp
 
 from repro.core.engine.handlers import HANDLERS, StepCtx, recovery_snapshot
 from repro.core.engine.macro import MACRO_ABORT_REASONS, macro_step
-from repro.core.engine.state import INF, MachineState, init_state
+from repro.core.engine.state import (EPOCH_KEYS, INF, MachineState,
+                                     init_state)
 from repro.core.params import MACRO_KMAX, Op
 
 # Incremented inside `scan_cell` at trace time: one tick per XLA program
@@ -66,6 +67,36 @@ CHUNK = 128
 def compile_count() -> int:
     """Number of engine XLA programs traced/compiled so far this process."""
     return _COMPILES[0]
+
+
+def resolve_epoch_sc(sc, t_issue):
+    """Select the active epoch's operand rows at an op's issue time.
+
+    Grids carrying a schedule axis stack the :data:`EPOCH_KEYS` rows of
+    ``sc`` with a leading ``(E,)`` epoch dimension plus one shared
+    ``(E - 1,)`` ``epoch_bounds`` vector (``state.scalars_from_config``).
+    The active epoch is ``#{b : b <= t_issue}`` — the boundary instant
+    belongs to the *new* epoch, mirroring the crash gate's
+    ``t_issue <= crash_at`` convention — and unused boundary slots are
+    padded with ``INF``, which can never be ``<=`` a finite issue time.
+
+    Returns ``(sc_op, next_bound)``: an sc view whose scheduled keys are
+    indexed down to the old per-epoch shapes (so the handlers, policy,
+    chain, fabric and macro layers consume them verbatim), and the next
+    boundary strictly after ``t_issue`` (``INF`` in the last epoch) for
+    the macro window's epoch-consistency guard.  The branch is decided
+    Python-statically on dict membership: single-epoch grids lower the
+    flat dict and return it unchanged with ``next_bound=None``, keeping
+    their XLA program byte-identical to a schedule-free engine.
+    """
+    if "epoch_bounds" not in sc:
+        return sc, None
+    eb = sc["epoch_bounds"]
+    ep = jnp.sum((eb <= t_issue).astype(jnp.int32))
+    sc_op = {k: (v[ep] if k in EPOCH_KEYS else v)
+             for k, v in sc.items() if k != "epoch_bounds"}
+    next_bound = jnp.min(jnp.where(eb > t_issue, eb, INF))
+    return sc_op, next_bound
 
 
 def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
@@ -148,10 +179,13 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
         live = valid & (t_issue <= sc["crash_at"])
         op = jnp.where(live, ops[c, i], int(Op.COMPUTE))
         t = jnp.where(live, t_issue, st.clock[c])
+        # epoched schedules: every layer below sees the operand rows of
+        # the epoch active at this op's *issue* time
+        sc_op, next_bound = resolve_epoch_sc(sc, t_issue)
 
         tid_c = tids[c]
         n_live_t = live_per_tenant[tid_c]
-        ctx = StepCtx(c=c, t=t, addr=addrs[c, i], scheme=scheme, sc=sc,
+        ctx = StepCtx(c=c, t=t, addr=addrs[c, i], scheme=scheme, sc=sc_op,
                       slot_ids=slot_ids, slot_active=slot_active,
                       tenant=tid_c, tids=tids, n_live_t=n_live_t,
                       n_banks=pm_banks, n_track=n_track)
@@ -161,7 +195,8 @@ def scan_cell(ops, addrs, gaps, lengths, scheme, sc, *,
         if use_macro:
             st_m, took, k_m, ab_vec = macro_step(
                 ctx, st, ops, addrs, gaps64, lengths, mlen, tsel,
-                valid, live, t_issue, i, kmax=MACRO_KMAX)
+                valid, live, t_issue, i, kmax=MACRO_KMAX,
+                next_epoch_bound=next_bound)
             st2 = jax.tree_util.tree_map(
                 lambda a, b: jnp.where(took, a, b), st_m, st2)
             adv = jnp.where(took, k_m, 1)

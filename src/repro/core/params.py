@@ -93,6 +93,121 @@ def rf_drain_count(dirty: int, empty: int, threshold: int, preset: int,
 
 
 # ---------------------------------------------------------------------------
+# Epoched schedules (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+# A production pool serves *shifting* load: tenants heat up, leaves
+# saturate, and a quota/placement chosen at t=0 leaves tail latency on
+# the table.  ``Schedule`` makes a sweepable knob *piecewise-constant in
+# time*: ``values[e]`` is active during epoch ``e``, and the active
+# epoch at time ``t`` is ``#{b in boundaries_ns : b <= t}`` — resolved
+# from each op's issue clock in the timed engine (crash-style gating,
+# ``engine.step``) and from the replay clock in the untimed oracle
+# (``PersistentBuffer.epoch_at``).  Every scheduled knob of one config
+# must share ONE boundary vector (the engine lowers a single epoch
+# axis); ``PCSConfig.epoch_boundaries`` enforces it.
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Piecewise-constant time schedule for a sweepable config knob.
+
+    ``len(values) == len(boundaries_ns) + 1``: ``values[0]`` is active
+    from t=0 until ``boundaries_ns[0]``, ``values[e]`` from
+    ``boundaries_ns[e-1]`` (inclusive) until ``boundaries_ns[e]``.
+    Accepted by ``DrainPolicy.threshold`` / ``preset`` /
+    ``latency_target_ns``, ``AllocPolicy.tenant_quota`` and
+    ``FabricTopology.placement``; lowers to ``(E,)`` / ``(E, T)``
+    traced operand rows plus one shared ``epoch_bounds`` vector
+    (``engine.state.scalars_from_config``), so a mixed
+    {static x scheduled} grid stays ONE XLA program and a single-epoch
+    schedule is bit-identical to the plain value.
+    """
+
+    boundaries_ns: Tuple[float, ...]
+    values: Tuple[object, ...]
+
+    def __post_init__(self) -> None:
+        b = tuple(float(x) for x in self.boundaries_ns)
+        v = tuple(self.values)
+        if len(v) != len(b) + 1:
+            raise ValueError(
+                f"Schedule needs exactly one value per epoch: "
+                f"{len(b)} boundaries define {len(b) + 1} epochs, "
+                f"got {len(v)} values")
+        if any(not math.isfinite(x) or x <= 0.0 for x in b):
+            raise ValueError(
+                f"Schedule boundaries must be positive finite ns; got {b}")
+        if any(b[i] >= b[i + 1] for i in range(len(b) - 1)):
+            raise ValueError(
+                f"Schedule boundaries must be strictly increasing; got {b}")
+        object.__setattr__(self, "boundaries_ns", b)
+        object.__setattr__(self, "values", v)
+
+    @property
+    def n_epochs(self) -> int:
+        return len(self.values)
+
+    def epoch_of(self, t_ns: float) -> int:
+        """Active epoch at ``t_ns`` (scalar twin of the engine's
+        ``jnp.sum(epoch_bounds <= t_issue)`` gate)."""
+        return epoch_index(self.boundaries_ns, t_ns)
+
+    def value_at(self, t_ns: float):
+        return self.values[self.epoch_of(t_ns)]
+
+
+def epoch_index(boundaries: Tuple[float, ...], x: float) -> int:
+    """Active epoch at position ``x``: ``#{b : b <= x}``.
+
+    Single home of the boundary comparison (``<=``, not ``<``) — the
+    engine's traced gate, the oracle's replay clock and the checkpoint
+    tier's persist-index schedule all use this rule, so the layers
+    cannot drift on whether a boundary instant belongs to the new epoch
+    (it does, exactly like ``crash_at`` gating).
+    """
+    return sum(1 for b in boundaries if b <= x)
+
+
+def epoch_value(v, epoch: int):
+    """Value of knob ``v`` during ``epoch``; plain values pass through.
+
+    Epochs past the schedule's last value clamp to it (a config with
+    fewer epochs than the grid-wide bound holds its final value).
+    """
+    if isinstance(v, Schedule):
+        return v.values[min(int(epoch), len(v.values) - 1)]
+    return v
+
+
+def n_epochs_of(*knobs) -> int:
+    """Epoch count implied by the scheduled knobs (1 = all static)."""
+    return max((v.n_epochs for v in knobs if isinstance(v, Schedule)),
+               default=1)
+
+
+def shared_boundaries(*knobs) -> Tuple[float, ...]:
+    """The ONE epoch-boundary vector shared by every scheduled knob.
+
+    Raises when two schedules disagree — the engine lowers a single
+    epoch axis per config, so every ``Schedule`` in one ``PCSConfig``
+    must carry identical ``boundaries_ns``.  Returns ``()`` when
+    nothing is scheduled.
+    """
+    bounds = None
+    for v in knobs:
+        if not isinstance(v, Schedule):
+            continue
+        if bounds is None:
+            bounds = v.boundaries_ns
+        elif v.boundaries_ns != bounds:
+            raise ValueError(
+                f"scheduled knobs disagree on epoch boundaries: "
+                f"{v.boundaries_ns} vs {bounds}; every Schedule in one "
+                "config must share one boundary vector (the engine "
+                "lowers a single shared epoch axis)")
+    return bounds if bounds is not None else ()
+
+
+# ---------------------------------------------------------------------------
 # Declarative persistence-policy API (QoS / drain policy, ROADMAP fairness)
 # ---------------------------------------------------------------------------
 # ``PBPolicy`` replaces the two global floats that used to live on
@@ -139,13 +254,20 @@ class DrainPolicy:
     latency_tol: float = 0.05
 
     def __post_init__(self) -> None:
-        if not (0.0 < self.preset <= self.threshold <= 1.0):
-            raise ValueError("require 0 < preset <= threshold <= 1")
+        # ``threshold`` / ``preset`` / ``latency_target_ns`` accept a
+        # :class:`Schedule` (DESIGN §7): validation then runs per epoch
+        # with the same rules a plain value obeys.
+        for e in range(n_epochs_of(self.threshold, self.preset)):
+            thr = epoch_value(self.threshold, e)
+            pre = epoch_value(self.preset, e)
+            if not (0.0 < pre <= thr <= 1.0):
+                raise ValueError("require 0 < preset <= threshold <= 1")
         if self.low_water_drains < 0 or self.empty_slack < 0:
             raise ValueError("low_water_drains / empty_slack must be >= 0")
-        if self.latency_target_ns is not None and \
-                not self.latency_target_ns > 0:
-            raise ValueError("latency_target_ns must be > 0 (or None)")
+        for e in range(n_epochs_of(self.latency_target_ns)):
+            lt = epoch_value(self.latency_target_ns, e)
+            if lt is not None and not lt > 0:
+                raise ValueError("latency_target_ns must be > 0 (or None)")
         if not 0.0 <= self.latency_tol < 1.0:
             raise ValueError("latency_tol must be in [0, 1)")
 
@@ -173,14 +295,35 @@ class AllocPolicy:
         if self.victim not in ("lru", "weighted"):
             raise ValueError(f"unknown victim policy {self.victim!r}; "
                              "have 'lru' | 'weighted'")
-        if self.tenant_quota is not None:
+        if isinstance(self.tenant_quota, Schedule):
+            # epoched quota (DESIGN §7): coerce/validate every epoch's
+            # tuple with the same rules a plain quota obeys (``None``
+            # epochs = uncapped); consumers resolve via
+            # ``resolve_epoch`` before calling quota_of / share_of
+            sch = self.tenant_quota
+            vals = []
+            for q0 in sch.values:
+                if q0 is None:
+                    vals.append(None)
+                    continue
+                q = tuple(int(x) for x in q0)
+                if not q or any(x < 1 for x in q):
+                    raise ValueError("tenant_quota entries must be >= 1")
+                vals.append(q)
+            object.__setattr__(self, "tenant_quota",
+                               dataclasses.replace(sch, values=tuple(vals)))
+        elif self.tenant_quota is not None:
             q = tuple(int(x) for x in self.tenant_quota)
             if not q or any(x < 1 for x in q):
                 raise ValueError("tenant_quota entries must be >= 1")
             object.__setattr__(self, "tenant_quota", q)
 
     def quota_of(self, tenant: int) -> float:
-        """Occupancy cap for ``tenant`` (``inf`` = unlimited)."""
+        """Occupancy cap for ``tenant`` (``inf`` = unlimited).
+
+        Requires an epoch-resolved policy (``resolve_epoch``) when the
+        quota is scheduled — a ``Schedule`` is not subscriptable.
+        """
         if self.tenant_quota is None:
             return math.inf
         return float(self.tenant_quota[tenant])
@@ -205,9 +348,15 @@ class PBPolicy:
     alloc: AllocPolicy = dataclasses.field(default_factory=AllocPolicy)
 
     def validate_for(self, n_pbe: int, n_tenants: int) -> None:
-        """Config-dependent validation, called by PCSConfig.__post_init__."""
-        q = self.alloc.tenant_quota
-        if q is not None:
+        """Config-dependent validation, called by PCSConfig.__post_init__.
+
+        A scheduled quota validates every epoch's tuple — each epoch
+        must be a quota the shared buffer could honour on its own.
+        """
+        for e in range(n_epochs_of(self.alloc.tenant_quota)):
+            q = epoch_value(self.alloc.tenant_quota, e)
+            if q is None:
+                continue
             if len(q) != n_tenants:
                 raise ValueError(
                     f"tenant_quota has {len(q)} entries for "
@@ -216,6 +365,35 @@ class PBPolicy:
                 raise ValueError(
                     f"tenant quotas sum to {sum(q)} > n_pbe={n_pbe}: the "
                     "shared buffer cannot honour them")
+
+
+def resolve_epoch(policy: PBPolicy, epoch: int) -> PBPolicy:
+    """Epoch-resolved twin of ``policy``: every scheduled field collapsed
+    to its value during ``epoch`` (plain fields pass through untouched).
+
+    Single home of the policy epoch-resolution rule: the engine lowering
+    (``engine.state.scalars_from_config``) resolves each epoch's operand
+    row through it, the untimed oracle (``semantics.PersistentBuffer
+    .set_epoch``) re-derives its cached policy values through it, and
+    the checkpoint tier (``persistence.manager``) resolves its
+    persist-indexed quota steps through it — so the three layers cannot
+    drift on what a schedule means.  Re-runs the dataclass validation,
+    so every resolved epoch is a policy that would have been legal
+    standalone.
+    """
+    d, a = policy.drain, policy.alloc
+    return PBPolicy(
+        drain=DrainPolicy(
+            threshold=epoch_value(d.threshold, epoch),
+            preset=epoch_value(d.preset, epoch),
+            per_tenant=d.per_tenant,
+            low_water_drains=d.low_water_drains,
+            empty_slack=d.empty_slack,
+            latency_target_ns=epoch_value(d.latency_target_ns, epoch),
+            latency_tol=d.latency_tol),
+        alloc=AllocPolicy(
+            victim=a.victim,
+            tenant_quota=epoch_value(a.tenant_quota, epoch)))
 
 
 def hop_drain_counts(policy: PBPolicy,
@@ -310,14 +488,33 @@ class FabricTopology:
         object.__setattr__(self, "leaf_pbe", q)
         if self.spine_pbe < 1:
             raise ValueError("spine_pbe must be >= 1")
-        p = tuple(int(x) for x in self.placement)
-        if not p:
-            raise ValueError("placement needs at least one tenant entry")
-        if any(not 0 <= x < self.n_leaves for x in p):
-            raise ValueError(
-                f"placement entries must be leaf ids in [0, "
-                f"{self.n_leaves}); got {p}")
-        object.__setattr__(self, "placement", p)
+        if isinstance(self.placement, Schedule):
+            # epoched placement (DESIGN §7) = mid-run tenant migration:
+            # each epoch's map validates like a plain placement, and
+            # every epoch must place every tenant on a real leaf
+            sch = self.placement
+            vals = []
+            for p0 in sch.values:
+                p = tuple(int(x) for x in p0)
+                if not p:
+                    raise ValueError(
+                        "placement needs at least one tenant entry")
+                if any(not 0 <= x < self.n_leaves for x in p):
+                    raise ValueError(
+                        f"placement entries must be leaf ids in [0, "
+                        f"{self.n_leaves}); got {p}")
+                vals.append(p)
+            object.__setattr__(self, "placement",
+                               dataclasses.replace(sch, values=tuple(vals)))
+        else:
+            p = tuple(int(x) for x in self.placement)
+            if not p:
+                raise ValueError("placement needs at least one tenant entry")
+            if any(not 0 <= x < self.n_leaves for x in p):
+                raise ValueError(
+                    f"placement entries must be leaf ids in [0, "
+                    f"{self.n_leaves}); got {p}")
+            object.__setattr__(self, "placement", p)
         if self.bp_high is not None:
             if not self.bp_high > 0:
                 raise ValueError("bp_high must be > 0 (or None)")
@@ -513,11 +710,13 @@ class PCSConfig:
                 raise ValueError(
                     "fabric is meaningless under NOPB: a volatile "
                     "fabric has no persistent buffers to place")
-            if len(self.fabric.placement) != self.n_tenants:
-                raise ValueError(
-                    f"fabric.placement has {len(self.fabric.placement)} "
-                    f"entries for n_tenants={self.n_tenants}; need "
-                    "exactly one leaf id per tenant")
+            for e in range(n_epochs_of(self.fabric.placement)):
+                p = epoch_value(self.fabric.placement, e)
+                if len(p) != self.n_tenants:
+                    raise ValueError(
+                        f"fabric.placement has {len(p)} "
+                        f"entries for n_tenants={self.n_tenants}; need "
+                        "exactly one leaf id per tenant")
             derived = (sum(self.fabric.leaf_pbe), self.fabric.spine_pbe)
             if self.n_switches not in (1, 2):
                 raise ValueError(
@@ -571,18 +770,44 @@ class PCSConfig:
                                   preset=self.drain_preset)))
         else:
             # policy wins: sync the legacy floats so threshold_count /
-            # preset_count and telemetry read one source of truth
+            # preset_count and telemetry read one source of truth (a
+            # scheduled threshold/preset syncs its epoch-0 value — the
+            # per-epoch counts are lowered from the schedule itself)
             object.__setattr__(self, "drain_threshold",
-                               self.policy.drain.threshold)
+                               epoch_value(self.policy.drain.threshold, 0))
             object.__setattr__(self, "drain_preset",
-                               self.policy.drain.preset)
+                               epoch_value(self.policy.drain.preset, 0))
         self.policy.validate_for(self.n_pbe, self.n_tenants)
         if self.crash_at_ns < 0.0:
             raise ValueError("crash_at_ns must be >= 0 (or inf for no crash)")
+        # force the shared-boundary validation at construction time: every
+        # scheduled knob of this config must agree on ONE epoch-boundary
+        # vector (the engine lowers a single shared epoch axis)
+        _ = self.epoch_boundaries
 
     def with_crash(self, crash_at_ns: float) -> "PCSConfig":
         """Same system, power lost at ``crash_at_ns`` (Section V-D4)."""
         return dataclasses.replace(self, crash_at_ns=crash_at_ns)
+
+    @property
+    def epoch_boundaries(self) -> Tuple[float, ...]:
+        """The config's shared epoch-boundary vector (``()`` = static).
+
+        Collected across every schedule-capable knob and validated to
+        be ONE vector (``shared_boundaries`` raises on disagreement) —
+        the engine lowers a single ``epoch_bounds`` operand per config.
+        """
+        return shared_boundaries(
+            self.policy.drain.threshold,
+            self.policy.drain.preset,
+            self.policy.drain.latency_target_ns,
+            self.policy.alloc.tenant_quota,
+            self.fabric.placement if self.fabric is not None else None)
+
+    @property
+    def n_epochs(self) -> int:
+        """Number of schedule epochs (1 = fully static config)."""
+        return len(self.epoch_boundaries) + 1
 
     @property
     def hop_pbes(self) -> Tuple[int, ...]:

@@ -25,8 +25,10 @@ import dataclasses
 import enum
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.params import (PBEState, PCSConfig, Scheme, hop_drain_counts,
-                               rf_drain_count, tenant_drain_counts)
+from repro.core.params import (PBEState, PCSConfig, Scheme, epoch_index,
+                               epoch_value, hop_drain_counts, preset_count,
+                               resolve_epoch, rf_drain_count,
+                               tenant_drain_counts, threshold_count)
 
 
 class EventKind(enum.Enum):
@@ -100,13 +102,6 @@ class PersistentBuffer:
 
     def __init__(self, config: PCSConfig, pm: Optional[PersistentMemory] = None):
         self.config = config
-        # the declarative QoS policy (PCSConfig normalizes the legacy
-        # float knobs into a default PBPolicy, so this is always set);
-        # the oracle consumes the *same* object the engine lowers
-        self.policy = config.policy
-        self._tenant_counts = (
-            tenant_drain_counts(self.policy, config.n_pbe, config.n_tenants)
-            if self.policy.drain.per_tenant else None)
         # Serving-SLO drain tightening (DrainPolicy.latency_target_ns):
         # the untimed oracle cannot compute persist latencies, so the
         # driver passes a per-persist ``lat_over`` hint; the per-tenant
@@ -114,8 +109,6 @@ class PersistentBuffer:
         # S_SLO_OVER twins, updated at persist *completion* (a stalled
         # packet is counted once, when its retry lands — net of the
         # stall decrement, exactly like the "persists" counter).
-        self._lat_target = self.policy.drain.latency_target_ns
-        self._lat_tol = self.policy.drain.latency_tol
         self._slo_cnt: Dict[int, int] = {}
         self.pm = pm if pm is not None else PersistentMemory()
         self.entries: List[PBEntry] = []
@@ -143,10 +136,16 @@ class PersistentBuffer:
         fab = config.fabric
         self._n_leaves = fab.n_leaves if fab is not None else 1
         self._leaf_pbe = fab.leaf_pbe if fab is not None else (config.n_pbe,)
-        self._placement = fab.placement if fab is not None else None
         self._bp_high = fab.bp_high if fab is not None else None
-        self._hop_drain = (hop_drain_counts(self.policy, self._hop_pbes)
-                          if self.n_hops else [])
+        # Epoched schedules: the declarative QoS policy / placement views
+        # below (`self.policy`, `self._tenant_counts`, ...) are caches of
+        # the *current epoch's* resolved values, derived by `set_epoch`
+        # from the same `params.resolve_epoch` the engine lowering uses
+        # (PCSConfig normalizes the legacy float knobs into a default
+        # PBPolicy, so config.policy is always set; a schedule-free
+        # config resolves identically at every epoch).  The driver
+        # advances the epoch between slots via `set_epoch(epoch_at(t))`.
+        self.set_epoch(0)
         # per-switch telemetry rows (engine twin: MachineState.hop_stats)
         self.hop_counts: List[Dict[str, int]] = [
             {"commits": 0, "coalesces": 0, "bypasses": 0, "read_hits": 0}
@@ -185,6 +184,45 @@ class PersistentBuffer:
         if tenant not in self.tenant_stats:
             self.tenant_stats[tenant] = {k: 0 for k in self.stats}
         return self.tenant_stats[tenant]
+
+    # -------------------------------------------------------------- epochs
+    def set_epoch(self, epoch: int) -> None:
+        """Re-derive every policy/placement cache for ``epoch``.
+
+        The untimed twin of the engine's per-op operand selection
+        (``engine.step.resolve_epoch_sc``): quota/share, the
+        threshold/preset drain counts (global, per-tenant and per-hop),
+        the serving-SLO target, and the tenant->leaf placement all come
+        from ``params.resolve_epoch`` / ``params.epoch_value`` at the
+        given epoch index.  Buffered entries are untouched — a placement
+        flip migrates no entries (``_alloc_slot`` never moves an entry
+        between leaves), so in-flight lines keep draining under their
+        issue-time leaf exactly like the engine's slot-resident state.
+        Idempotent; schedule-free configs resolve identically at every
+        epoch.
+        """
+        self.epoch = int(epoch)
+        cfg = self.config
+        self.policy = resolve_epoch(cfg.policy, self.epoch)
+        self._tenant_counts = (
+            tenant_drain_counts(self.policy, cfg.n_pbe, cfg.n_tenants)
+            if self.policy.drain.per_tenant else None)
+        self._lat_target = self.policy.drain.latency_target_ns
+        self._lat_tol = self.policy.drain.latency_tol
+        self._thr_cnt = threshold_count(cfg.n_pbe,
+                                        self.policy.drain.threshold)
+        self._pre_cnt = preset_count(cfg.n_pbe, self.policy.drain.preset)
+        fab = cfg.fabric
+        self._placement = (epoch_value(fab.placement, self.epoch)
+                           if fab is not None else None)
+        self._hop_drain = (hop_drain_counts(self.policy, self._hop_pbes)
+                           if self.n_hops else [])
+
+    def epoch_at(self, t_ns: float) -> int:
+        """Epoch index active at ``t_ns`` (boundary instants belong to
+        the *new* epoch — ``params.epoch_index`` is the single home of
+        that rule, shared with the engine's issue-time gate)."""
+        return epoch_index(self.config.epoch_boundaries, t_ns)
 
     # ------------------------------------------------------------- helpers
     def _next_seq(self) -> int:
@@ -422,8 +460,7 @@ class PersistentBuffer:
             scope = None
             dirty = sum(1 for e in self.entries
                         if e.state == PBEState.DIRTY and e.leaf == leaf)
-            thr, pre = (self.config.threshold_count,
-                        self.config.preset_count)
+            thr, pre = self._thr_cnt, self._pre_cnt
         # serving-SLO tightening (engine twin: the ``tight`` override in
         # ``engine.policy.drain_threshold_preset``): while the trigger
         # tenant's observed over-target fraction exceeds its tolerance,

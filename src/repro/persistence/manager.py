@@ -33,7 +33,9 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.params import (DEFAULT_DRAIN_PRESET,
                                DEFAULT_DRAIN_THRESHOLD, DrainPolicy,
-                               PBPolicy, SCHEME_NAMES, Scheme)
+                               PBPolicy, SCHEME_NAMES, Scheme,
+                               epoch_index, resolve_epoch,
+                               shared_boundaries)
 from repro.persistence.store import DurableStore, HostBufferTier, _deserialize, _serialize
 
 # The checkpoint tier speaks the same scheme vocabulary as the timed
@@ -68,12 +70,22 @@ class PCSCheckpointManager:
         if policy is None:
             policy = PBPolicy(drain=DrainPolicy(threshold=drain_threshold,
                                                 preset=drain_preset))
-        self.policy = policy
-        self.drain_threshold = policy.drain.threshold
-        self.drain_preset = policy.drain.preset
+        # Epoched host-side policy (first step of carrying quotas into
+        # the checkpoint tier): any Schedule on the policy is honoured
+        # with its boundaries read as PERSIST INDICES — the tier's
+        # logical clock — so a quota/threshold step lands at an exact
+        # acked-persist count, mirroring schedule_crash's after_persists
+        # determinism despite the asynchronous drainer.
+        self._base_policy = policy
+        self._epoch_bounds = shared_boundaries(
+            policy.drain.threshold, policy.drain.preset,
+            policy.drain.latency_target_ns, policy.alloc.tenant_quota)
+        self._epoch = -1
+        self._set_epoch(0)
         self.sync_drain = sync_drain
         self._states: Dict[Tuple[str, int], ShardState] = {}
         self._lru: Dict[Tuple[str, int], float] = {}
+        self._tenant_of: Dict[Tuple[str, int], int] = {}
         self._lock = threading.RLock()
         self._q: "queue.Queue" = queue.Queue()
         self._stop = threading.Event()
@@ -85,6 +97,17 @@ class PCSCheckpointManager:
         self._drainer = None
         if not sync_drain and scheme != PersistScheme.NOPB:
             self._start_drainer()
+
+    def _set_epoch(self, epoch: int) -> None:
+        """Collapse the base policy to its value during ``epoch``
+        (``params.resolve_epoch`` — the same resolution rule the engine
+        lowering and the oracle use, so the tiers cannot drift)."""
+        self._epoch = int(epoch)
+        pol = resolve_epoch(self._base_policy, self._epoch)
+        self.policy = pol
+        self.drain_threshold = pol.drain.threshold
+        self.drain_preset = pol.drain.preset
+        self._quota = pol.alloc.tenant_quota
 
     def _start_drainer(self) -> None:
         """Spawn the background drain loop — refusing to double-spawn.
@@ -111,9 +134,14 @@ class PCSCheckpointManager:
         self._drainer.start()
 
     # ------------------------------------------------------------- persist
-    def persist(self, shard: str, version: int, tree: Any) -> None:
+    def persist(self, shard: str, version: int, tree: Any,
+                tenant: int = 0) -> None:
         """Make (shard, version) durable.  Returns when the persistent
-        domain holds it: store fsync under NOPB, buffer ack under PB/RF."""
+        domain holds it: store fsync under NOPB, buffer ack under PB/RF.
+
+        ``tenant`` attributes the entry for the per-tenant quota
+        drain-down (inert when the policy carries no ``tenant_quota``).
+        """
         # crash window (mirrors the engine's crash_at_ns): the power is
         # lost right before persist #(crash_after + 1), so exactly
         # crash_after persists are acked — a deterministic logical crash
@@ -122,6 +150,14 @@ class PCSCheckpointManager:
         # takes the same lock to finish its in-flight drain).
         fire = False
         with self._lock:
+            # persist-indexed epoch advance: this persist executes under
+            # epoch_of(#persists so far) — the same <=-gate as the
+            # engine's issue-clock selection, on the tier's logical clock
+            if self._epoch_bounds:
+                ep = epoch_index(self._epoch_bounds,
+                                 self.stats["persists"])
+                if ep != self._epoch:
+                    self._set_epoch(ep)
             if (self._crash_after is not None and not self._crashed
                     and self.stats["persists"] >= self._crash_after):
                 self._crashed = fire = True
@@ -158,11 +194,13 @@ class PCSCheckpointManager:
                         "host buffer exhausted and nothing drainable")
             self._states[(shard, version)] = ShardState.DIRTY
             self._lru[(shard, version)] = time.monotonic()
+            self._tenant_of[(shard, version)] = tenant
             self.stats["acks"] += 1
 
             if self.scheme == PersistScheme.PB:
                 self._start_drain_locked(shard, version)
             else:
+                self._quota_drain_locked(tenant)
                 self._rf_drain_down_locked()
         if self.sync_drain:
             self.drain_all(wait=True)
@@ -177,6 +215,26 @@ class PCSCheckpointManager:
             self._drain_one(shard, version)
         else:
             self._q.put((shard, version))
+
+    def _quota_drain_locked(self, tenant: int) -> None:
+        """Per-tenant quota drain-down: while ``tenant`` holds more
+        DIRTY entries than its active-epoch quota, start draining its
+        LRU dirty entry — the host-side analogue of the engine's
+        per-tenant drain scope.  Drain *initiation* is synchronous
+        (DIRTY -> DRAIN under the lock), so the drain counts stay
+        deterministic even with the asynchronous drainer."""
+        if self._quota is None:
+            return
+        q = int(self._quota[tenant % len(self._quota)])
+        while True:
+            dirty = sorted(
+                [k for k, st in self._states.items()
+                 if st == ShardState.DIRTY
+                 and self._tenant_of.get(k, 0) == tenant],
+                key=lambda k: self._lru.get(k, 0.0))
+            if len(dirty) <= q:
+                return
+            self._start_drain_locked(*dirty[0])
 
     def _rf_drain_down_locked(self) -> None:
         cap = self.buffer.capacity_bytes

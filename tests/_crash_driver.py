@@ -23,6 +23,7 @@ import collections
 
 from repro.core import Op, PCSConfig, Scheme
 from repro.core.semantics import EventKind, PersistentBuffer
+from repro.core.traces import FUZZ_SLOT_GAP_NS
 
 
 def _counts_from(stats, scheme, victim_stalls):
@@ -90,13 +91,24 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
     for slot, core, op, addr in schedule:
         if slot > crash_slot:
             break
+        # epoched schedules: the fuzzed slots issue at ~slot * gap with
+        # sub-half-slot drift, and the tests place epoch boundaries at
+        # half-slot instants (fuzz_crash_ns convention), so the slot's
+        # nominal issue time selects exactly the engine's issue-time
+        # epoch; schedule-free configs never leave epoch 0
+        ep = pb.epoch_at(slot * FUZZ_SLOT_GAP_NS)
+        if ep != pb.epoch:
+            pb.set_epoch(ep)
         if op == int(Op.BARRIER):
             continue
         tenant = int(core_tenant[core]) if core_tenant is not None else 0
         if op == int(Op.PERSIST):
             aver[addr] += 1
             if multi_leaf:
-                last_leaf[addr] = fabric.placement[tenant]
+                # placement resolved at the *current epoch* — entries
+                # never migrate, so the newest copy lives on the leaf
+                # the persist was issued to
+                last_leaf[addr] = pb._placement[tenant]
             events = pb.persist(addr, (addr, aver[addr]), tenant=tenant,
                                 lat_over=lat_over)
             victim_stalls[tenant] += sum(
@@ -106,7 +118,7 @@ def oracle_replay(schedule, crash_slot, scheme, n_pbe, core_tenant=None,
         else:
             data, _ev = pb.read(addr, tenant=tenant)
             same_leaf = (not multi_leaf or addr not in last_leaf
-                         or last_leaf[addr] == fabric.placement[tenant])
+                         or last_leaf[addr] == pb._placement[tenant])
             reads.append((addr, data, aver[addr], same_leaf))
         while pending:
             a, v = pending.pop(0)

@@ -6,6 +6,7 @@ sweep_metrics = {}
 def run():
     sweep_metrics.update(
         good_sweep_wall_s=1.0,
+        good_sweep_compile_s=0.1,
         good_sweep_compiles=1,
         good_sweep_cells=3,
         good_sweep_macro_hit=0.5,

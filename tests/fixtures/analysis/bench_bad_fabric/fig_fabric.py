@@ -1,5 +1,5 @@
 """A fabric figure whose sweep was never registered: it emits the full
-fabric_sweep_* telemetry (all four suffixes, abort counters included)
+fabric_sweep_* telemetry (all five suffixes, abort counters included)
 but benchmarks/_sweeps.py-style registration is missing, so
 check_compiles would never guard its compile count — the linter must
 flag exactly this."""
@@ -10,10 +10,12 @@ sweep_metrics = {}
 def run():
     sweep_metrics.update(
         chain_sweep_wall_s=1.0,
+        chain_sweep_compile_s=0.2,
         chain_sweep_compiles=1,
         chain_sweep_cells=5,
         chain_sweep_macro_hit=0.4,
         fabric_sweep_wall_s=2.0,
+        fabric_sweep_compile_s=0.3,
         fabric_sweep_compiles=1,
         fabric_sweep_cells=52,
         fabric_sweep_macro_hit=0.3,

@@ -1,0 +1,9 @@
+"""Operand-side retrace fixture: an epoch-scheduled lowering whose
+step consumes only epoch 0's row (``sc["quota"][0]`` with a *static*
+index) and never reads the shared ``epoch_bounds`` vector — the
+schedule is baked to its first epoch, so whole-program DCE must flag
+the boundary operand dead (``retrace-baked-static``)."""
+
+
+def step(sc):
+    return sc["quota"][0] * 2.0 + sc["crash_at"]

@@ -1,0 +1,12 @@
+"""Declaration-side retrace fixture: a params-like policy dataclass
+that grew a schedule knob (``quota_schedule``) without registering it
+in SWEEPABLE_FIELDS or STATIC_FIELDS — ``check_registered_fields``
+must pin the exact field line with ``retrace-unregistered-field``."""
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class BadPolicy:
+    threshold: float = 0.75
+    quota_schedule: Optional[Tuple[float, ...]] = None

@@ -11,6 +11,7 @@ the real-tree checks.
 from __future__ import annotations
 
 import importlib.util
+import sys
 from pathlib import Path
 
 import numpy as np
@@ -43,6 +44,42 @@ def test_retrace_clean_when_all_operands_live():
         return sc["a"] + sc["b"]
 
     assert retrace.check_traced(fn=fn, args=({"a": 1.0, "b": 2.0},)) == []
+
+
+def test_retrace_fires_on_baked_epoch_operand():
+    # the schedule variant of the baked-static slip: the step indexes a
+    # per-epoch row with a *Python* constant and never reads the shared
+    # epoch_bounds vector, so DCE must prove the boundary operand dead
+    spec = importlib.util.spec_from_file_location(
+        "epoch_baked", FIX / "epoch_baked.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    findings = retrace.check_traced(
+        fn=mod.step,
+        args=({"quota": np.arange(2.0), "crash_at": 1.0,
+               "epoch_bounds": np.full((1,), 9.9e9)},))
+    assert [f.rule for f in findings] == ["retrace-baked-static"]
+    assert "'epoch_bounds'" in findings[0].message
+
+
+def test_retrace_registered_fields_fixture():
+    # declaration-side half: a params-like dataclass grew a schedule
+    # knob without registering it sweepable-or-static
+    spec = importlib.util.spec_from_file_location(
+        "params_bad", FIX / "params_bad.py")
+    mod = importlib.util.module_from_spec(spec)
+    # inspect.getsourcelines (the field anchor) resolves the class's
+    # file through sys.modules, so the fixture must be registered
+    sys.modules["params_bad"] = mod
+    spec.loader.exec_module(mod)
+    findings = retrace.check_registered_fields(
+        [mod.BadPolicy],
+        sweepable={"BadPolicy.threshold": ("threshold_count",)},
+        static={})
+    assert [f.rule for f in findings] == ["retrace-unregistered-field"]
+    assert "BadPolicy.quota_schedule" in findings[0].message
+    assert findings[0].file.endswith("params_bad.py")
+    assert findings[0].line == 12  # the quota_schedule field line
 
 
 # -------------------------------------------------------------- mirror

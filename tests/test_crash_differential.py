@@ -34,8 +34,8 @@ import pytest
 
 from _crash_driver import assert_cell_matches, oracle_replay
 from repro.core import (AllocPolicy, DrainPolicy, FabricTopology, PBPolicy,
-                        PCSConfig, Scheme, fuzz_crash_ns, fuzz_trace,
-                        leaf_placement, tenant_ids)
+                        PCSConfig, Schedule, Scheme, fuzz_crash_ns,
+                        fuzz_trace, leaf_placement, tenant_ids)
 from repro.core.engine import compile_count, simulate, simulate_grid
 
 try:
@@ -406,6 +406,78 @@ def test_differential_matrix_fabric_one_compile():
                 cells[i][j], cells[i][j + 1],
                 ("FAB-1leaf-vs-chain", seeds[i], plan[j][0].name,
                  plan[j][1]))
+
+
+def test_differential_matrix_epoch_schedules_one_compile():
+    """Epoched config schedules vs the epoch-aware oracle: knobs that
+    are piecewise-constant time schedules (``params.Schedule``) — a
+    mid-run tenant-quota step, a mid-run drain-threshold tighten and a
+    mid-run tenant->leaf placement flip — mixed with static controls in
+    ONE compiled grid, with exact engine<->oracle agreement on the
+    durable state, the per-tenant rows AND the per-leaf recovery
+    attribution at crash points *before, at-large and after* the epoch
+    boundary.  The boundary sits at a half-slot instant
+    (``fuzz_crash_ns`` convention), so the oracle's slot-epoch equals
+    the engine's issue-time epoch by construction.  The macro-stepped
+    grid must stay bit-identical to the macro-off control (windows
+    straddling the boundary abort under the ``epoch_boundary`` reason
+    instead of committing mixed-epoch replays)."""
+    n_tenants, n_cores = 4, 4
+    seeds = list(range(3))
+    traces, scheds = zip(*[
+        fuzz_trace(s, n_cores=n_cores, n_slots=N_SLOTS, n_addrs=N_ADDRS,
+                   n_tenants=n_tenants, p_persist=0.7)
+        for s in seeds])
+    bound = fuzz_crash_ns(25)                 # epoch 1 from slot 26 on
+    quota_sched = PBPolicy(alloc=AllocPolicy(
+        tenant_quota=Schedule((bound,), ((2, 2, 2, 2), (5, 1, 1, 1)))))
+    thr_sched = PBPolicy(drain=DrainPolicy(
+        threshold=Schedule((bound,), (0.75, 0.375)), preset=0.25))
+    pol_variants = [quota_sched, thr_sched, None]      # None = static
+    place0 = leaf_placement(n_tenants, 2, "packed")
+    place1 = tuple(1 - p for p in place0)              # hot-leaf flip
+    fab_sched = FabricTopology(2, (4, 4), 4,
+                               Schedule((bound,), (place0, place1)))
+    # crash points on both sides of the boundary, plus the boundary's
+    # own neighborhood (23 < 25.5 < 36) and the full run
+    crash_slots = (0, 11, 23, 36, N_SLOTS)
+    plan = []
+    for k in crash_slots:
+        for scheme in SCHEMES:
+            for pol in pol_variants:
+                plan.append((scheme, k, pol, None))
+        for scheme in (Scheme.PB, Scheme.PB_RF):       # NOPB+fabric raises
+            plan.append((scheme, k, None, fab_sched))
+    configs = [
+        (PCSConfig(scheme=s, n_cores=n_cores, n_tenants=n_tenants,
+                   fabric=fab).with_crash(fuzz_crash_ns(k))
+         if fab is not None else
+         PCSConfig(scheme=s, n_pbe=8, n_cores=n_cores,
+                   n_tenants=n_tenants,
+                   policy=pol).with_crash(fuzz_crash_ns(k)))
+        for s, k, pol, fab in plan]
+    assert any(c.n_epochs == 2 for c in configs)
+    c0 = compile_count()
+    cells = simulate_grid(list(traces), configs, max_pbe=8,
+                          bucket=BUCKET, track_addrs=N_ADDRS)
+    assert compile_count() - c0 == 1, (
+        "the mixed {static x scheduled} epoch matrix must be one XLA "
+        "program")
+    off = simulate_grid(list(traces), configs, max_pbe=8,
+                        bucket=BUCKET, track_addrs=N_ADDRS, macro=False)
+    for i, (tr, sched) in enumerate(zip(traces, scheds)):
+        core_tenant = tenant_ids(tr.lengths, n_tenants)
+        for j, (scheme, k, pol, fab) in enumerate(plan):
+            oracle = oracle_replay(sched, k, scheme, 8,
+                                   core_tenant=core_tenant,
+                                   n_tenants=n_tenants, policy=pol,
+                                   fabric=fab)
+            label = ("EPOCH", seeds[i], scheme.name, k,
+                     "placement" if fab is not None else
+                     "static" if pol is None else
+                     "quota" if pol is quota_sched else "threshold")
+            assert_cell_matches(cells[i][j], oracle, N_ADDRS, label=label)
+            _assert_simresults_identical(cells[i][j], off[i][j], label)
 
 
 def test_fabric_validation_rejects_malformed():

@@ -1,0 +1,228 @@
+"""Epoched config schedules: construction, lowering and crash semantics.
+
+Three contracts around ``params.Schedule`` (piecewise-constant knob
+schedules lowered to ``(E,)``/``(E, T)`` operand rows plus one shared
+epoch-boundary vector):
+
+  * **validation** — malformed schedules and knob sets that disagree on
+    the shared boundary vector are rejected at construction, never
+    silently mis-lowered;
+  * **single-epoch identity** — a ``Schedule`` with no boundaries is the
+    *same config* as the bare scalar: the lowered operand dict is
+    byte-equal (no ``epoch_bounds`` key, identical dtypes/values), and a
+    shared grid returns bit-identical SimResults for both columns;
+  * **issue-time semantics** — entries keep the epoch of their *issue*
+    instant: a placement flip migrates nothing, so a crash after the
+    boundary attributes epoch-0 entries to their issue-time leaf
+    (oracle + engine agree; the differential matrix in
+    tests/test_crash_differential.py pins the full cross product).
+"""
+import numpy as np
+import pytest
+
+from _crash_driver import assert_cell_matches, oracle_replay
+from repro.core import (AllocPolicy, DrainPolicy, FabricTopology, PBPolicy,
+                        PCSConfig, Schedule, Scheme, fuzz_crash_ns,
+                        fuzz_trace, leaf_placement, tenant_ids)
+from repro.core.engine import compile_count, simulate_grid
+from repro.core.engine.state import EPOCH_KEYS, scalars_from_config
+from repro.core.params import (epoch_index, epoch_value, n_epochs_of,
+                               resolve_epoch, shared_boundaries)
+from repro.core.semantics import PersistentBuffer
+from test_crash_differential import _assert_simresults_identical
+
+N_ADDRS = 6
+N_SLOTS = 50
+BUCKET = 128
+
+
+# ------------------------------------------------------------ validation
+def test_schedule_validation_rejects_malformed():
+    with pytest.raises(ValueError, match="values"):
+        Schedule((1.0e6,), (0.5,))          # need boundaries + 1 values
+    with pytest.raises(ValueError, match="increasing"):
+        Schedule((2.0e6, 1.0e6), (0.5, 0.5, 0.5))
+    with pytest.raises(ValueError, match="positive"):
+        Schedule((-1.0,), (0.5, 0.5))
+    with pytest.raises(ValueError, match="positive"):
+        Schedule((float("inf"),), (0.5, 0.5))
+    # per-epoch policy validation: every epoch must satisfy the same
+    # invariants a static config would
+    with pytest.raises(ValueError, match="preset"):
+        DrainPolicy(threshold=Schedule((1.0e6,), (0.75, 0.25)),
+                    preset=0.5)             # epoch 1: preset > threshold
+    with pytest.raises(ValueError, match="quota"):
+        PCSConfig(scheme=Scheme.PB_RF, n_pbe=4, n_tenants=2,
+                  policy=PBPolicy(alloc=AllocPolicy(
+                      tenant_quota=Schedule((1.0e6,),
+                                            ((2, 2), (4, 4))))))
+    # every scheduled knob of one config must share ONE boundary vector
+    # (the engine lowers a single shared epoch axis)
+    with pytest.raises(ValueError, match="share one boundary vector"):
+        PCSConfig(scheme=Scheme.PB_RF, n_pbe=8, policy=PBPolicy(
+            drain=DrainPolicy(
+                threshold=Schedule((2.0e6,), (0.75, 0.5)),
+                preset=Schedule((1.0e6,), (0.25, 0.25)))))
+    # scheduled placement: every epoch's tuple is validated
+    with pytest.raises(ValueError, match="placement"):
+        FabricTopology(2, (4, 4), 4,
+                       Schedule((1.0e6,), ((0, 1), (0, 2))))
+
+
+def test_epoch_helpers_boundary_belongs_to_new_epoch():
+    sch = Schedule((1.0e6, 2.0e6), (10, 20, 30))
+    assert sch.n_epochs == 3
+    # the boundary instant belongs to the NEW epoch (crash-gate twin)
+    assert [epoch_index(sch.boundaries_ns, t)
+            for t in (0.0, 0.5e6, 1.0e6, 1.5e6, 2.0e6, 9e9)] \
+        == [0, 0, 1, 1, 2, 2]
+    assert sch.value_at(1.0e6) == 20
+    # epochs past the last value clamp to it (short schedules in a
+    # wider grid keep their final value)
+    assert epoch_value(sch, 7) == 30
+    assert epoch_value(0.75, 3) == 0.75     # scalars pass through
+    assert n_epochs_of(0.5, sch, None) == 3
+    assert shared_boundaries(0.5, None) == ()
+    # resolve_epoch reconstructs a plain (schedule-free) policy
+    pol = PBPolicy(drain=DrainPolicy(
+        threshold=Schedule((1.0e6,), (0.75, 0.5)), preset=0.25))
+    assert resolve_epoch(pol, 0).drain.threshold == 0.75
+    assert resolve_epoch(pol, 1).drain.threshold == 0.5
+
+
+def test_grid_rejects_undersized_epoch_bound():
+    cfg = PCSConfig(scheme=Scheme.PB_RF, n_pbe=8, policy=PBPolicy(
+        drain=DrainPolicy(threshold=Schedule((1.0e6,), (0.75, 0.5)),
+                          preset=0.25)))
+    assert cfg.n_epochs == 2
+    with pytest.raises(ValueError, match="epoch bound"):
+        scalars_from_config(cfg, n_tenants_max=1, n_epochs_max=1)
+
+
+# --------------------------------------------- single-epoch == scalar pin
+def test_single_epoch_schedule_lowers_byte_identical():
+    """A boundary-free Schedule on every schedulable knob must lower to
+    the exact dict a scalar config lowers to — same keys (no
+    ``epoch_bounds``), same dtypes, same bytes — so single-epoch grids
+    provably share the schedule-free XLA program."""
+    n_tenants = 2
+    fab_s = FabricTopology(2, (4, 4), 4,
+                           leaf_placement(n_tenants, 2, "packed"))
+    fab_e = FabricTopology(2, (4, 4), 4, Schedule(
+        (), (leaf_placement(n_tenants, 2, "packed"),)))
+    scalar = PCSConfig(
+        scheme=Scheme.PB_RF, n_cores=4, n_tenants=n_tenants, fabric=fab_s,
+        policy=PBPolicy(drain=DrainPolicy(threshold=0.75, preset=0.25,
+                                          latency_target_ns=5e3),
+                        alloc=AllocPolicy(tenant_quota=(3, 3))))
+    sched = PCSConfig(
+        scheme=Scheme.PB_RF, n_cores=4, n_tenants=n_tenants, fabric=fab_e,
+        policy=PBPolicy(drain=DrainPolicy(
+            threshold=Schedule((), (0.75,)),
+            preset=Schedule((), (0.25,)),
+            latency_target_ns=Schedule((), (5e3,))),
+            alloc=AllocPolicy(tenant_quota=Schedule((), ((3, 3),)))))
+    assert scalar.n_epochs == 1 and sched.n_epochs == 1
+    a = scalars_from_config(scalar, n_tenants, 1, 2)
+    b = scalars_from_config(sched, n_tenants, 1, 2)
+    assert "epoch_bounds" not in a and "epoch_bounds" not in b
+    assert set(a) == set(b)
+    for k in a:
+        xa, xb = np.asarray(a[k]), np.asarray(b[k])
+        assert xa.dtype == xb.dtype and xa.shape == xb.shape, k
+        assert xa.tobytes() == xb.tobytes(), k
+
+
+def test_single_epoch_schedule_simresults_bit_identical():
+    """Both spellings in ONE shared grid: every SimResult field of the
+    scalar column equals the single-epoch-Schedule column bitwise, at a
+    mid-run crash point and uncrashed."""
+    n_tenants, n_cores = 2, 4
+    traces = [fuzz_trace(s, n_cores=n_cores, n_slots=N_SLOTS,
+                         n_addrs=N_ADDRS, n_tenants=n_tenants,
+                         p_persist=0.7)[0] for s in range(2)]
+    def mk(threshold, quota):
+        return PBPolicy(drain=DrainPolicy(threshold=threshold,
+                                          preset=0.25),
+                        alloc=AllocPolicy(tenant_quota=quota))
+    pairs = []
+    for k in (23, N_SLOTS):
+        pairs.append((mk(0.75, (3, 3)),
+                      mk(Schedule((), (0.75,)),
+                         Schedule((), ((3, 3),)))))
+    configs = []
+    for k, (pol_s, pol_e) in zip((23, N_SLOTS), pairs):
+        for pol in (pol_s, pol_e):
+            configs.append(PCSConfig(
+                scheme=Scheme.PB_RF, n_pbe=8, n_cores=n_cores,
+                n_tenants=n_tenants,
+                policy=pol).with_crash(fuzz_crash_ns(k)))
+    c0 = compile_count()
+    cells = simulate_grid(traces, configs, max_pbe=8, bucket=BUCKET,
+                          track_addrs=N_ADDRS)
+    assert compile_count() - c0 <= 1
+    for i in range(len(traces)):
+        for j in range(0, len(configs), 2):
+            _assert_simresults_identical(
+                cells[i][j], cells[i][j + 1],
+                ("single-epoch==scalar", i, j))
+
+
+# ----------------------------------------------- issue-time epoch crashes
+def test_mid_epoch_crash_recovers_issue_time_leaf():
+    """Placement-at-issue: a tenant's entries persisted under epoch 0's
+    placement stay on that leaf after the epoch-1 flip — recovery (and
+    the per-leaf crash attribution) finds them on the *issue-time*
+    leaf, in the oracle and in the engine."""
+    # oracle-level: persist under epoch 0, flip, crash — no migration
+    place0, place1 = (0, 0, 1, 1), (1, 1, 0, 0)
+    fab = FabricTopology(2, (4, 4), 4,
+                         Schedule((1.0e6,), (place0, place1)))
+    cfg = PCSConfig(scheme=Scheme.PB_RF, n_cores=4, n_tenants=4,
+                    fabric=fab)
+    pb = PersistentBuffer(cfg)
+    assert pb._placement == place0
+    for a in range(3):                       # tenant 0 -> leaf 0
+        pb.persist(a, ("e0", a), tenant=0)
+    pb.set_epoch(pb.epoch_at(2.0e6))         # past the boundary
+    assert pb.epoch == 1 and pb._placement == place1
+    pb.persist(3, ("e1", 3), tenant=0)       # now lands on leaf 1
+    before = pb.snapshot_durable()
+    leaves = pb.leaf_surviving()
+    assert leaves[0] == 3 and leaves[1] == 1, leaves
+    pb.crash()
+    pb.recover()
+    # every issued version survives recovery regardless of which
+    # epoch's leaf held it
+    assert {a: rec[0] for a, rec in pb.pm.store.items()} \
+        == {a: rec[0] for a, rec in before.items()}
+
+    # engine-level: crash in epoch 1, exact per-leaf agreement with the
+    # epoch-aware oracle at the issue-time attribution
+    n_tenants, n_cores = 4, 4
+    trace, sched = fuzz_trace(7, n_cores=n_cores, n_slots=N_SLOTS,
+                              n_addrs=N_ADDRS, n_tenants=n_tenants,
+                              p_persist=0.8)
+    bound = fuzz_crash_ns(25)
+    fab2 = FabricTopology(2, (4, 4), 4,
+                          Schedule((bound,), (place0, place1)))
+    crash_slot = 36                          # mid-epoch-1 crash
+    cfg2 = PCSConfig(scheme=Scheme.PB_RF, n_cores=n_cores,
+                     n_tenants=n_tenants,
+                     fabric=fab2).with_crash(fuzz_crash_ns(crash_slot))
+    res = simulate_grid([trace], [cfg2], max_pbe=8, bucket=BUCKET,
+                        track_addrs=N_ADDRS)[0][0]
+    oracle = oracle_replay(sched, crash_slot, Scheme.PB_RF, 8,
+                           core_tenant=tenant_ids(trace.lengths,
+                                                  n_tenants),
+                           n_tenants=n_tenants, fabric=fab2)
+    assert_cell_matches(res, oracle, N_ADDRS, label=("mid-epoch-crash",))
+
+
+def test_abort_reason_registry_matches_engine():
+    """benchmarks._sweeps duplicates the abort-reason names so it stays a
+    leaf module; this pins the copy to the engine's one-hot row order —
+    a new abort reason can't ship without its bench telemetry key."""
+    from benchmarks._sweeps import ABORT_REASONS
+    from repro.core.engine.macro import MACRO_ABORT_REASONS
+    assert ABORT_REASONS == MACRO_ABORT_REASONS

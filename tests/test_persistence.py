@@ -102,6 +102,46 @@ def test_scheduled_crash_window_is_deterministic(tmp_path, scheme):
     mgr.close()
 
 
+def test_quota_schedule_steps_at_persist_index(tmp_path):
+    """A ``tenant_quota`` Schedule honoured host-side: boundaries are
+    read as PERSIST INDICES (the tier's logical clock), so the quota
+    step lands at an exact acked-persist count — the checkpoint-tier
+    mirror of the engine's issue-clock epoch gate, deterministic
+    despite the asynchronous drainer (drain initiation is synchronous
+    under the lock)."""
+    from repro.core.params import AllocPolicy, PBPolicy, Schedule
+    from repro.persistence.manager import ShardState
+
+    buf = HostBufferTier(capacity_bytes=64 << 20)
+    store = DurableStore(str(tmp_path / "store"))
+    pol = PBPolicy(alloc=AllocPolicy(
+        tenant_quota=Schedule((4.0,), ((3,), (1,)))))
+    mgr = PCSCheckpointManager(buf, store, scheme=PersistScheme.PB_RF,
+                               policy=pol, sync_drain=False)
+    # epoch 0 (quota 3): distinct shards (no coalescing), tiny payloads
+    # (the byte threshold never trips) — only the quota can force drains
+    for v in range(1, 5):
+        mgr.persist(f"s{v}", v, np.full(8, v))
+    assert mgr._epoch == 0
+    # persist #3 pushed tenant 0 to 4 dirty > quota 3: exactly one
+    # quota drain (the LRU entry) fired in epoch 0
+    assert mgr.stats["drains"] == 1
+    # boundary at persist index 4 -> epoch 1 (quota 1): the next persist
+    # advances the epoch and drains down to a single dirty entry
+    mgr.persist("s5", 5, np.full(8, 5))
+    assert mgr._epoch == 1
+    assert mgr.stats["drains"] == 4
+    dirty = [k for k, st in mgr._states.items()
+             if st == ShardState.DIRTY]
+    assert dirty == [("s5", 5)]
+    # the drainer still lands everything durably after the step
+    mgr.drain_all(wait=True)
+    for v in range(1, 6):
+        rec = mgr.store.read(f"s{v}")
+        assert rec is not None and rec[0] == v
+    mgr.close()
+
+
 def test_scheduled_crash_zero_acks_nothing(tmp_path):
     mgr = mk(tmp_path, PersistScheme.PB_RF, sync=False)
     mgr.schedule_crash(0)
